@@ -1,0 +1,58 @@
+"""Shared benchmark configuration: calibrated latency regimes + helpers.
+
+Regimes (see EXPERIMENTS.md §Paper-claims for the calibration story):
+
+* ``QOS``     — Table-1 workloads: edge actuals well under the p99
+  estimates (that slack powers work stealing), long-tailed FaaS.
+* ``GEMS_SLEEP`` — §8.7 semantics: execution replaced by sleep(expected),
+  elastic warm cloud; the faithful GEMS/DEMS comparison.
+* ``GEMS_STRESS`` — constrained cloud pool + bursty edge, the regime where
+  queue-wait drops dominate and GEMS's rescheduling shows the largest QoE
+  deltas.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.sim.network import CloudLatencyModel, EdgeLatencyModel
+
+QOS = dict(
+    edge_model=EdgeLatencyModel(),           # mean 0.62×p99
+    cloud_model=CloudLatencyModel(),         # lognormal, p95 ≈ t̂
+    cloud_concurrency=16,
+)
+
+GEMS_SLEEP = dict(
+    edge_model=EdgeLatencyModel(mean_frac=1.0, sd_frac=0.01, lo_frac=0.97,
+                                hi_frac=1.02),
+    cloud_model=CloudLatencyModel(median_frac=0.88, sigma=0.03,
+                                  cold_start_p=0.0),
+    cloud_concurrency=32,
+)
+
+GEMS_STRESS = dict(
+    edge_model=EdgeLatencyModel(mean_frac=1.0, sd_frac=0.02, lo_frac=0.95,
+                                hi_frac=1.1, spike_p=0.04, spike_mult=1.6),
+    cloud_model=CloudLatencyModel(median_frac=0.92, sigma=0.06),
+    cloud_concurrency=6,
+)
+
+
+class Rows:
+    """Collects ``name,us_per_call,derived`` CSV rows."""
+
+    def __init__(self):
+        self.rows: list[tuple[str, float, str]] = []
+
+    def add(self, name: str, us_per_call: float, derived: str) -> None:
+        self.rows.append((name, us_per_call, derived))
+
+    def emit(self) -> None:
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.1f},{derived}")
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6

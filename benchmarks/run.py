@@ -1,0 +1,57 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+``python -m benchmarks.run``          — full runs (≈ paper durations)
+``python -m benchmarks.run --quick``  — reduced sweep for CI
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import Rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module suffixes to run")
+    args = ap.parse_args()
+
+    from benchmarks import (fig8_baselines, fig10_incremental,
+                            fig11_variability, fig13_scaling, fig14_gems,
+                            table1_profiles, roofline_report)
+    modules = {
+        "table1": table1_profiles,
+        "fig8": fig8_baselines,
+        "fig10": fig10_incremental,
+        "fig11": fig11_variability,
+        "fig13": fig13_scaling,
+        "fig14": fig14_gems,
+        "roofline": roofline_report,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = {k: v for k, v in modules.items() if k in keep}
+
+    rows = Rows()
+    t0 = time.time()
+    for name, mod in modules.items():
+        t = time.time()
+        try:
+            mod.main(quick=args.quick, rows=rows)
+            rows.add(f"{name}/elapsed_s", (time.time() - t) * 1e6,
+                     f"{time.time() - t:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            rows.add(f"{name}/ERROR", 0.0, f"{type(e).__name__}: {e}")
+            print(f"[benchmark {name} failed: {e}]", file=sys.stderr)
+    rows.add("total/elapsed_s", (time.time() - t0) * 1e6,
+             f"{time.time() - t0:.1f}s")
+    rows.emit()
+
+
+if __name__ == "__main__":
+    main()

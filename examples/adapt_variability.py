@@ -1,0 +1,29 @@
+"""DEMS-A adaptation demo (§5.4 / Fig. 12): watch the cloud-latency
+estimate track a trapezium latency wave, skip unviable tasks, and recover
+after the cooling period.
+
+    PYTHONPATH=src python examples/adapt_variability.py
+"""
+from repro.core.schedulers import make_policy
+from repro.sim.engine import Simulator
+from repro.sim.network import CloudLatencyModel, trapezium
+from repro.sim.workloads import standard
+
+arrivals = standard("4D-P", seed=1)
+cm = CloudLatencyModel(latency_at=trapezium(high=400.0))
+
+for name in ("DEMS", "DEMS-A"):
+    sim = Simulator(make_policy(name), arrivals, 300_000.0, seed=5,
+                    cloud_model=cm)
+    r = sim.run()
+    print(r.summary())
+    if name == "DEMS-A":
+        est = sim.adaptive["DEV"]
+        print(f"  DEV cloud estimate ended at {est.current:.0f} ms "
+              f"(static {est.static:.0f} ms)")
+
+print("\nDEMS-A inflates each model's expected cloud latency from a "
+      "sliding window of observations, stops sending doomed tasks during "
+      "the 400 ms wave, and re-probes after the 10 s cooling period — "
+      "the paper reports +16–27% QoS utility under shaping, reproduced "
+      "in benchmarks/fig11_variability.py.")

@@ -1,0 +1,22 @@
+"""Quickstart: schedule a drone fleet's inference tasks with DEMS.
+
+Runs the paper's 3-drone Active workload (6 DNN profiles from Table 1)
+through four schedulers and prints the QoS comparison — ~5 s on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.schedulers import make_policy
+from repro.sim.engine import run_policy
+from repro.sim.workloads import standard
+
+arrivals = standard("3D-A", seed=1)      # 5400 tasks over 300 s
+print(f"{len(arrivals)} inference tasks from 3 drones × 6 DNN models\n")
+
+for policy in ("EDF", "CLD", "EDF-E+C", "DEMS"):
+    result = run_policy(make_policy(policy), arrivals, 300_000.0, seed=42)
+    print(result.summary())
+
+print("\nDEMS balances on-time completion against utility: it keeps the "
+      "captive edge saturated (work stealing pulls BP tasks back from the "
+      "cloud queue), migrates displaced tasks by Eqn-3 score, and only "
+      "pays for FaaS calls that actually help.")

@@ -1,0 +1,5 @@
+"""Selectable config ``--arch granite-3-2b`` (see registry for the citation)."""
+from repro.configs.base import reduced
+from repro.configs.registry import GRANITE_3_2B as CONFIG
+
+SMOKE = reduced(CONFIG)

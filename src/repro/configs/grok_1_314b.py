@@ -1,0 +1,5 @@
+"""Selectable config ``--arch grok-1-314b`` (see registry for the citation)."""
+from repro.configs.base import reduced
+from repro.configs.registry import GROK_1_314B as CONFIG
+
+SMOKE = reduced(CONFIG)

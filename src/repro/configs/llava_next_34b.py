@@ -1,0 +1,5 @@
+"""Selectable config ``--arch llava-next-34b`` (see registry for the citation)."""
+from repro.configs.base import reduced
+from repro.configs.registry import LLAVA_NEXT_34B as CONFIG
+
+SMOKE = reduced(CONFIG)

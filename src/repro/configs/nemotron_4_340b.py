@@ -1,0 +1,5 @@
+"""Selectable config ``--arch nemotron-4-340b`` (see registry for the citation)."""
+from repro.configs.base import reduced
+from repro.configs.registry import NEMOTRON_4_340B as CONFIG
+
+SMOKE = reduced(CONFIG)

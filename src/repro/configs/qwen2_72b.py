@@ -1,0 +1,5 @@
+"""Selectable config ``--arch qwen2-72b`` (see registry for the citation)."""
+from repro.configs.base import reduced
+from repro.configs.registry import QWEN2_72B as CONFIG
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,5 @@
+"""Selectable config ``--arch qwen3-moe-30b`` (see registry for the citation)."""
+from repro.configs.base import reduced
+from repro.configs.registry import QWEN3_MOE_30B as CONFIG
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,5 @@
+"""Selectable config ``--arch starcoder2-3b`` (see registry for the citation)."""
+from repro.configs.base import reduced
+from repro.configs.registry import STARCODER2_3B as CONFIG
+
+SMOKE = reduced(CONFIG)

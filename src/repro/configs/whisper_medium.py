@@ -1,0 +1,5 @@
+"""Selectable config ``--arch whisper-medium`` (see registry for the citation)."""
+from repro.configs.base import reduced
+from repro.configs.registry import WHISPER_MEDIUM as CONFIG
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,5 @@
+"""Selectable config ``--arch xlstm-1-3b`` (see registry for the citation)."""
+from repro.configs.base import reduced
+from repro.configs.registry import XLSTM_1_3B as CONFIG
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,5 @@
+"""Selectable config ``--arch zamba2-7b`` (see registry for the citation)."""
+from repro.configs.base import reduced
+from repro.configs.registry import ZAMBA2_7B as CONFIG
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,316 @@
+"""The paper's scheduling decisions as vectorized JAX kernels.
+
+The Python policies in :mod:`repro.core.schedulers` make O(queue-length)
+decisions per task.  Here each decision is a fixed-shape masked ``jnp``
+computation over array-encoded queues, so an entire *fleet* of edges can be
+stepped with ``vmap`` and sharded with ``pjit`` (see
+:mod:`repro.sim.fleet_jax`).  This is the TPU-native rethink of the paper's
+control plane: the per-VIP scheduler becomes one SPMD program over the
+city-scale deployment the paper targets in §8.6.
+
+Queues are structure-of-arrays with a validity mask:
+
+* edge queue:  ``valid, key, seq, t_edge, deadline, model``  — ``key`` is
+  the policy priority (EDF: absolute deadline), ``seq`` breaks ties by
+  insertion order (stable, like the list-based oracle), ``deadline`` is the
+  *scheduling* deadline.
+* cloud queue: ``valid, trigger, t_edge, deadline, steal_only, rank``.
+
+Every function is pure, shape-stable and differentiable-free; all are
+property-tested against the discrete-event oracle in
+``tests/test_jax_sched.py``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+POS = 1e30
+
+
+class EdgeQueue(NamedTuple):
+    """Array-encoded edge priority queue (capacity = arrays' length)."""
+
+    valid: jax.Array     # bool[Q]
+    key: jax.Array       # f32[Q]  policy priority (EDF: t'_j + δ_i)
+    seq: jax.Array       # i32[Q]  insertion counter (stable tie-break)
+    t_edge: jax.Array    # f32[Q]  expected edge latency t_i
+    deadline: jax.Array  # f32[Q]  scheduling deadline (abs)
+    model: jax.Array     # i32[Q]
+
+
+class CloudQueue(NamedTuple):
+    """Array-encoded trigger-time cloud queue (§5.3)."""
+
+    valid: jax.Array       # bool[Qc]
+    trigger: jax.Array     # f32[Qc]
+    t_edge: jax.Array      # f32[Qc] expected *edge* latency (for stealing)
+    deadline: jax.Array    # f32[Qc] absolute deadline
+    steal_only: jax.Array  # bool[Qc] negative-cloud-utility parkees
+    rank: jax.Array        # f32[Qc] (γ^E−γ^C)/t_i steal rank
+
+
+def empty_edge_queue(capacity: int) -> EdgeQueue:
+    z = jnp.zeros(capacity)
+    return EdgeQueue(valid=jnp.zeros(capacity, bool), key=z, seq=jnp.zeros(
+        capacity, jnp.int32), t_edge=z, deadline=z, model=jnp.zeros(
+        capacity, jnp.int32))
+
+
+def empty_cloud_queue(capacity: int) -> CloudQueue:
+    z = jnp.zeros(capacity)
+    return CloudQueue(valid=jnp.zeros(capacity, bool), trigger=z, t_edge=z,
+                      deadline=z, steal_only=jnp.zeros(capacity, bool),
+                      rank=z)
+
+
+# ---------------------------------------------------------------------------
+# ordering helpers
+# ---------------------------------------------------------------------------
+
+def _ahead_matrix(q: EdgeQueue) -> jax.Array:
+    """``ahead[i, j]`` — valid task j sits ahead of task i in the queue.
+
+    Priority order is (key, seq) lexicographic, matching the stable
+    insertion of the list-based oracle.
+    """
+    ki, kj = q.key[:, None], q.key[None, :]
+    si, sj = q.seq[:, None], q.seq[None, :]
+    earlier = (kj < ki) | ((kj == ki) & (sj < si))
+    return earlier & q.valid[None, :]
+
+
+def ahead_of_new(q: EdgeQueue, new_key: jax.Array) -> jax.Array:
+    """Mask of queued tasks ahead of a to-be-inserted task.
+
+    New tasks are inserted *after* equal keys (stable), so everything with
+    ``key <= new_key`` is ahead.
+    """
+    return q.valid & (q.key <= new_key)
+
+
+def projected_completions(q: EdgeQueue, now: jax.Array,
+                          busy_rem: jax.Array) -> jax.Array:
+    """Projected completion time of every queued task (§5.2)."""
+    ahead = _ahead_matrix(q)
+    wait = (ahead * q.t_edge[None, :]).sum(-1)
+    return now + busy_rem + wait + q.t_edge
+
+
+# ---------------------------------------------------------------------------
+# §5.1 — EDF insertion feasibility
+# ---------------------------------------------------------------------------
+
+def insert_feasible(q: EdgeQueue, now, busy_rem, new_key, new_t_edge,
+                    new_deadline) -> jax.Array:
+    """Sum of execution times ahead + own ≤ deadline (paper §5.1)."""
+    wait = jnp.where(ahead_of_new(q, new_key), q.t_edge, 0.0).sum()
+    return now + busy_rem + wait + new_t_edge <= new_deadline
+
+
+# ---------------------------------------------------------------------------
+# §5.2 — migration: victims and Eqn-3 scoring
+# ---------------------------------------------------------------------------
+
+def victim_mask(q: EdgeQueue, now, busy_rem, new_key,
+                new_t_edge) -> jax.Array:
+    """Tasks *newly* pushed past their deadline by inserting the new task."""
+    proj = projected_completions(q, now, busy_rem)
+    behind = q.valid & (q.key > new_key)
+    return behind & (proj <= q.deadline) & (q.deadline < proj + new_t_edge)
+
+
+def eqn3_scores(model_ids, now, deadlines, gamma_e, gamma_c,
+                t_cloud_cur) -> jax.Array:
+    """Vectorized Eqn 3: S = γ^E−γ^C if cloud-feasible ∧ γ^C>0 else γ^E."""
+    ge = gamma_e[model_ids]
+    gc = gamma_c[model_ids]
+    feasible = now + t_cloud_cur[model_ids] <= deadlines
+    return jnp.where(feasible & (gc > 0), ge - gc, ge)
+
+
+def migration_decision(q: EdgeQueue, victims: jax.Array, now,
+                       new_model, new_deadline, gamma_e, gamma_c,
+                       t_cloud_cur) -> jax.Array:
+    """True → insert new task, migrate victims; False → redirect new (§5.2)."""
+    s_victims = jnp.where(
+        victims, eqn3_scores(q.model, now, q.deadline, gamma_e, gamma_c,
+                             t_cloud_cur), 0.0).sum()
+    s_new = eqn3_scores(jnp.asarray(new_model)[None], now,
+                        jnp.asarray(new_deadline)[None],
+                        gamma_e, gamma_c, t_cloud_cur)[0]
+    return s_victims < s_new
+
+
+# ---------------------------------------------------------------------------
+# §5.3 — work stealing
+# ---------------------------------------------------------------------------
+
+def max_front_delay(q: EdgeQueue, now, busy_rem) -> jax.Array:
+    """Largest execution time insertable at the queue head without pushing
+    any queued task past its deadline; +inf when the queue is empty."""
+    proj = projected_completions(q, now, busy_rem)
+    margins = jnp.where(q.valid, q.deadline - proj, POS)
+    return margins.min()
+
+
+def head_slack(q: EdgeQueue, now) -> jax.Array:
+    """σ of the head task: (t'_j+δ_i) − (now + t_i); +inf if queue empty.
+
+    Note the paper computes slack for the *head*, i.e. the task that would
+    execute now, so busy_rem is zero by construction.
+    """
+    ahead = _ahead_matrix(q)
+    is_head = q.valid & (ahead.sum(-1) == 0)
+    slack = jnp.where(is_head, q.deadline - (now + q.t_edge), POS)
+    return slack.min()
+
+
+def steal_select(cq: CloudQueue, q: EdgeQueue, now, busy_rem,
+                 min_edge_t) -> jax.Array:
+    """Index of the cloud-queue task to steal, or −1 (§5.3).
+
+    Eligibility: fits in the front-insertion margin, still edge-feasible.
+    Preference: steal-only (negative cloud utility) tasks first, then by
+    descending rank (γ^E−γ^C)/t_i.
+    """
+    any_queued = q.valid.any()
+    slack = head_slack(q, now)
+    delay_cap = jnp.where(any_queued, max_front_delay(q, now, busy_rem), POS)
+    gate = jnp.where(any_queued, slack > min_edge_t, True)
+    eligible = (cq.valid
+                & (cq.t_edge <= delay_cap)
+                & (now + cq.t_edge <= cq.deadline)
+                & gate)
+    # lexicographic (steal_only desc, rank desc) via a scalar score
+    score = jnp.where(cq.steal_only, 1e12, 0.0) + cq.rank
+    score = jnp.where(eligible, score, NEG)
+    idx = jnp.argmax(score)
+    return jnp.where(eligible.any(), idx, -1)
+
+
+# ---------------------------------------------------------------------------
+# §6 — GEMS window rescheduler (Alg. 1 lines 9–14)
+# ---------------------------------------------------------------------------
+
+def gems_reschedule_mask(q: EdgeQueue, now, lag_model, t_cloud_cur,
+                         gamma_c) -> jax.Array:
+    """Pending edge tasks of the lagging model to push to the cloud."""
+    positive = gamma_c[lag_model] > 0
+    feasible = now + t_cloud_cur[lag_model] <= q.deadline
+    return q.valid & (q.model == lag_model) & feasible & positive
+
+
+def window_update(lam, lam_hat, success) -> tuple[jax.Array, jax.Array,
+                                                  jax.Array]:
+    """Alg. 1 lines 3–7: increment counts, return the incremental rate."""
+    lam = lam + 1
+    lam_hat = lam_hat + success.astype(lam_hat.dtype)
+    return lam, lam_hat, lam_hat / lam
+
+
+# ---------------------------------------------------------------------------
+# §5.4 — DEMS-A adaptation
+# ---------------------------------------------------------------------------
+
+class AdaptState(NamedTuple):
+    buf: jax.Array            # f32[M, w] circular buffers
+    count: jax.Array          # i32[M] observations so far (≤ w)
+    idx: jax.Array            # i32[M] next write slot
+    current: jax.Array        # f32[M] current estimates t̂
+    cooling_start: jax.Array  # f32[M]; −1 = not cooling
+
+
+def adapt_init(static: jax.Array, w: int) -> AdaptState:
+    m = static.shape[0]
+    return AdaptState(buf=jnp.zeros((m, w)), count=jnp.zeros(m, jnp.int32),
+                      idx=jnp.zeros(m, jnp.int32), current=static,
+                      cooling_start=-jnp.ones(m))
+
+
+def adapt_observe(st: AdaptState, model, obs, eps: float) -> AdaptState:
+    """Mirror of ``AdaptiveEstimator.observe``: append until the buffer
+    fills (write position = count), then overwrite circularly."""
+    w = st.buf.shape[1]
+    filling = st.count[model] < w
+    write = jnp.where(filling, st.count[model], st.idx[model])
+    buf = st.buf.at[model, write].set(obs)
+    count = st.count.at[model].set(jnp.minimum(st.count[model] + 1, w))
+    idx = st.idx.at[model].set(
+        jnp.where(filling, st.idx[model], (st.idx[model] + 1) % w))
+    n = count[model]
+    avg = buf[model].sum() / n
+    cur = st.current.at[model].set(
+        jnp.where(avg - st.current[model] > eps, avg, st.current[model]))
+    return AdaptState(buf, count, idx, cur, st.cooling_start)
+
+
+def adapt_on_sent(st: AdaptState, model) -> AdaptState:
+    return st._replace(cooling_start=st.cooling_start.at[model].set(-1.0))
+
+
+def adapt_on_skip(st: AdaptState, model, now, static, t_cp) -> AdaptState:
+    inflated = st.current[model] > static[model]
+    cs = st.cooling_start[model]
+    expired = (cs >= 0) & (now - cs >= t_cp)
+    new_cur = jnp.where(inflated & expired, static[model], st.current[model])
+    new_cs = jnp.where(~inflated, cs,
+                       jnp.where(expired, -1.0, jnp.where(cs < 0, now, cs)))
+    return AdaptState(st.buf, st.count, st.idx,
+                      st.current.at[model].set(new_cur),
+                      st.cooling_start.at[model].set(new_cs))
+
+
+# ---------------------------------------------------------------------------
+# queue mutation helpers (used by the fleet simulator)
+# ---------------------------------------------------------------------------
+
+def edge_push(q: EdgeQueue, key, seq, t_edge, deadline, model,
+              enable=True) -> tuple[EdgeQueue, jax.Array]:
+    """Insert into the first free slot; returns (queue, ok)."""
+    free = ~q.valid
+    slot = jnp.argmax(free)
+    ok = free.any() & enable
+    def set_at(arr, v):
+        return jnp.where(ok, arr.at[slot].set(v), arr)
+    return EdgeQueue(
+        valid=set_at(q.valid, True), key=set_at(q.key, key),
+        seq=set_at(q.seq, seq), t_edge=set_at(q.t_edge, t_edge),
+        deadline=set_at(q.deadline, deadline), model=set_at(q.model, model),
+    ), ok
+
+
+def edge_pop_head(q: EdgeQueue) -> tuple[EdgeQueue, jax.Array, jax.Array]:
+    """Remove and return the head (index, found) by (key, seq) order."""
+    ahead = _ahead_matrix(q)
+    is_head = q.valid & (ahead.sum(-1) == 0)
+    idx = jnp.argmax(is_head)
+    found = is_head.any()
+    return q._replace(valid=jnp.where(found, q.valid.at[idx].set(False),
+                                      q.valid)), idx, found
+
+
+def edge_remove(q: EdgeQueue, mask: jax.Array) -> EdgeQueue:
+    return q._replace(valid=q.valid & ~mask)
+
+
+def cloud_push(cq: CloudQueue, trigger, t_edge, deadline, steal_only,
+               rank, enable=True) -> tuple[CloudQueue, jax.Array]:
+    free = ~cq.valid
+    slot = jnp.argmax(free)
+    ok = free.any() & enable
+    def set_at(arr, v):
+        return jnp.where(ok, arr.at[slot].set(v), arr)
+    return CloudQueue(
+        valid=set_at(cq.valid, True), trigger=set_at(cq.trigger, trigger),
+        t_edge=set_at(cq.t_edge, t_edge),
+        deadline=set_at(cq.deadline, deadline),
+        steal_only=set_at(cq.steal_only, steal_only),
+        rank=set_at(cq.rank, rank)), ok
+
+
+def cloud_remove(cq: CloudQueue, idx) -> CloudQueue:
+    return cq._replace(valid=cq.valid.at[idx].set(False))

@@ -1,0 +1,94 @@
+"""Flash-decode: single-token attention over a long KV cache (Pallas).
+
+Serving's decode step attends one query token against up to 500k cached
+keys — memory-bandwidth-bound, so the kernel streams the cache through VMEM
+in blocks with an online-softmax accumulator, never materializing the
+(H, S) logits row in HBM.  Grid (B, H, nS) with the cache-block dimension
+innermost (sequential → scratch carries m/l/acc).  Valid-length masking
+(cache slots beyond the write position) comes from a per-batch ``lengths``
+vector.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 256
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, block_s: int):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0]
+    k_start = ik * block_s
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (hd,)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bs, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = (k @ q) * scale                           # (bs,)
+        idx = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_s,), 0)
+        s = jnp.where(idx < length, s, NEG_INF)
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, s.max())
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(idx < length, jnp.exp(s - m_new), 0.0)
+        l_ref[0] = l_ref[0] * alpha + p.sum()
+        acc_ref[...] = acc_ref[...] * alpha + p @ v
+        m_ref[0] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[0], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *,
+                     block_s: int = DEFAULT_BLOCK_S,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B,H,hd); k/v: (B,KV,W,hd); lengths: (B,) → (B,H,hd)."""
+    b, h, hd = q.shape
+    kv, w = k.shape[1], k.shape[2]
+    groups = h // kv
+    block_s = min(block_s, w)
+    assert w % block_s == 0
+    grid = (b, h, w // block_s)
+
+    kernel = functools.partial(_decode_kernel, scale=hd ** -0.5,
+                               block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb, hh, ik: (bb,)),
+            pl.BlockSpec((1, 1, hd), lambda bb, hh, ik: (bb, hh, 0)),
+            pl.BlockSpec((1, 1, block_s, hd),
+                         lambda bb, hh, ik: (bb, hh // groups, ik, 0)),
+            pl.BlockSpec((1, 1, block_s, hd),
+                         lambda bb, hh, ik: (bb, hh // groups, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda bb, hh, ik: (bb, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((hd,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, q, k, v)

@@ -1,0 +1,126 @@
+"""Flash attention (causal / sliding-window, GQA) as a Pallas TPU kernel.
+
+Online-softmax tiling: grid (B, H, nQ, nK) with the K dimension innermost —
+TPU grids execute sequentially, so VMEM scratch (row-max m, row-sum l,
+accumulator acc) persists across K blocks of one Q block.  Block shapes are
+MXU-aligned (q/k blocks of 128 × head_dim); K/V blocks for a query head are
+fetched from its GQA group's KV head via the BlockSpec index map, so no
+repeated-KV materialization ever reaches HBM.
+
+Causal + sliding-window masking happens at two levels: whole K blocks
+outside the band are skipped (``pl.when`` — no MXU work), and the fringe
+blocks apply an elementwise mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # block-level band check: any (qpos, kpos) with kpos ≤ qpos and
+    # kpos > qpos − window intersecting this block pair?
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window:
+        needed = needed & (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B,H,S,hd); k/v: (B,KV,S,hd) → (B,H,S,hd)."""
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    assert h % kv == 0, "GQA requires n_heads % n_kv_heads == 0"
+    groups = h // kv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    grid = (b, h, s // block_q, s // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=hd ** -0.5, causal=causal, window=window,
+        block_q=block_q, block_k=block_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda bb, hh, iq, ik: (bb, hh, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bb, hh, iq, ik: (bb, hh // groups, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bb, hh, iq, ik: (bb, hh // groups, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda bb, hh, iq, ik: (bb, hh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max m
+            pltpu.VMEM((block_q,), jnp.float32),      # running sum l
+            pltpu.VMEM((block_q, hd), jnp.float32),   # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,69 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode — the kernel body
+executes in Python for correctness validation; on TPU they compile to
+Mosaic.  ``interpret`` is resolved once from the default backend and can be
+overridden per call.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.ssm_scan import ssm_scan as _ssm
+from repro.kernels.moe_gemm import moe_gemm as _moe
+from repro.kernels.rmsnorm import rmsnorm as _rms
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """q: (B,H,S,hd); k/v: (B,KV,S,hd) → (B,H,S,hd)."""
+    itp = _interpret_default() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                  block_k=block_k, interpret=itp)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q, k, v, lengths, *, block_s: int = 256,
+                     interpret: Optional[bool] = None):
+    """q: (B,H,hd); k/v: (B,KV,W,hd); lengths: (B,) → (B,H,hd)."""
+    itp = _interpret_default() if interpret is None else interpret
+    return _decode(q, k, v, lengths.astype(jnp.int32), block_s=block_s,
+                   interpret=itp)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(x, dt, a, bmat, cmat, *, chunk: int = 128,
+             interpret: Optional[bool] = None):
+    """Selective scan: see kernels.ssm_scan."""
+    itp = _interpret_default() if interpret is None else interpret
+    return _ssm(x, dt, a, bmat, cmat, chunk=chunk, interpret=itp)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def moe_gemm(x_sorted, w, offsets, *, block_t: int = 128,
+             interpret: Optional[bool] = None):
+    """Ragged grouped GEMM: see kernels.moe_gemm."""
+    itp = _interpret_default() if interpret is None else interpret
+    return _moe(x_sorted, w, offsets.astype(jnp.int32), block_t=block_t,
+                interpret=itp)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_r", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-5, block_r: int = 128,
+            interpret: Optional[bool] = None):
+    """Fused RMSNorm: see kernels.rmsnorm."""
+    itp = _interpret_default() if interpret is None else interpret
+    return _rms(x, scale, eps=eps, block_r=block_r, interpret=itp)

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+These are the semantics each kernel must reproduce bit-for-bit (up to
+accumulation-order tolerance).  Tests sweep shapes/dtypes and
+``assert_allclose`` kernel-vs-oracle in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B,H,S,hd); k/v: (B,KV,S,hd) → (B,H,S,hd).  GQA via repeat."""
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    groups = h // kv
+    k = jnp.repeat(k, groups, axis=1)
+    v = jnp.repeat(v, groups, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    logits *= hd ** -0.5
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def ref_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array) -> jax.Array:
+    """q: (B,H,hd); k/v: (B,KV,W,hd); lengths: (B,) valid prefix → (B,H,hd)."""
+    b, h, hd = q.shape
+    kv = k.shape[1]
+    groups = h // kv
+    k = jnp.repeat(k, groups, axis=1)
+    v = jnp.repeat(v, groups, axis=1)
+    logits = jnp.einsum("bhd,bhkd->bhk", q, k).astype(jnp.float32)
+    logits *= hd ** -0.5
+    valid = jnp.arange(k.shape[2])[None, :] < lengths[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhk,bhkd->bhd", probs, v)
+
+
+def ref_selective_scan(x: jax.Array, dt: jax.Array, a: jax.Array,
+                       bmat: jax.Array, cmat: jax.Array):
+    """Sequential SSD recurrence (the Mamba2 core).
+
+    x: (G,S,P); dt: (G,S); a: (G,); bmat/cmat: (G,S,N).
+      state_t = exp(a·dt_t)·state_{t−1} + dt_t·(x_t ⊗ B_t)
+      y_t     = state_t · C_t
+    Returns (y (G,S,P), final_state (G,P,N)).  G = batch×heads.
+    """
+    def per_g(xg, dtg, ag, bg, cg):
+        def step(state, inp):
+            xt, dtt, bt, ct = inp
+            dec = jnp.exp(ag * dtt)
+            state = state * dec + dtt * jnp.outer(xt, bt)
+            return state, state @ ct
+        init = jnp.zeros((x.shape[-1], bg.shape[-1]), jnp.float32)
+        final, ys = jax.lax.scan(
+            step, init, (xg.astype(jnp.float32), dtg.astype(jnp.float32),
+                         bg.astype(jnp.float32), cg.astype(jnp.float32)))
+        return ys, final
+    y, fin = jax.vmap(per_g)(x, dt, a, bmat, cmat)
+    return y.astype(x.dtype), fin.astype(x.dtype)
+
+
+def ref_moe_gemm(x_sorted: jax.Array, w: jax.Array,
+                 offsets: jax.Array) -> jax.Array:
+    """Ragged grouped GEMM oracle.
+
+    x_sorted: (T,D) tokens sorted by expert; w: (E,D,F);
+    offsets: (E+1,) — expert e owns rows [offsets[e], offsets[e+1]).
+    """
+    t = x_sorted.shape[0]
+    e = w.shape[0]
+    rows = jnp.arange(t)
+    expert_of = jnp.sum(rows[:, None] >= offsets[None, 1:], axis=1)
+    expert_of = jnp.clip(expert_of, 0, e - 1)
+    return jnp.einsum("td,tdf->tf", x_sorted, w[expert_of])
+
+
+def ref_rmsnorm(x: jax.Array, scale: jax.Array,
+                eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                   keepdims=True)
+    return ((x.astype(jnp.float32) * jax.lax.rsqrt(var + eps))
+            * scale.astype(jnp.float32)).astype(x.dtype)

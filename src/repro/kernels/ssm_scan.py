@@ -1,0 +1,86 @@
+"""Selective state-space scan (Mamba2/SSD core) as a Pallas TPU kernel.
+
+The recurrence  state_t = exp(a·dt_t)·state_{t−1} + dt_t·(x_t ⊗ B_t),
+y_t = state_t·C_t  is sharded over (batch × heads) on the first grid axis
+and *chunked* over time on the second (sequential) axis; the (P, N) state
+matrix lives in VMEM scratch and persists across chunks — the TPU analogue
+of Mamba's SRAM-resident selective scan.  Within a chunk the step loop is a
+``fori_loop`` over rank-1 updates, keeping the full (P, N) state in
+registers/VMEM rather than round-tripping HBM per token.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssm_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, fin_ref,
+                state_ref, *, chunk: int):
+    j = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    a = a_ref[0]
+
+    def step(t, state):
+        xt = x_ref[0, t].astype(jnp.float32)          # (P,)
+        bt = b_ref[0, t].astype(jnp.float32)          # (N,)
+        ct = c_ref[0, t].astype(jnp.float32)          # (N,)
+        dtt = dt_ref[0, t].astype(jnp.float32)
+        dec = jnp.exp(a * dtt)
+        state = state * dec + dtt * (xt[:, None] * bt[None, :])
+        y_ref[0, t, :] = (state @ ct).astype(y_ref.dtype)
+        return state
+
+    state = jax.lax.fori_loop(0, chunk, step, state_ref[...])
+    state_ref[...] = state
+
+    @pl.when(j == nc - 1)
+    def _finalize():
+        fin_ref[0] = state.astype(fin_ref.dtype)
+
+
+def ssm_scan(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+             cmat: jax.Array, *, chunk: int = DEFAULT_CHUNK,
+             interpret: bool = False):
+    """x: (G,S,P); dt: (G,S); a: (G,); bmat/cmat: (G,S,N).
+
+    Returns (y (G,S,P), final_state (G,P,N)).  G = batch × heads.
+    """
+    g, s, p = x.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    grid = (g, s // chunk)
+
+    kernel = functools.partial(_ssm_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, p, n), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, s, p), x.dtype),
+            jax.ShapeDtypeStruct((g, p, n), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, bmat, cmat)

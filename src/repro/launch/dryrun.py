@@ -1,0 +1,455 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+Proves the distribution config is coherent without hardware: 512 host
+placeholder devices form the production meshes (16×16 single-pod,
+2×16×16 multi-pod); every step function must lower, SPMD-partition and
+compile, and its ``memory_analysis()`` must fit a v5e's 16 GB HBM.
+
+Per combo this driver records:
+  * compile wall time, per-device memory (args/outputs/temps),
+  * the collective schedule (kinds, shapes, bytes — §Roofline input),
+  * cost_analysis + delta-method FLOPs/bytes extrapolation
+    (two small *unrolled* compiles; see roofline/analysis.py),
+  * the three roofline terms and the dominant bottleneck.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+      --shape train_4k --mesh both --out experiments/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.registry import ARCHS
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import named_sharding, sharding_rules
+from repro.models.model import Model
+from repro.roofline import analysis as RA
+from repro.train.optimizer import AdamW
+
+#                 name          seq      global_batch  kind
+SHAPES = {
+    "train_4k":    (4_096,    256, "train"),
+    "prefill_32k": (32_768,    32, "prefill"),
+    "decode_32k":  (32_768,   128, "decode"),
+    "long_500k":   (524_288,    1, "decode"),
+}
+
+SKIPS: dict[tuple[str, str], str] = {
+    (a, "long_500k"): "pure full-attention (no SWA claimed by the source "
+                      "model card) — quadratic attention cannot serve 500k"
+    for a in ("grok-1-314b", "qwen3-moe-30b-a3b", "llava-next-34b")
+}
+SKIPS[("whisper-medium", "long_500k")] = (
+    "enc-dec audio model; 500k-token decode is out of family scope")
+
+BIG_OPT_THRESHOLD = 50e9   # params above this use bf16 AdamW moments
+MICROBATCH_THRESHOLD = 20e9  # params above this gradient-accumulate
+
+
+def n_micro_for(cfg: ArchConfig, shape_name: str) -> int:
+    """Gradient-accumulation factor for the train shape: ≥100B models
+    split the 1M-token global batch into 8 microbatches, ≥20B into 4 —
+    keeping activation temps inside a v5e's HBM."""
+    if SHAPES[shape_name][2] != "train":
+        return 1
+    n = cfg.param_count()
+    base = 16 if n > 200e9 else 8 if n > 30e9 else \
+        4 if n > MICROBATCH_THRESHOLD else 2 if n > 6e9 else 1
+    if cfg.remat_policy == "dots" and n > MICROBATCH_THRESHOLD:
+        base *= 2          # dots-remat keeps more residents per microbatch
+    return min(base, 16)
+
+
+def delta_unit(cfg: ArchConfig) -> int:
+    """Smallest repeatable layer pattern for the delta method."""
+    if cfg.family == "ssm":
+        return cfg.slstm_every
+    if cfg.family == "hybrid":
+        return cfg.attn_every
+    return 1
+
+
+def with_layers(cfg: ArchConfig, units: int, unroll: bool) -> ArchConfig:
+    u = delta_unit(cfg)
+    repl = dict(n_layers=u * units, unroll_layers=unroll)
+    if cfg.family == "encdec":
+        repl["enc_layers"] = units
+    return dataclasses.replace(cfg, **repl)
+
+
+def full_depth_units(cfg: ArchConfig) -> float:
+    """Full depth measured in delta units (fractional for zamba's tail)."""
+    return cfg.n_layers / delta_unit(cfg)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no device allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    seq, batch, kind = SHAPES[shape_name]
+    sd = jax.ShapeDtypeStruct
+    if kind in ("train", "prefill"):
+        b = {"tokens": sd((batch, seq), jnp.int32)}
+        if kind == "train":
+            b["labels"] = sd((batch, seq), jnp.int32)
+        if cfg.family == "encdec":
+            b["frames"] = sd((batch, cfg.n_frames, cfg.d_model),
+                             jnp.dtype(cfg.dtype))
+        if cfg.family == "vlm":
+            b["patches"] = sd((batch, cfg.n_image_tokens, cfg.d_model),
+                              jnp.dtype(cfg.dtype))
+        return b
+    return {"token": sd((batch, 1), jnp.int32),
+            "pos": sd((), jnp.int32)}
+
+
+def batch_logical(cfg: ArchConfig, key: str) -> tuple:
+    return {
+        "tokens": ("batch", "seq"),
+        "labels": ("batch", "seq"),
+        "token": ("batch", None),
+        "pos": (),
+        "frames": ("batch", "frames", "embed"),
+        "patches": ("batch", None, "embed"),
+    }[key]
+
+
+def cache_logical(key: str, ndim: int) -> tuple:
+    if key in ("k", "v", "xk", "xv"):
+        if ndim == 5:
+            return (None, "batch", "kv_seq", "kv_heads", None)
+    if key in ("m_c", "m_n"):        # (G, per, B, H, ...)
+        return (None, None, "batch") + (None,) * (ndim - 3)
+    if key.startswith("s_"):         # (G, B, H, pd)
+        return (None, "batch") + (None,) * (ndim - 2)
+    if key == "state":               # (G, k, B, H, P, N)
+        return (None, None, "batch") + (None,) * (ndim - 3)
+    if key == "tail_state":          # (T, B, H, P, N)
+        return (None, "batch") + (None,) * (ndim - 2)
+    return (None,) * ndim
+
+
+def max_seq_for(cfg: ArchConfig, shape_name: str) -> int:
+    seq, _, _ = SHAPES[shape_name]
+    if cfg.family == "vlm":
+        return seq + cfg.n_image_tokens
+    return seq
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def build(cfg: ArchConfig, shape_name: str, mesh, n_micro: int = 0):
+    """Returns (step_fn, arg_specs, arg_shardings).
+
+    ``n_micro`` overrides the microbatch factor — the roofline's delta
+    compiles pass the *full-depth* config's factor, since their reduced
+    1–2-layer configs would otherwise resolve to 1 (and the extrapolation
+    would then double-scale)."""
+    seq, batch, kind = SHAPES[shape_name]
+    if cfg.family == "moe":
+        # group-wise dispatch: one group per data-parallel shard
+        n_data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+        cfg = dataclasses.replace(cfg, moe_groups=n_data)
+        n_model = mesh.shape.get("model", 1)
+        if cfg.expert_split == -1:   # resolve "auto" against the mesh
+            cfg = dataclasses.replace(
+                cfg, expert_split=max(1, n_model // cfg.n_experts))
+    model = Model(cfg)
+    rng = jax.random.PRNGKey(0)
+    param_shapes = jax.eval_shape(model.init, rng)
+    pspecs = model.param_specs()
+
+    def shard_of(shape_struct, logical):
+        return named_sharding(shape_struct.shape, logical, mesh)
+
+    params_sh = jax.tree.map(
+        lambda s, l: shard_of(s, l), param_shapes, pspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    bspecs = input_specs(cfg, shape_name)
+    batch_sh = {k: shard_of(v, batch_logical(cfg, k))
+                for k, v in bspecs.items()}
+
+    if kind == "train":
+        opt = AdamW(moment_dtype=("bfloat16" if cfg.param_count() >
+                                  BIG_OPT_THRESHOLD else "float32"))
+        opt_shapes = jax.eval_shape(opt.init, param_shapes)
+        opt_sh = jax.tree.map(
+            lambda s: named_sharding(s.shape, (None,) * s.ndim, mesh)
+            if s.ndim == 0 else None, opt_shapes,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        # moments shard like their parameters
+        opt_sh = type(opt_shapes)(
+            step=named_sharding((), (), mesh),
+            mu=jax.tree.map(lambda s, l: shard_of(s, l), opt_shapes.mu,
+                            pspecs,
+                            is_leaf=lambda x: isinstance(
+                                x, jax.ShapeDtypeStruct)),
+            nu=jax.tree.map(lambda s, l: shard_of(s, l), opt_shapes.nu,
+                            pspecs,
+                            is_leaf=lambda x: isinstance(
+                                x, jax.ShapeDtypeStruct)))
+
+        n_micro = n_micro or n_micro_for(cfg, shape_name)
+
+        def grads_of(params, b):
+            return jax.value_and_grad(model.loss)(params, b)
+
+        def step(params, opt_state, b):
+            if n_micro == 1:
+                loss, grads = grads_of(params, b)
+            else:
+                bm = jax.tree.map(
+                    lambda a: a.reshape(n_micro, a.shape[0] // n_micro,
+                                        *a.shape[1:]), b)
+                zeros = jax.tree.map(jnp.zeros_like, params)
+                if cfg.unroll_layers:
+                    # delta compiles measure ONE microbatch; the roofline
+                    # scales by n_micro (see roofline_combo)
+                    loss, grads = grads_of(
+                        params, jax.tree.map(lambda a: a[0], bm))
+                else:
+                    def micro(acc, mb):
+                        l, g = grads_of(params, mb)
+                        return jax.tree.map(jnp.add, acc, g), l
+                    grads, losses = jax.lax.scan(micro, zeros, bm)
+                    grads = jax.tree.map(lambda g: g / n_micro, grads)
+                    loss = losses.mean()
+            new_params, new_opt = opt.update(grads, opt_state, params)
+            return loss, new_params, new_opt
+
+        return step, (param_shapes, opt_shapes, bspecs), \
+            (params_sh, opt_sh, batch_sh)
+
+    if kind == "prefill":
+        ms = max_seq_for(cfg, shape_name)
+
+        def step(params, b):
+            return model.prefill(params, b, ms)
+
+        return step, (param_shapes, bspecs), (params_sh, batch_sh)
+
+    # decode
+    ms = max_seq_for(cfg, shape_name)
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(batch, ms))
+    cache_sh = {k: shard_of(v, cache_logical(k, v.ndim))
+                for k, v in cache_shapes.items()}
+
+    def step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    return step, (param_shapes, cache_shapes, bspecs["token"],
+                  bspecs["pos"]), \
+        (params_sh, cache_sh, batch_sh["token"], batch_sh["pos"])
+
+
+def compile_combo(cfg: ArchConfig, shape_name: str, mesh) -> dict:
+    """Lower + compile; return stats."""
+    t0 = time.time()
+    kind = SHAPES[shape_name][2]
+    # donation: train aliases params+opt into their updates; decode
+    # aliases the KV/state cache (otherwise XLA double-buffers it — a
+    # whole extra cache copy in temps, e.g. +10.8 GB for qwen2 decode)
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[kind]
+    with sharding_rules(mesh):
+        step, specs, shardings = build(cfg, shape_name, mesh)
+        jitted = jax.jit(step, in_shardings=shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_total = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = RA.collective_bytes(hlo, body_trip_count=cfg.n_layers)
+    return {
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_total, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "total_bytes": (mem.argument_size_in_bytes
+                            + mem.temp_size_in_bytes),
+        },
+        "cost_flops_body_once": cost.get("flops", 0.0),
+        "cost_bytes_body_once": cost.get("bytes accessed", 0.0),
+        "collective_bytes": coll,
+        "n_devices": mesh.devices.size,
+    }
+
+
+def roofline_combo(cfg: ArchConfig, shape_name: str, mesh,
+                   coll_full: float = 0.0) -> dict:
+    """Delta-method FLOPs/bytes + roofline terms.
+
+    ``coll_full`` — collective bytes parsed from the *full scanned*
+    compile (body × trip count).  Preferred over the delta extrapolation:
+    unrolled layer bodies slice sharded caches with static indices, which
+    GSPMD turns into per-layer gathers the production scan never issues.
+    """
+    seq, batch, _ = SHAPES[shape_name]
+    vals = {}
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[
+        SHAPES[shape_name][2]]
+    nm_full = n_micro_for(cfg, shape_name)
+    for units in (1, 2):
+        dcfg = with_layers(cfg, units, unroll=True)
+        with sharding_rules(mesh):
+            step, specs, shardings = build(dcfg, shape_name, mesh,
+                                           n_micro=nm_full)
+            compiled = jax.jit(step, in_shardings=shardings,
+                               donate_argnums=donate).lower(
+                *specs).compile()
+        cost = compiled.cost_analysis() or {}
+        coll = RA.collective_bytes(compiled.as_text(), body_trip_count=1)
+        vals[units] = (cost.get("flops", 0.0),
+                       cost.get("bytes accessed", 0.0), coll["total"])
+    lf = full_depth_units(cfg)
+    nm = n_micro_for(cfg, shape_name)
+    flops = RA.extrapolate(vals[1][0], vals[2][0], 1, 2, lf) * nm
+    hbm = RA.extrapolate(vals[1][1], vals[2][1], 1, 2, lf) * nm
+    coll_delta = RA.extrapolate(vals[1][2], vals[2][2], 1, 2, lf) * nm
+    coll_b = coll_full if coll_full > 0 else coll_delta
+    terms = RA.RooflineTerms.build(flops, hbm, coll_b)
+    mf_global = RA.model_flops(cfg, shape_name, seq, batch)
+    mf_per_dev = mf_global / mesh.devices.size
+    return {
+        "delta_units": {str(k): v for k, v in vals.items()},
+        "collective_bytes_delta": coll_delta,
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm,
+        "collective_bytes_per_device": coll_b,
+        "compute_s": terms.compute_s,
+        "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s,
+        "bottleneck": terms.bottleneck,
+        "model_flops_per_device": mf_per_dev,
+        "model_vs_hlo_flops": (mf_per_dev / flops) if flops else None,
+    }
+
+
+def variant_for(cfg: ArchConfig, shape: str,
+                opt: bool = False) -> ArchConfig:
+    """long_500k on attention archs runs the sliding-window serving
+    variant (sub-quadratic; window-sized ring cache) — DESIGN.md §4.
+    ``opt`` enables the beyond-paper §Perf optimizations."""
+    if shape == "long_500k" and cfg.long_context_window:
+        cfg = dataclasses.replace(cfg,
+                                  sliding_window=cfg.long_context_window)
+    if opt and SHAPES[shape][2] == "decode":
+        cfg = dataclasses.replace(cfg, opt_decode=True)
+    if opt and cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, expert_split=-1)  # auto vs mesh
+    if opt and SHAPES[shape][2] == "train":
+        cfg = dataclasses.replace(cfg, remat_policy="dots")
+    return cfg
+
+
+def run(arch: str, shape: str, meshes: list[str], out_dir: str,
+        do_roofline: bool, opt: bool = False) -> dict:
+    cfg = variant_for(ARCHS[arch], shape, opt=opt)
+    result = {"arch": arch, "shape": shape, "opt": opt}
+    if (arch, shape) in SKIPS:
+        result["skipped"] = SKIPS[(arch, shape)]
+        print(f"[skip] {arch} × {shape}: {result['skipped']}")
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{arch}__{shape}.json"), "w") as f:
+            json.dump(result, f, indent=1)
+        return result
+    for mesh_kind in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        key = f"mesh_{mesh_kind}"
+        try:
+            result[key] = compile_combo(cfg, shape, mesh)
+            m = result[key]["memory"]
+            print(f"[ok]   {arch} × {shape} × {mesh_kind}: "
+                  f"compile {result[key]['compile_s']}s, "
+                  f"args {m['argument_bytes'] / 1e9:.2f} GB, "
+                  f"temps {m['temp_bytes'] / 1e9:.2f} GB/device, "
+                  f"coll {result[key]['collective_bytes']['total'] / 1e9:.2f}"
+                  f" GB")
+        except Exception as e:  # noqa: BLE001 — record and continue
+            result[key] = {"ok": False, "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+            print(f"[FAIL] {arch} × {shape} × {mesh_kind}: {e}")
+    if do_roofline and "single" in meshes and \
+            result.get("mesh_single", {}).get("ok"):
+        try:
+            mesh = make_production_mesh(multi_pod=False)
+            coll_full = result["mesh_single"]["collective_bytes"]["total"]
+            result["roofline"] = roofline_combo(cfg, shape, mesh,
+                                                coll_full=coll_full)
+            r = result["roofline"]
+            print(f"       roofline: compute {r['compute_s'] * 1e3:.2f} ms, "
+                  f"memory {r['memory_s'] * 1e3:.2f} ms, "
+                  f"collective {r['collective_s'] * 1e3:.2f} ms "
+                  f"→ {r['bottleneck']}-bound")
+        except Exception as e:  # noqa: BLE001
+            result["roofline"] = {"error": f"{type(e).__name__}: {e}",
+                                  "traceback":
+                                      traceback.format_exc()[-2000:]}
+            print(f"[FAIL] roofline {arch} × {shape}: {e}")
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "__opt" if opt else ""
+    path = os.path.join(out_dir, f"{arch}__{shape}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, default=str)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch name or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {list(SHAPES)} or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="enable beyond-paper §Perf optimizations")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.arch == "all" or args.all \
+        else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" or args.all \
+        else [args.shape]
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            r = run(arch, shape, meshes, args.out,
+                    do_roofline=not args.no_roofline, opt=args.opt)
+            for k, v in r.items():
+                if isinstance(v, dict) and v.get("ok") is False:
+                    n_fail += 1
+    print(f"\ndone; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

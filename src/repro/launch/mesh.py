@@ -1,0 +1,29 @@
+"""Production mesh construction (single-pod 16×16 and 2-pod 2×16×16).
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (device count is locked at first jax init —
+``dryrun.py`` must set ``XLA_FLAGS`` before importing anything jax).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever this process actually has (tests / CPU smoke)."""
+    n = jax.device_count()
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

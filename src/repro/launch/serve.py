@@ -1,0 +1,61 @@
+"""Serving launcher: the paper's scheduler over live model inference.
+
+``python -m repro.launch.serve --policy GEMS --duration 15`` registers
+three reduced zoo models as the Ocularone DNS (HV/DEV/BP roles), measures
+their p95 latencies, and streams frame-rate tasks through the chosen
+policy — the §8.8 field validation without a drone.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import reduced
+from repro.configs.registry import ARCHS
+from repro.core.schedulers import ALL_POLICIES, make_policy
+from repro.core.task import ModelProfile
+from repro.serve.engine import ServableModel, ServeEngine, run_stream
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="GEMS", choices=list(ALL_POLICIES))
+    ap.add_argument("--duration", type=float, default=15.0)
+    ap.add_argument("--cloud-concurrency", type=int, default=4)
+    args = ap.parse_args()
+
+    roles = {"HV": ("starcoder2-3b", 0.7, 3.0, 125, 1, 25),
+             "DEV": ("granite-3-2b", 0.4, 5.0, 100, 1, 26),
+             "BP": ("xlstm-1.3b", 0.3, 8.0, 40, 2, 43)}
+    models, fps = {}, {}
+    for name, (arch, share, dlm, beta, ke, kc) in roles.items():
+        cfg = reduced(ARCHS[arch], n_layers=2, d_model=192, vocab=512)
+        prof = ModelProfile(name=name, beta=beta, deadline=1.0, t_edge=1.0,
+                            t_cloud=1.0, cost_edge=ke, cost_cloud=kc,
+                            qoe_beta=100.0, qoe_alpha=0.9,
+                            qoe_window=5_000.0)
+        sm = ServableModel.from_arch(prof, cfg, batch=1, seq=64)
+        import time
+        ts = []
+        for _ in range(20):
+            t0 = time.monotonic()
+            sm.run()
+            ts.append((time.monotonic() - t0) * 1e3)
+        t95 = float(np.percentile(ts, 95))
+        fps[name] = min(60.0, share * 1000.0 / t95)
+        prof = dataclasses.replace(prof, deadline=dlm * t95 + 30.0,
+                                   t_edge=t95, t_cloud=t95 * 0.7 + 60.0)
+        models[name] = dataclasses.replace(sm, profile=prof)
+        print(f"{name}: p95 {t95:.1f} ms, {fps[name]:.1f} FPS, "
+              f"deadline {prof.deadline:.0f} ms")
+
+    engine = ServeEngine(make_policy(args.policy), models,
+                         cloud_concurrency=args.cloud_concurrency)
+    result = run_stream(engine, fps, args.duration * 1e3)
+    print(result.summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Logical-axis sharding with divisibility fallback.
+
+Model code annotates tensors with *logical* axes (``"batch"``, ``"heads"``,
+``"mlp"``, …).  At launch time a rule table maps logical axes to mesh axes;
+``logical_to_pspec`` drops any mapping whose mesh-axis product does not
+divide the tensor dimension (e.g. llava's 56 heads on a 16-way model axis),
+falling back to replication for that dimension — the widest divisible axis
+set wins.  Outside a rules context all annotations are no-ops, so tests and
+CPU smoke runs never touch the mesh machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[str, tuple[str, ...], None]
+
+_state = threading.local()
+
+
+DEFAULT_RULES: dict[str, Axes] = {
+    # data-parallel axes
+    "batch": ("pod", "data"),
+    "fleet": ("pod", "data"),
+    # tensor-parallel axes
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "vocab": "model",
+    "ssm_inner": "model",
+    # SSD/mLSTM chunk intermediates: heads (zamba: 112 % 16 = 0) or the
+    # per-head dim P (xlstm: P=1024) take the model axis
+    "ssm_heads": "model",
+    # MoE dispatch-buffer capacity dim: data-parallel when experts cannot
+    # take the model axis (grok: 8 experts < 16-way model axis)
+    "moe_cap": "data",
+    # MoE dispatch-group dim = data-parallel shards (group-wise dispatch):
+    # all sort/scatter/gather ops stay shard-local
+    "moe_grp": ("pod", "data"),
+    # fallback tensor-parallel axis for big attention intermediates when
+    # heads are not divisible by the model axis (llava 56H, starcoder2 24H)
+    "seq_model": "model",
+    # decode KV cache sequence dim: always divisible (32k / 8k windows),
+    # unlike kv_heads (usually 8 < 16-way model axis) — flash-decode style
+    "kv_seq": "model",
+    # fsdp: parameters' embed dim sharded over the data axis
+    "embed_fsdp": "data",
+    # residual-stream sequence parallelism: remat-saved layer inputs are
+    # (B, S, D); sharding S over 'model' cuts saved activations 16× (the
+    # attention/MLP input is re-gathered per layer — Korthikanti-style SP)
+    "act_seq": "model",
+    # unsharded by default
+    "seq": None,
+    "embed": None,
+    "head_dim": None,
+    "state": None,
+    "frames": None,
+}
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh: Mesh, rules: Optional[dict[str, Axes]] = None):
+    """Activate logical-axis rules (and the mesh) for model tracing."""
+    prev = getattr(_state, "ctx", None)
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    # drop mesh axes the mesh does not actually have (e.g. "pod" on 2D)
+    def filter_axes(ax: Axes) -> Axes:
+        if ax is None:
+            return None
+        if isinstance(ax, str):
+            return ax if ax in mesh.axis_names else None
+        kept = tuple(a for a in ax if a in mesh.axis_names)
+        return kept or None
+    merged = {k: filter_axes(v) for k, v in merged.items()}
+    _state.ctx = (mesh, merged)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def _axis_size(mesh: Mesh, ax: Axes) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, str):
+        return mesh.shape[ax]
+    size = 1
+    for a in ax:
+        size *= mesh.shape[a]
+    return size
+
+
+def logical_to_pspec(shape: Sequence[int], logical: Sequence[Optional[str]],
+                     mesh: Optional[Mesh] = None,
+                     rules: Optional[dict[str, Axes]] = None) -> P:
+    """Resolve logical axes to a PartitionSpec, with divisibility fallback."""
+    ctx = getattr(_state, "ctx", None)
+    if mesh is None or rules is None:
+        if ctx is None:
+            return P()
+        mesh = mesh or ctx[0]
+        rules = rules or ctx[1]
+    parts = []
+    used: set[str] = set()
+    for dim, name in zip(shape, logical):
+        ax = rules.get(name) if name else None
+        size = _axis_size(mesh, ax)
+        flat = (ax,) if isinstance(ax, str) else (ax or ())
+        if ax is None or size == 1 or dim % size != 0 or \
+                any(a in used for a in flat):
+            parts.append(None)
+        else:
+            parts.append(ax)
+            used.update(flat)
+    return P(*parts)
+
+
+def resolves(dim: int, logical: str) -> bool:
+    """True if ``logical`` maps to mesh axes whose product divides dim
+    under the active rules (False outside a rules context)."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return False
+    mesh, rules = ctx
+    ax = rules.get(logical)
+    size = _axis_size(mesh, ax)
+    return size > 1 and dim % size == 0
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op outside rules)."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_to_pspec(x.shape, logical, mesh, rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def named_sharding(shape: Sequence[int], logical: Sequence[Optional[str]],
+                   mesh: Mesh,
+                   rules: Optional[dict[str, Axes]] = None) -> NamedSharding:
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    def filter_axes(ax: Axes) -> Axes:
+        if ax is None:
+            return None
+        if isinstance(ax, str):
+            return ax if ax in mesh.axis_names else None
+        kept = tuple(a for a in ax if a in mesh.axis_names)
+        return kept or None
+    merged = {k: filter_axes(v) for k, v in merged.items()}
+    return NamedSharding(mesh, logical_to_pspec(shape, logical, mesh, merged))

@@ -1,0 +1,37 @@
+"""Training launcher: ``python -m repro.launch.train --arch granite-3-2b``.
+
+On this CPU container it trains the *reduced* family variant end-to-end
+(data pipeline → AdamW → checkpoint).  On a real TPU slice, pass
+``--full`` to build the production config and mesh — the step function is
+the same one the dry-run compiles for 256/512 chips.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.base import reduced
+from repro.configs.registry import ARCHS
+from repro.train.loop import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b", choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full production config (TPU slices only)")
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch] if args.full else reduced(ARCHS[args.arch])
+    state, losses = train(cfg, steps=args.steps, batch=args.batch,
+                          seq_len=args.seq, lr=args.lr,
+                          checkpoint_path=args.ckpt)
+    print(f"final loss {losses[-1]:.4f} after {state.step} steps")
+
+
+if __name__ == "__main__":
+    main()

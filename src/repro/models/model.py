@@ -1,0 +1,835 @@
+"""Model assembly for the 10 assigned architectures.
+
+One :class:`Model` per :class:`ArchConfig` exposes:
+
+* ``init(rng)``             → parameter pytree (blocks stacked for scan)
+* ``param_specs()``         → matching pytree of *logical axis* tuples
+* ``forward(params, batch)``→ (logits, aux) full-sequence (training/prefill)
+* ``loss(params, batch)``   → scalar LM loss (+ MoE router aux)
+* ``init_cache(batch, max_seq)`` → decode cache pytree
+* ``prefill(params, batch, max_seq)`` → (last logits, cache)
+* ``decode_step(params, cache, token, pos)`` → (logits, cache)
+
+Layers are scanned (``lax.scan`` over stacked params) with optional remat,
+so even nemotron's 96 layers trace as one block.  Families:
+
+dense — pre-norm GQA + MLP.                     moe — GQA + top-k experts.
+vlm   — dense decoder over [patch; text] embeds. encdec — whisper enc-dec.
+ssm   — xLSTM (7 mLSTM : 1 sLSTM groups).        hybrid — Mamba2 groups
+with a single *shared* attention+MLP block applied every ``attn_every``
+layers (Zamba2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.launch.sharding import shard
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+
+# ---------------------------------------------------------------------------
+# parameter definition tables:  name → (shape, logical axes)
+# ---------------------------------------------------------------------------
+
+
+def _attn_defs(cfg: ArchConfig, prefix: str = "") -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = {
+        f"{prefix}wq": ((d, h, hd), ("embed_fsdp", "heads", "head_dim")),
+        f"{prefix}wk": ((d, kv, hd), ("embed_fsdp", "kv_heads", "head_dim")),
+        f"{prefix}wv": ((d, kv, hd), ("embed_fsdp", "kv_heads", "head_dim")),
+        f"{prefix}wo": ((h, hd, d), ("heads", "head_dim", "embed_fsdp")),
+    }
+    if cfg.qkv_bias:
+        p.update({
+            f"{prefix}bq": ((h, hd), ("heads", "head_dim")),
+            f"{prefix}bk": ((kv, hd), ("kv_heads", "head_dim")),
+            f"{prefix}bv": ((kv, hd), ("kv_heads", "head_dim"))})
+    return p
+
+
+def _mlp_defs(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "silu":
+        return {"wg": ((d, f), ("embed_fsdp", "mlp")),
+                "wu": ((d, f), ("embed_fsdp", "mlp")),
+                "wd": ((f, d), ("mlp", "embed_fsdp"))}
+    return {"wi": ((d, f), ("embed_fsdp", "mlp")),
+            "wd": ((f, d), ("mlp", "embed_fsdp"))}
+
+
+def _dense_block_defs(cfg: ArchConfig) -> dict:
+    return {"ln1": ((cfg.d_model,), (None,)),
+            "ln2": ((cfg.d_model,), (None,)),
+            **_attn_defs(cfg), **_mlp_defs(cfg)}
+
+
+def _moe_block_defs(cfg: ArchConfig) -> dict:
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    p = {"ln1": ((d,), (None,)), "ln2": ((d,), (None,)),
+         **_attn_defs(cfg),
+         "router": ((d, e), ("embed_fsdp", "experts"))}
+    sp = cfg.expert_split
+    if sp > 1:
+        # split-expert layout: (E·s, D, Fe/s) with the merged expert dim
+        # on the model axis — D stays whole, so the expert GEMMs need no
+        # per-layer fsdp all-gather (grok §Perf iteration)
+        e2, f2 = e * sp, fe // sp
+        up_ax = ("experts", "embed_fsdp", "mlp")
+        if cfg.act == "silu":
+            p.update({"we_g": ((e2, d, f2), up_ax),
+                      "we_u": ((e2, d, f2), up_ax)})
+        else:
+            p.update({"we_i": ((e2, d, f2), up_ax)})
+        p["we_d"] = ((e2, f2, d), ("experts", "mlp", "embed_fsdp"))
+        return p
+    if cfg.act == "silu":
+        p.update({"we_g": ((e, d, fe), ("experts", "embed_fsdp", "mlp")),
+                  "we_u": ((e, d, fe), ("experts", "embed_fsdp", "mlp"))})
+    else:
+        p.update({"we_i": ((e, d, fe), ("experts", "embed_fsdp", "mlp"))})
+    p["we_d"] = ((e, fe, d), ("experts", "mlp", "embed_fsdp"))
+    return p
+
+
+def _mamba_block_defs(cfg: ArchConfig) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    pin = 2 * di + 2 * n + h
+    return {"ln": ((d,), (None,)),
+            "w_in": ((d, pin), ("embed_fsdp", "ssm_inner")),
+            "dt_bias": ((h,), (None,)),
+            "a_log": ((h,), (None,)),
+            "d_skip": ((h,), (None,)),
+            "w_out": ((di, d), ("ssm_inner", "embed_fsdp"))}
+
+
+def _mlstm_block_defs(cfg: ArchConfig) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    return {"ln": ((d,), (None,)),
+            "wq": ((d, di), ("embed_fsdp", "ssm_inner")),
+            "wk": ((d, di), ("embed_fsdp", "ssm_inner")),
+            "wv": ((d, di), ("embed_fsdp", "ssm_inner")),
+            "w_gate": ((d, 2 * cfg.n_heads), ("embed_fsdp", None)),
+            "w_out": ((di, d), ("ssm_inner", "embed_fsdp"))}
+
+
+def _slstm_block_defs(cfg: ArchConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    pd = d // h
+    return {"ln": ((d,), (None,)),
+            "w_in": ((d, d), ("embed_fsdp", None)),
+            "w_rec": ((h, 2 * pd, 4 * pd), ("heads", None, None)),
+            "b_rec": ((h, 4 * pd), ("heads", None)),
+            "w_out": ((d, d), (None, "embed_fsdp"))}
+
+
+def _encdec_dec_defs(cfg: ArchConfig) -> dict:
+    return {"ln1": ((cfg.d_model,), (None,)),
+            "ln2": ((cfg.d_model,), (None,)),
+            "ln3": ((cfg.d_model,), (None,)),
+            **_attn_defs(cfg), **_attn_defs(cfg, prefix="x_"),
+            **_mlp_defs(cfg)}
+
+
+def _init_from_defs(rng, defs: dict, n: Optional[int], dtype) -> dict:
+    """Initialize one (or ``n`` stacked) block(s) from a def table."""
+    out = {}
+    keys = jax.random.split(rng, len(defs))
+    for k, (name, (shape, _)) in zip(keys, sorted(defs.items())):
+        full = (n, *shape) if n else shape
+        if name.startswith(("ln", "d_skip")) or name == "dt_bias":
+            val = jnp.ones(full, dtype) if name.startswith(
+                ("ln", "d_skip")) else jnp.zeros(full, dtype)
+        elif name == "a_log":
+            val = jnp.zeros(full, dtype)       # A = −1 per head
+        elif name.startswith("b"):
+            val = jnp.zeros(full, dtype)
+        else:
+            fan_in = np.prod(shape[:-1]) if len(shape) > 1 else shape[0]
+            val = (jax.random.normal(k, full) / np.sqrt(fan_in)).astype(dtype)
+        out[name] = val
+    return out
+
+
+def _specs_from_defs(defs: dict, stacked: bool) -> dict:
+    return {name: ((None, *ax) if stacked else ax)
+            for name, (_, ax) in defs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def _remat_policy(name: str):
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    raise ValueError(name)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.pdtype = jnp.dtype(cfg.param_dtype)
+        # embedding/lm-head padded to a multiple of 256 so the vocab dim is
+        # always tensor-parallelizable (granite's 49155 = 3 × 16385 would
+        # otherwise replicate 13 GB of fp32 softmax per device); pad logits
+        # are masked to −inf in unembed() so they never win or leak prob.
+        self.vpad = -(-cfg.vocab // 256) * 256
+
+    # -- structure ------------------------------------------------------
+    def _layout(self) -> dict:
+        """family → {group_name: (defs, stack_count)}"""
+        cfg = self.cfg
+        if cfg.family in ("dense", "vlm"):
+            lay = {"blocks": (_dense_block_defs(cfg), cfg.n_layers)}
+            if cfg.family == "vlm":
+                lay["vis_proj"] = ({"w": ((cfg.d_model, cfg.d_model),
+                                          ("embed_fsdp", None))}, None)
+            return lay
+        if cfg.family == "moe":
+            return {"blocks": (_moe_block_defs(cfg), cfg.n_layers)}
+        if cfg.family == "encdec":
+            return {"enc_blocks": (_dense_block_defs(cfg), cfg.enc_layers),
+                    "enc_norm": ({"scale": ((cfg.d_model,), (None,))}, None),
+                    "blocks": (_encdec_dec_defs(cfg), cfg.n_layers)}
+        if cfg.family == "ssm":     # xLSTM
+            g, rem = divmod(cfg.n_layers, cfg.slstm_every)
+            assert rem == 0, "xlstm layers must divide slstm_every"
+            return {"mlstm": (_mlstm_block_defs(cfg),
+                              g * (cfg.slstm_every - 1)),
+                    "slstm": (_slstm_block_defs(cfg), g)}
+        if cfg.family == "hybrid":  # Zamba2
+            g = cfg.n_layers // cfg.attn_every
+            tail = cfg.n_layers - g * cfg.attn_every
+            lay = {"mamba": (_mamba_block_defs(cfg), g * cfg.attn_every),
+                   "shared_attn": (_dense_block_defs(cfg), None)}
+            if tail:
+                lay["mamba_tail"] = (_mamba_block_defs(cfg), tail)
+            return lay
+        raise ValueError(cfg.family)
+
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        rngs = jax.random.split(rng, 8)
+        params = {
+            "embed": (jax.random.normal(rngs[0], (self.vpad, cfg.d_model))
+                      * 0.02).astype(self.pdtype),
+            "final_norm": jnp.ones((cfg.d_model,), self.pdtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (
+                jax.random.normal(rngs[1], (cfg.d_model, self.vpad))
+                / np.sqrt(cfg.d_model)).astype(self.pdtype)
+        for i, (name, (defs, n)) in enumerate(sorted(self._layout().items())):
+            params[name] = _init_from_defs(rngs[2 + i], defs, n, self.pdtype)
+        return params
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        specs = {"embed": ("vocab", "embed_fsdp"),
+                 "final_norm": (None,)}
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = ("embed_fsdp", "vocab")
+        for name, (defs, n) in self._layout().items():
+            specs[name] = _specs_from_defs(defs, stacked=n is not None)
+        return specs
+
+    # -- shared pieces ---------------------------------------------------
+    def _scan(self, body, carry, xs):
+        """lax.scan over stacked layers, or an unrolled Python loop when
+        cfg.unroll_layers (roofline delta method — see launch/dryrun.py)."""
+        if not self.cfg.unroll_layers:
+            return jax.lax.scan(body, carry, xs)
+        n = jax.tree.leaves(xs)[0].shape[0]
+        outs = []
+        for i in range(n):
+            carry, out = body(carry, jax.tree.map(lambda a: a[i], xs))
+            outs.append(out)
+        if outs and jax.tree.structure(outs[0]).num_leaves == 0:
+            return carry, None
+        stacked = jax.tree.map(lambda *os: jnp.stack(os), *outs)
+        return carry, stacked
+
+    def _maybe_remat(self, fn):
+        if self.cfg.remat:
+            return jax.checkpoint(fn,
+                                  policy=_remat_policy(
+                                      self.cfg.remat_policy))
+        return fn
+
+    def _dense_block(self, p, x, *, causal=True, window=None,
+                     use_rope=True):
+        cfg = self.cfg
+        h = L.attention_block(p, cfg, L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                              causal=causal, window=window, use_rope=use_rope)
+        x = x + h
+        x = x + L.mlp(p, cfg, L.rms_norm(x, p["ln2"], cfg.norm_eps))
+        return shard(x, "batch", "act_seq", "embed")
+
+    def _moe_block(self, p, x):
+        cfg = self.cfg
+        h = L.attention_block(p, cfg, L.rms_norm(x, p["ln1"], cfg.norm_eps))
+        x = x + h
+        y, aux = MOE.moe_mlp(p, cfg, L.rms_norm(x, p["ln2"], cfg.norm_eps))
+        return shard(x + y, "batch", "act_seq", "embed"), aux
+
+    # -- forward (training / prefill logits) ------------------------------
+    def embed_tokens(self, params, tokens):
+        x = params["embed"][tokens].astype(self.dtype)
+        return shard(x, "batch", "act_seq", "embed")
+
+    def unembed(self, params, x):
+        w = params.get("lm_head")
+        if w is None:
+            w = params["embed"].T
+        logits = jnp.einsum("bsd,dv->bsv", x, w.astype(self.dtype))
+        logits = shard(logits, "batch", "seq", "vocab")
+        if self.vpad != self.cfg.vocab:      # mask padding columns
+            logits = jnp.where(jnp.arange(self.vpad) < self.cfg.vocab,
+                               logits, -1e30)
+        return logits[..., : self.cfg.vocab] if False else logits
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            x = self.embed_tokens(params, batch["tokens"])
+            if fam == "vlm":
+                img = batch["patches"].astype(self.dtype) @ \
+                    params["vis_proj"]["w"]
+                x = jnp.concatenate([img, x], axis=1)
+            blk = self._maybe_remat(lambda p, h: self._dense_block(p, h))
+            def body(h, p):
+                return blk(p, h), None
+            x, _ = self._scan(body, x, params["blocks"])
+            if fam == "vlm":
+                x = x[:, cfg.n_image_tokens:]
+            aux = jnp.zeros((), jnp.float32)
+        elif fam == "moe":
+            x = self.embed_tokens(params, batch["tokens"])
+            blk = self._maybe_remat(lambda p, h: self._moe_block(p, h))
+            def body(carry, p):
+                h, aux = carry
+                h, a = blk(p, h)
+                return (h, aux + a), None
+            (x, aux), _ = self._scan(
+                body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+        elif fam == "encdec":
+            enc = self._encode(params, batch["frames"])
+            x = self.embed_tokens(params, batch["tokens"])
+            blk = self._maybe_remat(
+                lambda p, h, e: self._decdec_block(p, h, e))
+            def body(h, p):
+                return blk(p, h, enc), None
+            x, _ = self._scan(body, x, params["blocks"])
+            aux = jnp.zeros((), jnp.float32)
+        elif fam == "ssm":
+            x, aux = self._xlstm_forward(params, batch)
+        elif fam == "hybrid":
+            x, aux = self._zamba_forward(params, batch)
+        else:
+            raise ValueError(fam)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return self.unembed(params, x), aux
+
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(self.dtype)
+        x = shard(x, "batch", "frames", "embed")
+        blk = self._maybe_remat(
+            lambda p, h: self._dense_block(p, h, causal=False, window=0))
+        def body(h, p):
+            return blk(p, h), None
+        x, _ = self._scan(body, x, params["enc_blocks"])
+        return L.rms_norm(x, params["enc_norm"]["scale"], cfg.norm_eps)
+
+    def _decdec_block(self, p, x, enc):
+        cfg = self.cfg
+        h = L.attention_block(p, cfg, L.rms_norm(x, p["ln1"], cfg.norm_eps))
+        x = x + h
+        x = x + self._cross_attend(p, L.rms_norm(x, p["ln2"], cfg.norm_eps),
+                                   enc)
+        x = x + L.mlp(p, cfg, L.rms_norm(x, p["ln3"], cfg.norm_eps))
+        return shard(x, "batch", "act_seq", "embed")
+
+    def _cross_attend(self, p, x, enc):
+        cfg = self.cfg
+        q = jnp.einsum("bsd,dhk->bshk", x, p["x_wq"])
+        k = jnp.einsum("bfd,dhk->bfhk", enc, p["x_wk"])
+        v = jnp.einsum("bfd,dhk->bfhk", enc, p["x_wv"])
+        out = L.attend(q, k, v, causal=False, window=0)
+        return jnp.einsum("bshk,hkd->bsd", out, p["x_wo"])
+
+    def _xlstm_forward(self, params, batch):
+        cfg = self.cfg
+        x = self.embed_tokens(params, batch["tokens"])
+        g = cfg.n_layers // cfg.slstm_every
+        per = cfg.slstm_every - 1
+        m_params = jax.tree.map(
+            lambda a: a.reshape(g, per, *a.shape[1:]), params["mlstm"])
+
+        def mblk(p, h):
+            y, _ = XL.mlstm_parallel(p, cfg, L.rms_norm(h, p["ln"],
+                                                        cfg.norm_eps))
+            return shard(h + y, "batch", "act_seq", "embed")
+
+        def sblk(p, h):
+            y, _ = XL.slstm_scan(p, cfg, L.rms_norm(h, p["ln"],
+                                                    cfg.norm_eps))
+            return shard(h + y, "batch", "act_seq", "embed")
+
+        mblk_r = self._maybe_remat(mblk)
+        sblk_r = self._maybe_remat(sblk)
+
+        def group(h, ps):
+            mp, sp = ps
+            def inner(hh, p):
+                return mblk_r(p, hh), None
+            h, _ = self._scan(inner, h, mp)
+            return sblk_r(sp, h), None
+
+        x, _ = self._scan(group, x, (m_params, params["slstm"]))
+        return x, jnp.zeros((), jnp.float32)
+
+    def _zamba_forward(self, params, batch):
+        cfg = self.cfg
+        x = self.embed_tokens(params, batch["tokens"])
+        g = cfg.n_layers // cfg.attn_every
+        m_params = jax.tree.map(
+            lambda a: a.reshape(g, cfg.attn_every, *a.shape[1:]),
+            params["mamba"])
+
+        def mamba_blk(p, h):
+            y, _ = SSM.ssd_chunked(p, cfg, L.rms_norm(h, p["ln"],
+                                                      cfg.norm_eps))
+            return shard(h + y, "batch", "act_seq", "embed")
+
+        mamba_r = self._maybe_remat(mamba_blk)
+        shared = self._maybe_remat(
+            lambda p, h: self._dense_block(p, h, window=cfg.sliding_window))
+
+        def group(h, mp):
+            def inner(hh, p):
+                return mamba_r(p, hh), None
+            h, _ = self._scan(inner, h, mp)
+            return shared(params["shared_attn"], h), None
+
+        x, _ = self._scan(group, x, m_params)
+        if "mamba_tail" in params:
+            def inner(hh, p):
+                return mamba_r(p, hh), None
+            x, _ = self._scan(inner, x, params["mamba_tail"])
+        return x, jnp.zeros((), jnp.float32)
+
+    # -- loss -------------------------------------------------------------
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0) + aux
+
+    # ======================================================================
+    # decoding
+    # ======================================================================
+    def init_cache(self, batch_size: int, max_seq: int) -> dict:
+        cfg = self.cfg
+        dt = self.dtype
+        fam = cfg.family
+        if fam in ("dense", "vlm", "moe"):
+            return L.init_kv_cache(cfg, cfg.n_layers, batch_size, max_seq, dt)
+        if fam == "encdec":
+            c = L.init_kv_cache(cfg, cfg.n_layers, batch_size, max_seq, dt)
+            c["xk"] = jnp.zeros((cfg.n_layers, batch_size, cfg.n_frames,
+                                 cfg.n_kv_heads, cfg.hd), dt)
+            c["xv"] = jnp.zeros_like(c["xk"])
+            return c
+        if fam == "ssm":
+            g = cfg.n_layers // cfg.slstm_every
+            per = cfg.slstm_every - 1
+            h, pd = cfg.n_heads, cfg.d_inner // cfg.n_heads
+            spd = cfg.d_model // cfg.n_heads
+            return {
+                "m_c": jnp.zeros((g, per, batch_size, h, pd, pd), dt),
+                "m_n": jnp.zeros((g, per, batch_size, h, pd), dt),
+                "s_h": jnp.zeros((g, batch_size, h, spd), dt),
+                "s_c": jnp.zeros((g, batch_size, h, spd), jnp.float32),
+                "s_n": jnp.zeros((g, batch_size, h, spd), jnp.float32),
+            }
+        if fam == "hybrid":
+            g = cfg.n_layers // cfg.attn_every
+            tail = cfg.n_layers - g * cfg.attn_every
+            h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+            w = L.cache_width(cfg, max_seq)
+            c = {"state": jnp.zeros((g, cfg.attn_every, batch_size, h, pd,
+                                     n), dt),
+                 "k": jnp.zeros((g, batch_size, w, cfg.n_kv_heads, cfg.hd),
+                                dt),
+                 "v": jnp.zeros((g, batch_size, w, cfg.n_kv_heads, cfg.hd),
+                                dt)}
+            if tail:
+                c["tail_state"] = jnp.zeros((tail, batch_size, h, pd, n), dt)
+            return c
+        raise ValueError(fam)
+
+    def decode_step(self, params, cache: dict, token: jax.Array,
+                    pos: jax.Array, frames: Optional[jax.Array] = None):
+        """One serve step: next-token logits for ``token`` at ``pos``.
+
+        token: (B, 1) int32; pos: scalar int32 (same position across the
+        batch — continuous batching handled by the serve engine).
+        """
+        cfg = self.cfg
+        fam = cfg.family
+        x = self.embed_tokens(params, token)
+        w = cfg.sliding_window
+        if fam in ("dense", "vlm", "moe"):
+            # cache rides the scan CARRY and is updated in place per layer:
+            # passing it as xs/ys makes XLA double-buffer the whole cache
+            # (~2 extra cache copies in temps at 32k contexts)
+            nl = cfg.n_layers
+
+            def body(carry, xs):
+                h, ck_all, cv_all = carry
+                p, i = xs
+                ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0,
+                                                  keepdims=False)
+                cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0,
+                                                  keepdims=False)
+                h, ck, cv = self._decode_attn_block(p, h, ck, cv, pos,
+                                                    fam == "moe")
+                ck_all = jax.lax.dynamic_update_index_in_dim(
+                    ck_all, ck, i, 0)
+                cv_all = jax.lax.dynamic_update_index_in_dim(
+                    cv_all, cv, i, 0)
+                return (h, ck_all, cv_all), None
+            (x, ck, cv), _ = self._scan(
+                body, (x, cache["k"], cache["v"]),
+                (params["blocks"], jnp.arange(nl)))
+            cache = {"k": ck, "v": cv}
+        elif fam == "encdec":
+            def body(carry, xs):
+                h, ck_all, cv_all = carry
+                p, i, xk, xv = xs
+                ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0,
+                                                  keepdims=False)
+                cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0,
+                                                  keepdims=False)
+                h, ck, cv = self._decode_self_attn(p, h, ck, cv, pos)
+                q = jnp.einsum("bsd,dhk->bshk",
+                               L.rms_norm(h, p["ln2"], cfg.norm_eps),
+                               p["x_wq"])
+                out = L.decode_attend(q, xk, xv, pos=xk.shape[1] - 1,
+                                      window=0)
+                h = h + jnp.einsum("bshk,hkd->bsd", out, p["x_wo"])
+                h = h + L.mlp(p, cfg, L.rms_norm(h, p["ln3"], cfg.norm_eps))
+                ck_all = jax.lax.dynamic_update_index_in_dim(
+                    ck_all, ck, i, 0)
+                cv_all = jax.lax.dynamic_update_index_in_dim(
+                    cv_all, cv, i, 0)
+                return (h, ck_all, cv_all), None
+            (x, ck, cv), _ = self._scan(
+                body, (x, cache["k"], cache["v"]),
+                (params["blocks"], jnp.arange(cfg.n_layers), cache["xk"],
+                 cache["xv"]))
+            cache = dict(cache, k=ck, v=cv)
+        elif fam == "ssm":
+            x, cache = self._xlstm_decode(params, cache, x)
+        elif fam == "hybrid":
+            x, cache = self._zamba_decode(params, cache, x, pos)
+        else:
+            raise ValueError(fam)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return self.unembed(params, x), cache
+
+    def _decode_self_attn(self, p, x, ck, cv, pos):
+        """Self-attention sublayer against a per-layer KV cache slice."""
+        cfg = self.cfg
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        b = x.shape[0]
+        positions = jnp.broadcast_to(pos, (b, 1))
+        q, k, v = L.qkv_proj(p, cfg, h, positions)
+        w = cfg.sliding_window
+        from repro.launch.sharding import current_mesh
+        if cfg.opt_decode and current_mesh() is not None:
+            out, ck, cv = L.decode_update_attend_sharded(
+                cfg, q, k, v, ck, cv, pos, w)
+            return x + jnp.einsum("bshk,hkd->bsd", out, p["wo"]), ck, cv
+        wsz = ck.shape[1]
+        slot = pos % wsz if w else jnp.minimum(pos, wsz - 1)
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, slot, 0, 0))
+        if cfg.attn_impl == "pallas" and not w:
+            # flash-decode kernel: contiguous caches only (the ring-buffer
+            # validity mask of SWA caches stays on the jnp path)
+            from repro.kernels import ops
+            lengths = jnp.full((b,), pos + 1, jnp.int32)
+            out = ops.decode_attention(
+                q[:, 0], ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3),
+                lengths)[:, None]
+        else:
+            out = L.decode_attend(q, ck, cv, pos=pos, window=w)
+        return x + jnp.einsum("bshk,hkd->bsd", out, p["wo"]), ck, cv
+
+    def _decode_attn_block(self, p, x, ck, cv, pos, is_moe: bool):
+        """Pre-norm attention block against a per-layer KV cache slice."""
+        cfg = self.cfg
+        x, ck, cv = self._decode_self_attn(p, x, ck, cv, pos)
+        hh = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if is_moe:
+            y, _ = MOE.moe_mlp(p, cfg, hh)
+        else:
+            y = L.mlp(p, cfg, hh)
+        return x + y, ck, cv
+
+    def _xlstm_decode(self, params, cache, x):
+        cfg = self.cfg
+        g = cfg.n_layers // cfg.slstm_every
+        per = cfg.slstm_every - 1
+        m_params = jax.tree.map(
+            lambda a: a.reshape(g, per, *a.shape[1:]), params["mlstm"])
+
+        def group(h, xs):
+            mp, sp, mc, mn, sh, sc, sn = xs
+            def inner(carry, ys):
+                hh = carry
+                p, c1, n1 = ys
+                y, (c2, n2) = XL.mlstm_decode_step(
+                    p, cfg, L.rms_norm(hh, p["ln"], cfg.norm_eps), (c1, n1))
+                return hh + y, (c2, n2)
+            h, (mc, mn) = self._scan(inner, h, (mp, mc, mn))
+            y, (sh, sc, sn) = XL.slstm_decode_step(
+                sp, cfg, L.rms_norm(h, sp["ln"], cfg.norm_eps),
+                (sh, sc, sn))
+            return h + y, (mc, mn, sh, sc, sn)
+
+        x, (mc, mn, sh, sc, sn) = self._scan(
+            group, x, (m_params, params["slstm"], cache["m_c"],
+                       cache["m_n"], cache["s_h"], cache["s_c"],
+                       cache["s_n"]))
+        return x, {"m_c": mc, "m_n": mn, "s_h": sh, "s_c": sc, "s_n": sn}
+
+    def _zamba_decode(self, params, cache, x, pos):
+        cfg = self.cfg
+        g = cfg.n_layers // cfg.attn_every
+        m_params = jax.tree.map(
+            lambda a: a.reshape(g, cfg.attn_every, *a.shape[1:]),
+            params["mamba"])
+
+        def group(carry, xs):
+            h, ck_all, cv_all = carry
+            mp, st, i = xs
+            def inner(carry2, ys):
+                hh = carry2
+                p, s1 = ys
+                y, s2 = SSM.ssd_decode_step(
+                    p, cfg, L.rms_norm(hh, p["ln"], cfg.norm_eps), s1)
+                return hh + y, s2
+            h, st = self._scan(inner, h, (mp, st))
+            ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+            h, ck, cv = self._decode_attn_block(
+                params["shared_attn"], h, ck, cv, pos, False)
+            ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
+            cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
+            return (h, ck_all, cv_all), st
+
+        g_count = g
+        (x, ck, cv), st = self._scan(
+            group, (x, cache["k"], cache["v"]),
+            (m_params, cache["state"], jnp.arange(g_count)))
+        new = dict(cache, state=st, k=ck, v=cv)
+        if "tail_state" in cache:
+            def inner(carry, ys):
+                hh = carry
+                p, s1 = ys
+                y, s2 = SSM.ssd_decode_step(
+                    p, cfg, L.rms_norm(hh, p["ln"], cfg.norm_eps), s1)
+                return hh + y, s2
+            x, ts = self._scan(inner, x,
+                                 (params["mamba_tail"], cache["tail_state"]))
+            new["tail_state"] = ts
+        return x, new
+
+    # -- prefill -----------------------------------------------------------
+    def prefill(self, params, batch, max_seq: int):
+        """Run the full prompt, build the decode cache, return last logits.
+
+        Implemented as forward + per-layer K/V recomputation for attention
+        families (clarity over speed on CPU; the Pallas flash kernel is the
+        TPU fast path), and a stateful scan for SSM/hybrid.
+        """
+        cfg = self.cfg
+        fam = cfg.family
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        cache = self.init_cache(b, max_seq)
+        if fam in ("dense", "vlm", "moe", "encdec"):
+            # forward while capturing K/V per layer
+            x = self.embed_tokens(params, tokens)
+            if fam == "vlm":
+                img = batch["patches"].astype(self.dtype) @ \
+                    params["vis_proj"]["w"]
+                x = jnp.concatenate([img, x], axis=1)
+            enc = self._encode(params, batch["frames"]) \
+                if fam == "encdec" else None
+            positions = jnp.broadcast_to(jnp.arange(x.shape[1]),
+                                         (b, x.shape[1]))
+
+            s_total = x.shape[1]
+            w_cache = cache["k"].shape[2]
+            emit_from = max(0, s_total - min(w_cache, s_total))
+
+            def body(h, p):
+                hn = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+                q, k, v = L.qkv_proj(p, cfg, hn, positions)
+                out = L.attend_auto(q, k, v, causal=True,
+                                    window=cfg.sliding_window,
+                                    unroll=cfg.unroll_layers)
+                h = h + jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+                if fam == "encdec":
+                    xk = jnp.einsum("bfd,dhk->bfhk", enc, p["x_wk"])
+                    xv = jnp.einsum("bfd,dhk->bfhk", enc, p["x_wv"])
+                    qx = jnp.einsum("bsd,dhk->bshk",
+                                    L.rms_norm(h, p["ln2"], cfg.norm_eps),
+                                    p["x_wq"])
+                    ox = L.attend(qx, xk, xv, causal=False, window=0)
+                    h = h + jnp.einsum("bshk,hkd->bsd", ox, p["x_wo"])
+                    h = h + L.mlp(p, cfg, L.rms_norm(h, p["ln3"],
+                                                     cfg.norm_eps))
+                    k_out = shard(k[:, emit_from:], "batch", "kv_seq",
+                                  "kv_heads", None)
+                    v_out = shard(v[:, emit_from:], "batch", "kv_seq",
+                                  "kv_heads", None)
+                    return h, (k_out, v_out, xk, xv)
+                hh = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+                if fam == "moe":
+                    y, _ = MOE.moe_mlp(p, cfg, hh)
+                else:
+                    y = L.mlp(p, cfg, hh)
+                k_out = shard(k[:, emit_from:], "batch", "kv_seq",
+                              "kv_heads", None)
+                v_out = shard(v[:, emit_from:], "batch", "kv_seq",
+                              "kv_heads", None)
+                return h + y, (k_out, v_out)
+
+            x, kvs = self._scan(body, x, params["blocks"])
+            if fam == "encdec":
+                ks, vs, xk, xv = kvs
+                cache["xk"], cache["xv"] = xk, xv
+            else:
+                ks, vs = kvs
+            ks = shard(ks, None, "batch", "kv_seq", "kv_heads", None)
+            vs = shard(vs, None, "batch", "kv_seq", "kv_heads", None)
+            w = cache["k"].shape[2]
+            seq_total = x.shape[1]
+            take = min(w, seq_total)
+            if cfg.sliding_window and take == w:
+                # ring placement: slot of absolute position p is p % w
+                slots = jnp.arange(seq_total - take, seq_total) % w
+                cache["k"] = jnp.zeros_like(cache["k"]).at[:, :, slots].set(
+                    ks)
+                cache["v"] = jnp.zeros_like(cache["v"]).at[:, :, slots].set(
+                    vs)
+            elif take == w:
+                cache["k"], cache["v"] = ks, vs      # no copy
+            else:
+                cache["k"] = cache["k"].at[:, :, :take].set(ks)
+                cache["v"] = cache["v"].at[:, :, :take].set(vs)
+            if fam == "vlm":
+                x = x[:, cfg.n_image_tokens:]
+            x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+            logits = self.unembed(params, x[:, -1:])
+            return logits, cache
+        # SSM / hybrid: run the chunked scans, keep final states
+        if fam == "ssm":
+            logits, cache = self._xlstm_prefill(params, tokens, cache)
+            return logits, cache
+        if fam == "hybrid":
+            return self._zamba_prefill(params, tokens, cache, max_seq)
+        raise ValueError(fam)
+
+    def _xlstm_prefill(self, params, tokens, cache):
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)
+        g = cfg.n_layers // cfg.slstm_every
+        per = cfg.slstm_every - 1
+        m_params = jax.tree.map(
+            lambda a: a.reshape(g, per, *a.shape[1:]), params["mlstm"])
+
+        def group(h, xs):
+            mp, sp = xs
+            def inner(hh, p):
+                y, st = XL.mlstm_parallel(
+                    p, cfg, L.rms_norm(hh, p["ln"], cfg.norm_eps))
+                return hh + y, st
+            h, (mc, mn) = self._scan(inner, h, mp)
+            y, (sh, sc, sn) = XL.slstm_scan(
+                sp, cfg, L.rms_norm(h, sp["ln"], cfg.norm_eps))
+            return h + y, (mc, mn, sh, sc, sn)
+
+        x, (mc, mn, sh, sc, sn) = self._scan(
+            group, x, (m_params, params["slstm"]))
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self.unembed(params, x[:, -1:])
+        return logits, {"m_c": mc, "m_n": mn, "s_h": sh, "s_c": sc,
+                        "s_n": sn}
+
+    def _zamba_prefill(self, params, tokens, cache, max_seq):
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)
+        b, s = tokens.shape
+        g = cfg.n_layers // cfg.attn_every
+        m_params = jax.tree.map(
+            lambda a: a.reshape(g, cfg.attn_every, *a.shape[1:]),
+            params["mamba"])
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        w = cache["k"].shape[2]
+        take = min(w, s)
+        slots = (jnp.arange(s - take, s) % w) if cfg.sliding_window \
+            else jnp.arange(take)
+
+        def group(h, xs):
+            mp = xs
+            def inner(carry, p):
+                hh = carry
+                y, st = SSM.ssd_chunked(
+                    p, cfg, L.rms_norm(hh, p["ln"], cfg.norm_eps))
+                return hh + y, st
+            h, st = self._scan(inner, h, mp)
+            p = params["shared_attn"]
+            hn = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+            q, k, v = L.qkv_proj(p, cfg, hn, positions)
+            out = L.attend_auto(q, k, v, causal=True,
+                                window=cfg.sliding_window,
+                                unroll=cfg.unroll_layers)
+            h = h + jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+            h = h + L.mlp(p, cfg, L.rms_norm(h, p["ln2"], cfg.norm_eps))
+            return h, (st, k[:, s - take:], v[:, s - take:])
+
+        x, (st, ks, vs) = self._scan(group, x, m_params)
+        cache["state"] = st
+        cache["k"] = cache["k"].at[:, :, slots].set(ks)
+        cache["v"] = cache["v"].at[:, :, slots].set(vs)
+        if "tail_state" in cache:
+            def inner(carry, p):
+                hh = carry
+                y, stt = SSM.ssd_chunked(
+                    p, cfg, L.rms_norm(hh, p["ln"], cfg.norm_eps))
+                return hh + y, stt
+            x, ts = self._scan(inner, x, params["mamba_tail"])
+            cache["tail_state"] = ts
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return self.unembed(params, x[:, -1:]), cache

@@ -1,0 +1,132 @@
+"""Mixture-of-Experts layer: top-k router with group-wise capacity dispatch.
+
+Tokens are reshaped into ``cfg.moe_groups`` groups (the launcher sets this
+to the data-parallel shard count; 1 on CPU tests) and dispatch — stable
+sort by expert, rank-within-expert, capacity drop — happens *independently
+per group*.  Every dispatch tensor carries the group dim, which shards over
+the data axes, so the sorts, scatters and gathers never cross a device
+boundary; only the expert GEMMs touch sharded weights.  This is the
+standard TPU MoE layout (group-wise Switch dispatch): compiled FLOPs scale
+with ``top_k · capacity_factor``, not with the expert count, and the
+all-to-all happens implicitly at the (g, E, C, D) buffer resharding.
+
+Expert weights shard expert-parallel over the ``model`` axis when divisible
+(qwen3's 128 experts) and fall back to per-expert tensor parallelism on
+d_ff (grok's 8 experts < 16-way axis) — the rule engine decides per tensor.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch.sharding import shard
+
+
+def router(p: dict, x_flat: jax.Array, cfg: ArchConfig):
+    """Top-k routing.  Returns (weights (T,k), experts (T,k), aux_loss)."""
+    logits = (x_flat.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    weights, experts = jax.lax.top_k(probs, cfg.top_k)         # (T, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Shazeer-style load-balance auxiliary loss
+    density = jnp.mean(jax.nn.one_hot(experts[:, 0], cfg.n_experts), 0)
+    mean_probs = probs.mean(0)
+    aux = cfg.router_aux_coef * cfg.n_experts * jnp.sum(density * mean_probs)
+    return weights.astype(x_flat.dtype), experts, aux
+
+
+def capacity_dispatch(experts: jax.Array, n_experts: int, capacity: int):
+    """Assign each (token, k) pair a slot in an (E, C) buffer.
+
+    Returns (slot (T*k,), keep (T*k,)) where ``slot = e*C + rank`` for kept
+    pairs; pairs past an expert's capacity are dropped.
+
+    Rank-within-expert is computed sort-based in O(T·k) memory — a one-hot
+    cumsum would materialize a (T·k, E) matrix (≈4 GB for qwen3 at 1M
+    tokens).  ``argsort`` is stable, so ranks follow (token, k) order.
+    """
+    flat = experts.reshape(-1)                                  # (T*k,)
+    tk = flat.shape[0]
+    order = jnp.argsort(flat, stable=True)
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(tk))
+    counts = jax.ops.segment_sum(jnp.ones_like(flat), flat,
+                                 num_segments=n_experts)
+    start = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                             jnp.cumsum(counts)[:-1]])
+    sorted_rank = jnp.arange(tk) - start[flat[order]]
+    rank = sorted_rank[inv]
+    keep = rank < capacity
+    slot = flat * capacity + jnp.minimum(rank, capacity - 1)
+    return slot, keep
+
+
+def _dispatch_group(xg: jax.Array, experts, cfg: ArchConfig, capacity: int):
+    """One group's (E, C, D) buffer + combine metadata — all local ops."""
+    t, d = xg.shape
+    k = cfg.top_k
+    slot, keep = capacity_dispatch(experts, cfg.n_experts, capacity)
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+    # extra trash row so dropped pairs never clobber a real slot
+    buf = jnp.zeros((cfg.n_experts * capacity + 1, d), xg.dtype)
+    buf = buf.at[jnp.where(keep, slot, cfg.n_experts * capacity)].set(
+        xg[tok_idx])
+    return buf[:-1].reshape(cfg.n_experts, capacity, d), slot, keep, tok_idx
+
+
+def _combine_group(out, slot, keep, tok_idx, weights, t: int):
+    gathered = out.reshape(-1, out.shape[-1])[slot] * \
+        (weights.reshape(-1, 1) * keep[:, None])
+    return jax.ops.segment_sum(gathered, tok_idx, num_segments=t)
+
+
+def moe_mlp(p: dict, cfg: ArchConfig, x: jax.Array):
+    """(B, S, D) → (B, S, D), plus the router aux loss."""
+    b, s, d = x.shape
+    t = b * s
+    g = max(1, cfg.moe_groups)
+    while t % g:                      # tiny smoke batches: shrink groups
+        g //= 2
+    tg = t // g
+    xf = shard(x.reshape(g, tg, d), "moe_grp", None, None)
+    capacity = int(tg * cfg.top_k / cfg.n_experts * cfg.capacity_factor) + 1
+
+    weights, experts, aux = jax.vmap(lambda xg: router(p, xg, cfg))(xf)
+    aux = aux.mean()
+
+    buf, slot, keep, tok_idx = jax.vmap(
+        lambda xg, eg: _dispatch_group(xg, eg, cfg, capacity))(xf, experts)
+    buf = shard(buf, "moe_grp", "experts", None, None)    # (g, E, C, D)
+
+    sp = cfg.expert_split
+    if sp > 1:
+        # split-expert GEMMs: weights (E·s, D, Fe/s) viewed (E, s, D, F2);
+        # the s-partials of the down projection sum inside the einsum
+        e = cfg.n_experts
+        f2 = cfg.d_ff_expert // sp
+        def view_up(w):
+            return w.reshape(e, sp, d, f2)
+        if cfg.act == "silu":
+            h = jax.nn.silu(jnp.einsum("gecd,esdf->gescf", buf,
+                                       view_up(p["we_g"]))) * \
+                jnp.einsum("gecd,esdf->gescf", buf, view_up(p["we_u"]))
+        else:
+            h = jax.nn.gelu(jnp.einsum("gecd,esdf->gescf", buf,
+                                       view_up(p["we_i"])))
+        wd = p["we_d"].reshape(e, sp, f2, d)
+        out = jnp.einsum("gescf,esfd->gecd", h, wd)
+        out = shard(out, "moe_grp", "experts", None, None)
+    else:
+        if cfg.act == "silu":
+            h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["we_g"])) * \
+                jnp.einsum("gecd,edf->gecf", buf, p["we_u"])
+        else:
+            h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", buf, p["we_i"]))
+        h = shard(h, "moe_grp", "experts", None, "mlp")
+        out = jnp.einsum("gecf,efd->gecd", h, p["we_d"])
+        out = shard(out, "moe_grp", "experts", None, None)
+
+    y = jax.vmap(_combine_group, in_axes=(0, 0, 0, 0, 0, None))(
+        out, slot, keep, tok_idx, weights, tg)
+    y = shard(y, "moe_grp", None, None)
+    return y.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,122 @@
+"""Mamba2-style selective state-space block (SSD), training + decode.
+
+Training/prefill uses the chunkwise-parallel SSD formulation (intra-chunk
+quadratic attention-like term + inter-chunk recurrence over chunk states),
+which keeps the computation matmul-heavy for the MXU; decoding is the O(1)
+recurrent state update.  The depthwise conv of the reference implementation
+is folded away (identity) — noted in DESIGN.md — since it contributes <1 %
+of FLOPs and no distribution-relevant structure.
+
+Shapes: heads H = d_inner/ssm_head_dim, head dim P = ssm_head_dim,
+state N = cfg.ssm_state.  State cache per layer: (B, H, P, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch.sharding import shard
+
+CHUNK = 128
+
+
+def _split_in_proj(p: dict, cfg: ArchConfig, x: jax.Array):
+    """x (B,S,D) → z,xs (B,S,H,P), B,C (B,S,N), dt (B,S,H)."""
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj = x @ p["w_in"]                 # (B,S, 2*di + 2*n + h)
+    z, xs, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    b, s, _ = x.shape
+    z = z.reshape(b, s, h, cfg.ssm_head_dim)
+    xs = xs.reshape(b, s, h, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt + p["dt_bias"])          # (B,S,H) > 0
+    return z, xs, bmat, cmat, dt
+
+
+def ssd_chunked(p: dict, cfg: ArchConfig, x: jax.Array,
+                state: jax.Array | None = None):
+    """Chunkwise-parallel SSD scan over the full sequence.
+
+    Returns (y (B,S,D_inner→D via out proj), final_state (B,H,P,N)).
+    """
+    b, s, _ = x.shape
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xs, bmat, cmat, dt = _split_in_proj(p, cfg, x)
+    a = -jnp.exp(p["a_log"])                         # (H,) negative decay
+
+    nc = max(1, s // CHUNK)
+    c = s // nc
+    assert nc * c == s, f"seq {s} not divisible by chunk {c}"
+
+    # reshape into chunks
+    xs_c = xs.reshape(b, nc, c, h, pd)
+    b_c = bmat.reshape(b, nc, c, n)
+    c_c = cmat.reshape(b, nc, c, n)
+    dt_c = dt.reshape(b, nc, c, h)
+
+    # per-step log decay  ℓ_t = a·dt_t  (per head)
+    ldec = dt_c * a[None, None, None, :]             # (B,nc,c,H) ≤ 0
+    cum = jnp.cumsum(ldec, axis=2)                   # within-chunk cumsum
+
+    # intra-chunk (causal "attention" with decay):  for i ≥ j:
+    #   M[i,j] = exp(cum_i − cum_j) · (C_i·B_j) · dt_j
+    ci = cum[:, :, :, None, :]                       # (B,nc,c,1,H)
+    cj = cum[:, :, None, :, :]                       # (B,nc,1,c,H)
+    decay = jnp.exp(jnp.clip(ci - cj, -60.0, 0.0))   # (B,nc,c,c,H)
+    decay = shard(decay, "batch", None, None, None, "ssm_heads")
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    cb = jnp.einsum("bgin,bgjn->bgij", c_c, b_c)     # (B,nc,c,c)
+    m = cb[..., None] * decay * dt_c[:, :, None, :, :]
+    m = jnp.where(causal[None, None, :, :, None], m, 0.0)
+    m = shard(m, "batch", None, None, None, "ssm_heads")
+    y_intra = jnp.einsum("bgijh,bgjhp->bgihp", m, xs_c)
+
+    # chunk summaries: S_g = Σ_j exp(cum_end − cum_j) dt_j B_j x_j
+    tail = jnp.exp(jnp.clip(cum[:, :, -1:, :] - cum, -60.0, 0.0))
+    sum_g = jnp.einsum("bgjh,bgjn,bgjhp->bghpn",
+                       tail * dt_c, b_c, xs_c)       # (B,nc,H,P,N)
+    sum_g = shard(sum_g, "batch", None, "ssm_heads", None, None)
+    chunk_decay = jnp.exp(jnp.clip(cum[:, :, -1, :], -60.0, 0.0))  # (B,nc,H)
+
+    # inter-chunk recurrence over chunk states
+    def scan_fn(carry, inp):
+        s_sum, dec = inp                              # (B,H,P,N), (B,H)
+        new = carry * dec[:, :, None, None] + s_sum
+        return new, carry                             # emit state *before*
+
+    init = state if state is not None else jnp.zeros((b, h, pd, n), x.dtype)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init.astype(jnp.float32),
+        (jnp.moveaxis(sum_g, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)     # (B,nc,H,P,N)
+
+    # contribution of the carried state:  y_t += C_t · (decay_to_t · S_prev)
+    into = jnp.exp(jnp.clip(cum, -60.0, 0.0))         # decay from chunk start
+    y_inter = jnp.einsum("bgin,bgih,bghpn->bgihp",
+                         c_c, into, prev_states.astype(x.dtype))
+
+    y = (y_intra + y_inter).reshape(b, s, h, pd)
+    y = y + xs * p["d_skip"][None, None, :, None]     # D skip connection
+    y = y * jax.nn.silu(z)                            # gated output
+    y = shard(y, "batch", "seq", "ssm_inner", None)
+    out = y.reshape(b, s, cfg.d_inner) @ p["w_out"]
+    return out, final.astype(x.dtype)
+
+
+def ssd_decode_step(p: dict, cfg: ArchConfig, x: jax.Array,
+                    state: jax.Array):
+    """One-token recurrent update.  x: (B,1,D); state: (B,H,P,N)."""
+    z, xs, bmat, cmat, dt = _split_in_proj(p, cfg, x)
+    a = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dt[:, 0, :] * a[None, :])           # (B,H)
+    # state ← decay·state + dt·x_t ⊗ B_t
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xs[:, 0], bmat[:, 0], dt[:, 0])
+    state = state * dec[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], state)  # C_t · state
+    y = y + xs[:, 0] * p["d_skip"][None, :, None]
+    y = (y * jax.nn.silu(z[:, 0]))[:, None]            # (B,1,H,P)
+    b = x.shape[0]
+    out = y.reshape(b, 1, cfg.d_inner) @ p["w_out"]
+    return out, state

@@ -1,0 +1,183 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunkwise-parallel) and sLSTM
+(scalar-memory, strictly recurrent) — arXiv:2405.04517.
+
+mLSTM is a gated linear-attention cell: per head, memory C ∈ R^{P×P}
+updated as  C_t = f_t·C_{t−1} + i_t·(v_t k_tᵀ),  n_t = f_t·n_{t−1} + i_t·k_t,
+read  h_t = (C_t q_t) / max(|n_tᵀ q_t|, 1).  We run it chunk-parallel like
+SSD (matmul-heavy for the MXU).  sLSTM's recurrence is inherently
+sequential (exponential gating with a normalizer/stabilizer state) and is
+implemented with ``lax.scan`` over time.
+
+State caches: mLSTM (B, H, P, P) + (B, H, P); sLSTM (B, H, P) × 3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch.sharding import resolves, shard
+
+CHUNK = 256   # larger chunks: the (P,P) matrix summaries dominate memory
+
+
+def _heads(cfg: ArchConfig) -> tuple[int, int]:
+    h = cfg.n_heads
+    return h, cfg.d_inner // h        # (heads, per-head dim P)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_parallel(p: dict, cfg: ArchConfig, x: jax.Array,
+                   state: tuple | None = None):
+    """Full-sequence chunk-parallel mLSTM.  x: (B,S,D) → (B,S,D)."""
+    b, s, d = x.shape
+    h, pd = _heads(cfg)
+    q = (x @ p["wq"]).reshape(b, s, h, pd)
+    k = (x @ p["wk"]).reshape(b, s, h, pd) * pd ** -0.5
+    v = (x @ p["wv"]).reshape(b, s, h, pd)
+    gates = x @ p["w_gate"]                          # (B,S,2H)
+    logi, logf = jnp.split(gates, 2, axis=-1)
+    logf = jax.nn.log_sigmoid(logf.astype(jnp.float32))   # (B,S,H) ≤ 0
+    logi = logi.astype(jnp.float32)
+
+    nc = max(1, s // CHUNK)
+    c = s // nc
+    assert nc * c == s
+    qc = q.reshape(b, nc, c, h, pd)
+    kc = k.reshape(b, nc, c, h, pd)
+    vc = v.reshape(b, nc, c, h, pd)
+    fi = logf.reshape(b, nc, c, h)
+    ii = logi.reshape(b, nc, c, h)
+    cumf = jnp.cumsum(fi, axis=2)
+
+    # intra-chunk: M[i,j] = exp(cumf_i − cumf_j + i_j) for j ≤ i
+    expo = cumf[:, :, :, None, :] - cumf[:, :, None, :, :] + \
+        ii[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((c, c), bool))[None, None, :, :, None]
+    m = jnp.where(causal, jnp.exp(jnp.clip(expo, -60.0, 30.0)), 0.0)
+    qk = jnp.einsum("bgihp,bgjhp->bgijh", qc, kc)
+    w = (m * qk).astype(x.dtype)                 # gated linear attention
+    y_intra_v = jnp.einsum("bgijh,bgjhp->bgihp", w, vc)
+    n_q = w.sum(axis=3)                          # q·(Σ_j M[i,j] k_j)
+
+    # chunk summaries for the recurrence
+    tail = jnp.exp(jnp.clip(cumf[:, :, -1:, :] - cumf + ii, -60.0, 30.0))
+    c_sum = jnp.einsum("bgjh,bgjhp,bgjhq->bghpq", tail, vc, kc)  # (B,nc,H,P,P)
+    c_sum = shard(c_sum, "batch", None, None, "ssm_inner", None)
+    n_sum = jnp.einsum("bgjh,bgjhp->bghp", tail, kc)
+    cdec = jnp.exp(jnp.clip(cumf[:, :, -1, :], -60.0, 0.0))      # (B,nc,H)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, pd, pd), jnp.float32)
+        n0 = jnp.zeros((b, h, pd), jnp.float32)
+    else:
+        c0, n0 = (state[0].astype(jnp.float32), state[1].astype(jnp.float32))
+
+    def scan_fn(carry, inp):
+        cm, nm = carry
+        cs, ns, dec = inp
+        new_c = cm * dec[:, :, None, None] + cs
+        new_n = nm * dec[:, :, None] + ns
+        return (new_c, new_n), (cm, nm)
+
+    (cf, nf), (c_prev, n_prev) = jax.lax.scan(
+        scan_fn, (c0, n0),
+        (jnp.moveaxis(c_sum, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(n_sum, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(cdec, 1, 0).astype(jnp.float32)))
+    c_prev = jnp.moveaxis(c_prev, 0, 1)          # (B,nc,H,P,P) state at start
+    c_prev = shard(c_prev, "batch", None, None, "ssm_inner", None)
+    n_prev = jnp.moveaxis(n_prev, 0, 1)
+
+    into = jnp.exp(jnp.clip(cumf, -60.0, 0.0))   # decay chunk-start → i
+    y_inter = jnp.einsum("bgih,bghpq,bgihq->bgihp",
+                         into, c_prev.astype(x.dtype) * 1.0, qc)
+    n_inter = jnp.einsum("bgih,bghp,bgihp->bgih",
+                         into, n_prev.astype(x.dtype) * 1.0, qc)
+
+    num = (y_intra_v + y_inter).reshape(b, s, h, pd)
+    den = (n_q + n_inter).reshape(b, s, h)
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    y_seq = "seq" if resolves(h, "heads") else "act_seq"
+    y = shard(y.astype(x.dtype), "batch", y_seq, "heads", None)
+    out = y.reshape(b, s, cfg.d_inner) @ p["w_out"]
+    return out, (cf.astype(x.dtype), nf.astype(x.dtype))
+
+
+def mlstm_decode_step(p: dict, cfg: ArchConfig, x: jax.Array, state):
+    """One-token mLSTM update.  x: (B,1,D)."""
+    b = x.shape[0]
+    h, pd = _heads(cfg)
+    cm, nm = state
+    q = (x @ p["wq"]).reshape(b, h, pd)
+    k = (x @ p["wk"]).reshape(b, h, pd) * pd ** -0.5
+    v = (x @ p["wv"]).reshape(b, h, pd)
+    gates = (x @ p["w_gate"]).reshape(b, 2 * h)
+    logi, logf = jnp.split(gates, 2, axis=-1)
+    f = jnp.exp(jax.nn.log_sigmoid(logf.astype(jnp.float32)))
+    i = jnp.exp(jnp.clip(logi.astype(jnp.float32), -60.0, 30.0))
+    cm = cm * f[..., None, None] + i[..., None, None] * \
+        jnp.einsum("bhp,bhq->bhpq", v, k)
+    nm = nm * f[..., None] + i[..., None] * k
+    num = jnp.einsum("bhpq,bhq->bhp", cm, q)
+    den = jnp.einsum("bhp,bhp->bh", nm, q)
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    out = y.reshape(b, 1, cfg.d_inner).astype(x.dtype) @ p["w_out"]
+    return out, (cm.astype(x.dtype), nm.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def _slstm_cell(p, h_prev, c_prev, n_prev, xt):
+    """One sLSTM step for all heads.  Shapes: (B, H, P)."""
+    b, hh, pd = h_prev.shape
+    inp = jnp.concatenate([xt.reshape(b, hh, pd), h_prev], axis=-1)
+    zifo = jnp.einsum("bhp,hpq->bhq", inp, p["w_rec"]) + p["b_rec"]
+    z, i, f, o = jnp.split(zifo, 4, axis=-1)        # (B,H,P) each
+    z = jnp.tanh(z)
+    i = jnp.exp(jnp.clip(i.astype(jnp.float32), -60.0, 20.0))
+    f = jnp.exp(jax.nn.log_sigmoid(f.astype(jnp.float32)))
+    o = jax.nn.sigmoid(o)
+    c = f * c_prev + i * z.astype(jnp.float32)
+    n = f * n_prev + i
+    h = o * (c / jnp.maximum(n, 1.0)).astype(o.dtype)
+    return h, c, n
+
+
+def slstm_scan(p: dict, cfg: ArchConfig, x: jax.Array,
+               state: tuple | None = None):
+    """Sequential sLSTM over the sequence.  x: (B,S,D) → (B,S,D)."""
+    b, s, d = x.shape
+    h, pd = cfg.n_heads, d // cfg.n_heads
+    xt = x @ p["w_in"]                               # (B,S,D)
+    if state is None:
+        h0 = jnp.zeros((b, h, pd), x.dtype)
+        c0 = jnp.zeros((b, h, pd), jnp.float32)
+        n0 = jnp.zeros((b, h, pd), jnp.float32)
+    else:
+        h0, c0, n0 = state
+
+    def step(carry, x_t):
+        hp, cp, np_ = carry
+        hn, cn, nn = _slstm_cell(p, hp, cp, np_, x_t)
+        return (hn, cn, nn), hn
+
+    (hf, cf, nf), ys = jax.lax.scan(step, (h0, c0, n0),
+                                    jnp.moveaxis(xt, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d)
+    out = y @ p["w_out"]
+    return out, (hf, cf, nf)
+
+
+def slstm_decode_step(p: dict, cfg: ArchConfig, x: jax.Array, state):
+    b, _, d = x.shape
+    xt = (x @ p["w_in"])[:, 0]
+    h0, c0, n0 = state
+    hn, cn, nn = _slstm_cell(p, h0, c0, n0, xt)
+    out = hn.reshape(b, 1, d) @ p["w_out"]
+    return out, (hn, cn, nn)

@@ -1,0 +1,130 @@
+"""Roofline derivation from compiled dry-run artifacts (no real hardware).
+
+Terms per (arch × shape × mesh), all **per device** (XLA cost/memory
+analyses are post-SPMD-partitioning, i.e. already per device):
+
+    compute_s    = HLO_FLOPs / PEAK_FLOPS_BF16
+    memory_s     = HLO_bytes / HBM_BW
+    collective_s = collective_bytes / ICI_BW
+
+``cost_analysis`` counts a ``while`` (scan) body exactly once, so FLOPs /
+bytes come from the **delta method**: compile the step with layers fully
+*unrolled* at two small layer counts L₁ < L₂, then extrapolate
+``base + L·per_layer`` to the full depth.  Collective bytes are parsed out
+of the optimized HLO (result-shape bytes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute), with while-body
+collectives scaled by the known trip count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_OP_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*"
+                      r"(?:->\s*[^{]*)?\{\s*$")
+
+
+@dataclasses.dataclass
+class Collective:
+    computation: str
+    kind: str
+    dtype: str
+    shape: tuple[int, ...]
+    bytes: int
+
+
+def parse_collectives(hlo_text: str) -> list[Collective]:
+    """Extract every collective op with its result size, tagged by the HLO
+    computation it lives in (entry vs while-body etc.)."""
+    out: list[Collective] = []
+    comp = "entry"
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and "{" in line:
+            comp = m.group(1)
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            if "-done(" in line:
+                continue          # matching -start already counted
+            shape = tuple(int(x) for x in dims.split(",")) if dims else ()
+            nbytes = _DTYPE_BYTES.get(dtype, 4)
+            for d in shape:
+                nbytes *= d
+            out.append(Collective(comp, kind, dtype, shape, nbytes))
+    return out
+
+
+def collective_bytes(hlo_text: str, body_trip_count: int = 1) -> dict:
+    """Total collective bytes; while-body collectives × trip count.
+
+    Any collective inside a non-entry computation that looks like a loop
+    body (name contains 'while' or 'body') is scaled.
+    """
+    per_kind: dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    total = 0.0
+    for c in parse_collectives(hlo_text):
+        mult = body_trip_count if ("body" in c.computation
+                                   or "while" in c.computation) else 1
+        per_kind[c.kind] += c.bytes * mult
+        total += c.bytes * mult
+    per_kind["total"] = total
+    return per_kind
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float               # per device
+    hbm_bytes: float           # per device
+    coll_bytes: float          # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+
+    @classmethod
+    def build(cls, flops: float, hbm_bytes: float,
+              coll_bytes: float) -> "RooflineTerms":
+        c = flops / PEAK_FLOPS_BF16
+        m = hbm_bytes / HBM_BW
+        l = coll_bytes / ICI_BW
+        names = {"compute": c, "memory": m, "collective": l}
+        return cls(flops, hbm_bytes, coll_bytes, c, m, l,
+                   bottleneck=max(names, key=names.get))
+
+
+def extrapolate(v1: float, v2: float, l1: int, l2: int,
+                l_full: float) -> float:
+    """base + L·per_layer through (l1, v1), (l2, v2) evaluated at l_full."""
+    per = (v2 - v1) / (l2 - l1)
+    base = v1 - per * l1
+    return max(base + per * l_full, 0.0)
+
+
+def model_flops(cfg, shape_name: str, seq: int, batch: int) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D for training, 2·N_active·D for serving
+    (decode: D = batch tokens per step)."""
+    n = cfg.active_param_count()
+    if shape_name.startswith("train"):
+        return 6.0 * n * seq * batch
+    if shape_name.startswith("prefill"):
+        return 2.0 * n * seq * batch
+    return 2.0 * n * batch          # decode: one token per sequence

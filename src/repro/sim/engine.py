@@ -1,0 +1,543 @@
+"""Discrete-event simulator of one edge base station + cloud FaaS (§3.3).
+
+Faithfully models the paper's runtime architecture:
+
+* a **task scheduler** routing each arriving task to the edge queue, the
+  cloud queue, or dropping it (policy-driven, §5–6);
+* an **edge executor**: synchronous, single-stream (Jetson-class GPUs have
+  no concurrent kernel execution), JIT deadline check before execution;
+* a **cloud executor**: a thread pool of ``cloud_concurrency`` slots over a
+  trigger-time priority queue (FIFO ≙ trigger=now for baselines), JIT check
+  at dispatch;
+* a **window monitor** maintaining per-model tumbling windows for the QoE
+  metric and driving the GEMS rescheduler (Alg. 1).
+
+Time unit: milliseconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.schedulers import AdaptiveEstimator, Policy
+from repro.core.task import ModelProfile, Outcome, Task
+from repro.sim.network import CloudLatencyModel, EdgeLatencyModel
+
+
+@dataclasses.dataclass
+class Arrival:
+    time: float
+    model: ModelProfile
+    drone: int = 0
+
+
+@dataclasses.dataclass
+class ModelStats:
+    generated: int = 0
+    edge_success: int = 0
+    cloud_success: int = 0
+    edge_miss: int = 0
+    cloud_miss: int = 0
+    dropped: int = 0
+    stolen: int = 0
+    migrated: int = 0
+    gems_rescheduled: int = 0
+    qos_utility: float = 0.0
+    edge_utility: float = 0.0
+    cloud_utility: float = 0.0
+    qoe_utility: float = 0.0
+    windows_met: int = 0
+    windows_total: int = 0
+
+    @property
+    def completed(self) -> int:
+        return self.edge_success + self.cloud_success
+
+
+@dataclasses.dataclass
+class Results:
+    policy: str
+    duration: float
+    per_model: dict[str, ModelStats]
+    edge_busy: float = 0.0
+
+    def _sum(self, attr: str) -> float:
+        return sum(getattr(s, attr) for s in self.per_model.values())
+
+    @property
+    def generated(self) -> int: return int(self._sum("generated"))
+    @property
+    def completed(self) -> int: return int(self._sum("completed"))
+    @property
+    def completion_rate(self) -> float:
+        return self.completed / max(self.generated, 1)
+    @property
+    def qos_utility(self) -> float: return self._sum("qos_utility")
+    @property
+    def edge_utility(self) -> float: return self._sum("edge_utility")
+    @property
+    def cloud_utility(self) -> float: return self._sum("cloud_utility")
+    @property
+    def qoe_utility(self) -> float: return self._sum("qoe_utility")
+    @property
+    def total_utility(self) -> float:
+        return self.qos_utility + self.qoe_utility
+    @property
+    def stolen(self) -> int: return int(self._sum("stolen"))
+    @property
+    def migrated(self) -> int: return int(self._sum("migrated"))
+    @property
+    def gems_rescheduled(self) -> int: return int(self._sum("gems_rescheduled"))
+    @property
+    def edge_utilization(self) -> float:
+        return self.edge_busy / max(self.duration, 1e-9)
+
+    def summary(self) -> str:
+        return (f"{self.policy:8s} tasks={self.completed}/{self.generated} "
+                f"({100 * self.completion_rate:.1f}%) QoS={self.qos_utility:.0f} "
+                f"QoE={self.qoe_utility:.0f} total={self.total_utility:.0f} "
+                f"edge_util={100 * self.edge_utilization:.0f}% "
+                f"stolen={self.stolen} migrated={self.migrated} "
+                f"gems={self.gems_rescheduled}")
+
+
+class _WindowState:
+    """Per-model tumbling-window QoE accounting (Eqn 2 / Alg. 1 state)."""
+
+    __slots__ = ("end", "width", "lam", "lam_hat", "prev_lam")
+
+    def __init__(self, width: float):
+        self.end = width
+        self.width = width
+        self.lam = 0
+        self.lam_hat = 0
+        self.prev_lam = 0     # arrivals seen in the previous window
+
+    @property
+    def rate(self) -> float:
+        return self.lam_hat / self.lam if self.lam else 1.0
+
+    def winnable(self, alpha: float, now: float) -> bool:
+        """GEMS-B: can α̂ still reach α if every remaining task in this
+        window succeeds?  Remaining count is estimated from the previous
+        window's arrivals, prorated by the time left."""
+        frac_left = max(0.0, (self.end - now) / self.width)
+        remaining = max(self.prev_lam, self.lam) * frac_left
+        return (self.lam_hat + remaining) >= alpha * (self.lam + remaining) \
+            - 1e-9
+
+
+class Simulator:
+    """One edge base station and its share of the cloud FaaS."""
+
+    def __init__(self, policy: Policy, arrivals: list[Arrival],
+                 duration: float, *,
+                 cloud_concurrency: int = 16,
+                 edge_model: Optional[EdgeLatencyModel] = None,
+                 cloud_model: Optional[CloudLatencyModel] = None,
+                 seed: int = 0):
+        self.policy = policy
+        self.arrivals = sorted(arrivals, key=lambda a: a.time)
+        self.duration = duration
+        self.rng = np.random.default_rng(seed)
+        self.edge_model = edge_model or EdgeLatencyModel()
+        self.cloud_model = cloud_model or CloudLatencyModel()
+        self.cloud_slots = cloud_concurrency
+
+        self.profiles: dict[str, ModelProfile] = {}
+        for a in self.arrivals:
+            self.profiles.setdefault(a.model.name, a.model)
+        self.min_edge_t = min((m.t_edge for m in self.profiles.values()),
+                              default=0.0)
+
+        # runtime state -------------------------------------------------
+        self._heap: list[tuple[float, int, str, object]] = []
+        self._seq = 0
+        self.now = 0.0
+        self.edge_queue: list[Task] = []       # sorted by policy.edge_key
+        self.edge_current: Optional[Task] = None
+        self.edge_busy_until = 0.0
+        self.edge_busy_total = 0.0
+        self.cloud_pending: list[Task] = []    # sorted by trigger time
+        self.cloud_inflight = 0
+        self._triggers: dict[int, float] = {}  # task uid -> trigger time
+        self.adaptive: dict[str, AdaptiveEstimator] = {
+            n: AdaptiveEstimator(static=m.t_cloud)
+            for n, m in self.profiles.items()}
+        self.windows: dict[str, _WindowState] = {
+            n: _WindowState(m.qoe_window) for n, m in self.profiles.items()
+            if m.qoe_alpha > 0}
+        self.stats = {n: ModelStats() for n in self.profiles}
+        self.tasks: list[Task] = []
+        self._uid = 0
+
+    # ------------------------------------------------------------------
+    # event plumbing
+    # ------------------------------------------------------------------
+    def _push(self, time: float, kind: str, data: object = None) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (time, self._seq, kind, data))
+
+    def _t_cloud(self, m: ModelProfile) -> float:
+        """Scheduler's current cloud-latency estimate for ``m`` (§5.4)."""
+        if self.policy.adaptive:
+            return self.adaptive[m.name].current
+        return m.t_cloud
+
+    # ------------------------------------------------------------------
+    # edge queue helpers
+    # ------------------------------------------------------------------
+    def _edge_start_time(self) -> float:
+        return max(self.edge_busy_until, self.now)
+
+    def _insert_pos(self, task: Task) -> int:
+        key = self.policy.edge_key(task)
+        lo = 0
+        for i, t in enumerate(self.edge_queue):
+            if self.policy.edge_key(t) <= key:
+                lo = i + 1
+        return lo
+
+    def _projected(self, queue: list[Task]) -> list[float]:
+        """Projected completion time of each queued task (§5.2)."""
+        cur = self._edge_start_time()
+        out = []
+        for t in queue:
+            cur += t.model.t_edge
+            out.append(cur)
+        return out
+
+    def _feasible_at(self, queue: list[Task], pos: int, task: Task) -> bool:
+        wait = self._edge_start_time() + sum(
+            t.model.t_edge for t in queue[:pos])
+        return wait + task.model.t_edge <= task.sched_deadline
+
+    def _victims_of_insert(self, pos: int, task: Task) -> list[Task]:
+        """Existing tasks newly pushed past their deadline by the insert."""
+        before = self._projected(self.edge_queue)
+        shifted = task.model.t_edge
+        victims = []
+        for i in range(pos, len(self.edge_queue)):
+            t = self.edge_queue[i]
+            if before[i] <= t.sched_deadline < before[i] + shifted:
+                victims.append(t)
+        return victims
+
+    # ------------------------------------------------------------------
+    # routing (task scheduler thread, §3.3)
+    # ------------------------------------------------------------------
+    def _route(self, task: Task) -> None:
+        p = self.policy
+        if not p.use_edge:
+            self._offer_cloud(task) or self._drop(task)
+            return
+        if not p.use_cloud and not p.edge_feasibility_check:
+            self._edge_insert(task, self._insert_pos(task))   # edge-only
+            return
+        if p.sota1:
+            self._route_sota1(task)
+            return
+        if p.sota2:
+            self._route_sota2(task)
+            return
+
+        pos = self._insert_pos(task)
+        if self._feasible_at(self.edge_queue, pos, task):
+            if p.migration:
+                victims = self._victims_of_insert(pos, task)
+                if victims and not p.migration_decision(
+                        task, victims, self.now,
+                        lambda m: self._t_cloud(m)):
+                    self._offer_cloud(task) or self._drop(task)
+                    return
+                for v in victims:
+                    self.edge_queue.remove(v)
+                    v.migrated = True
+                    self.stats[v.model.name].migrated += 1
+                    self._offer_cloud(v) or self._drop(v)
+                self._edge_insert(task, self._insert_pos(task))
+            else:
+                self._edge_insert(task, pos)
+        else:
+            self._offer_cloud(task) or self._drop(task)
+
+    def _route_sota1(self, task: Task) -> None:
+        """Kalmia+D3 adaptation: urgent/non-urgent, 10 % deadline buffer."""
+        pos = self._insert_pos(task)
+        if self._feasible_at(self.edge_queue, pos, task):
+            self._edge_insert(task, pos)
+            return
+        urgent = task.model.deadline <= self.policy.urgent_deadline
+        if not urgent:
+            task.deadline_ext = 0.1 * task.model.deadline
+            pos = self._insert_pos(task)
+            if self._feasible_at(self.edge_queue, pos, task):
+                self._edge_insert(task, pos)
+                return
+        self._offer_cloud(task) or self._drop(task)
+
+    def _route_sota2(self, task: Task) -> None:
+        """Dedas adaptation: exec-time priority + average-completion-time.
+
+        Victim count >1 → cloud.  Exactly one violation → keep the schedule
+        whose mean completion time (ACT) over all queued tasks is lower;
+        inserting nearly always raises ACT, so such tasks go to the cloud —
+        matching the paper's observation that SOTA2 leans on the cloud.
+        """
+        pos = self._insert_pos(task)
+        own_ok = self._feasible_at(self.edge_queue, pos, task)
+        victims = self._victims_of_insert(pos, task)
+        nviol = len(victims) + (0 if own_ok else 1)
+        if nviol == 0:
+            self._edge_insert(task, pos)
+            return
+        if nviol > 1:
+            self._offer_cloud(task) or self._drop(task)
+            return
+        before = self._projected(self.edge_queue)
+        after_q = self.edge_queue[:pos] + [task] + self.edge_queue[pos:]
+        after = self._projected(after_q)
+        act_before = sum(before) / len(before) if before else float("inf")
+        act_after = sum(after) / len(after)
+        if own_ok and act_after <= act_before:
+            self._edge_insert(task, pos)
+        else:
+            self._offer_cloud(task) or self._drop(task)
+
+    # ------------------------------------------------------------------
+    # edge executor
+    # ------------------------------------------------------------------
+    def _edge_insert(self, task: Task, pos: int) -> None:
+        self.edge_queue.insert(pos, task)
+        self._edge_dispatch()
+
+    def _edge_dispatch(self) -> None:
+        if self.edge_current is not None:
+            return
+        # JIT check: drop heads that can no longer meet their deadline.
+        while self.edge_queue:
+            head = self.edge_queue[0]
+            if self.now + head.model.t_edge > head.sched_deadline:
+                self._drop(self.edge_queue.pop(0))
+            else:
+                break
+        task = self._try_steal() if self.policy.stealing else None
+        if task is None:
+            if not self.edge_queue:
+                return
+            task = self.edge_queue.pop(0)
+        dur = self.edge_model.sample(self.rng, task.model.t_edge)
+        self.edge_current = task
+        self.edge_busy_until = self.now + dur
+        self.edge_busy_total += dur
+        self._push(self.now + dur, "edge_done", task)
+
+    def _try_steal(self) -> Optional[Task]:
+        """Work stealing from the cloud queue into edge slack (§5.3)."""
+        if self.edge_queue:
+            head = self.edge_queue[0]
+            slack = head.abs_deadline - (self.now + head.model.t_edge)
+            if slack <= self.min_edge_t:
+                return None
+            proj = self._projected(self.edge_queue)
+            max_delay = min(t.sched_deadline - c
+                            for t, c in zip(self.edge_queue, proj))
+            if max_delay <= 0:
+                return None
+        else:
+            max_delay = float("inf")
+        eligible = [c for c in self.cloud_pending
+                    if c.model.t_edge <= max_delay
+                    and self.now + c.model.t_edge <= c.abs_deadline]
+        if not eligible:
+            return None
+        # negative-cloud-utility (steal-only) tasks first, then rank.
+        eligible.sort(key=lambda c: (not c.steal_only,
+                                     -c.model.steal_rank()))
+        task = eligible[0]
+        self.cloud_pending.remove(task)
+        task.stolen = True
+        self.stats[task.model.name].stolen += 1
+        return task
+
+    # ------------------------------------------------------------------
+    # cloud executor (FaaS thread pool + trigger-time queue)
+    # ------------------------------------------------------------------
+    def _offer_cloud(self, task: Task) -> bool:
+        acc = self.policy.offer_cloud(task, self.now,
+                                      self._t_cloud(task.model))
+        if not acc.accept:
+            if self.policy.adaptive and self.policy.use_cloud:
+                self.adaptive[task.model.name].on_skip(self.now)
+            return False
+        task.steal_only = acc.steal_only
+        self._triggers[task.uid] = acc.trigger
+        i = 0
+        while i < len(self.cloud_pending) and \
+                self._triggers[self.cloud_pending[i].uid] <= acc.trigger:
+            i += 1
+        self.cloud_pending.insert(i, task)
+        if acc.trigger <= self.now:
+            self._cloud_dispatch()
+        else:
+            self._push(acc.trigger, "cloud_check", None)
+        return True
+
+    def _cloud_dispatch(self) -> None:
+        while self.cloud_inflight < self.cloud_slots and self.cloud_pending:
+            task = self.cloud_pending[0]
+            if self._triggers[task.uid] > self.now:
+                break
+            self.cloud_pending.pop(0)
+            if task.steal_only:
+                self._drop(task)            # not stolen in time → JIT drop
+                continue
+            est = self._t_cloud(task.model)
+            if self.now + est > task.abs_deadline:
+                self._drop(task)            # JIT deadline check
+                if self.policy.adaptive:
+                    self.adaptive[task.model.name].on_skip(self.now)
+                continue
+            if self.policy.adaptive:
+                self.adaptive[task.model.name].on_sent()
+            dur = self.cloud_model.sample(self.rng, task.model.t_cloud,
+                                          self.now)
+            self.cloud_inflight += 1
+            self._push(self.now + dur, "cloud_done", (task, dur))
+
+    # ------------------------------------------------------------------
+    # completion, drops, QoE windows (window-monitor thread + Alg. 1)
+    # ------------------------------------------------------------------
+    def _drop(self, task: Task) -> bool:
+        task.outcome = Outcome.DROPPED
+        task.finished = self.now
+        self.stats[task.model.name].dropped += 1
+        self._window_update(task, success=False)
+        return True
+
+    def _finish(self, task: Task, where: str) -> None:
+        task.finished = self.now
+        ok = self.now <= task.abs_deadline
+        st = self.stats[task.model.name]
+        if where == "edge":
+            task.outcome = Outcome.EDGE_SUCCESS if ok else Outcome.EDGE_MISS
+            st.edge_success += ok
+            st.edge_miss += (not ok)
+            st.edge_utility += task.utility()
+        else:
+            task.outcome = Outcome.CLOUD_SUCCESS if ok else Outcome.CLOUD_MISS
+            st.cloud_success += ok
+            st.cloud_miss += (not ok)
+            st.cloud_utility += task.utility()
+        st.qos_utility += task.utility()
+        self._window_update(task, success=ok)
+
+    def _window_update(self, task: Task, success: bool) -> None:
+        wm = self.windows.get(task.model.name)
+        if wm is None:
+            return
+        self._close_windows(task.model, until=self.now)
+        wm.lam += 1
+        wm.lam_hat += success
+        if self.policy.gems and wm.rate < task.model.qoe_alpha:
+            lost = self.policy.gems_budget and not wm.winnable(
+                task.model.qoe_alpha, self.now)
+            # GEMS-B: once the window is mathematically lost, stop the
+            # Alg-1 flood; only salvage tasks already doomed on the edge
+            # (pure QoS rescue — no QoE can be recovered this window)
+            self._gems_rescan(task.model, only_doomed=lost)
+
+    def _close_windows(self, m: ModelProfile, until: float) -> None:
+        wm = self.windows[m.name]
+        st = self.stats[m.name]
+        while until > wm.end:
+            if wm.lam > 0:
+                st.windows_total += 1
+                if wm.rate >= m.qoe_alpha:
+                    st.windows_met += 1
+                    st.qoe_utility += m.qoe_beta
+            wm.prev_lam = wm.lam
+            wm.lam = wm.lam_hat = 0
+            wm.end += wm.width
+
+    def _gems_rescan(self, m: ModelProfile,
+                     only_doomed: bool = False) -> None:
+        """Alg. 1 lines 9–14: push lagging model's edge tasks to the cloud.
+
+        ``only_doomed`` (GEMS-B) restricts the move to tasks whose
+        projected *edge* completion already misses their deadline.
+        """
+        if m.gamma_cloud <= 0:
+            return
+        est = self._t_cloud(m)
+        if only_doomed:
+            proj = self._projected(self.edge_queue)
+            doomed = {t.uid for t, c in zip(self.edge_queue, proj)
+                      if c > t.sched_deadline}
+        moved = [t for t in self.edge_queue
+                 if t.model.name == m.name
+                 and self.now + est <= t.abs_deadline
+                 and (not only_doomed or t.uid in doomed)]
+        for t in moved:
+            self.edge_queue.remove(t)
+            t.gems_rescheduled = True
+            self.stats[m.name].gems_rescheduled += 1
+            self._triggers[t.uid] = self.now
+            self.cloud_pending.insert(
+                self._bisect_trigger(self.now), t)
+        if moved:
+            self._cloud_dispatch()
+
+    def _bisect_trigger(self, trig: float) -> int:
+        i = 0
+        while i < len(self.cloud_pending) and \
+                self._triggers[self.cloud_pending[i].uid] <= trig:
+            i += 1
+        return i
+
+    # ------------------------------------------------------------------
+    # main loop
+    # ------------------------------------------------------------------
+    def run(self) -> Results:
+        order = list(range(len(self.arrivals)))
+        for i in order:
+            a = self.arrivals[i]
+            self._push(a.time, "arrival", a)
+        while self._heap:
+            time, _, kind, data = heapq.heappop(self._heap)
+            self.now = time
+            if kind == "arrival":
+                a: Arrival = data  # type: ignore[assignment]
+                self._uid += 1
+                task = Task(uid=self._uid, model=a.model,
+                            created=a.time, drone=a.drone)
+                self.tasks.append(task)
+                self.stats[a.model.name].generated += 1
+                self._route(task)
+            elif kind == "edge_done":
+                task = data  # type: ignore[assignment]
+                self.edge_current = None
+                self._finish(task, "edge")
+                self._edge_dispatch()
+            elif kind == "cloud_done":
+                task, dur = data  # type: ignore[misc]
+                self.cloud_inflight -= 1
+                if self.policy.adaptive:
+                    self.adaptive[task.model.name].observe(dur)
+                self._finish(task, "cloud")
+                self._cloud_dispatch()
+            elif kind == "cloud_check":
+                self._cloud_dispatch()
+        self.now = self.duration
+        for name, wm in self.windows.items():
+            self._close_windows(self.profiles[name], until=self.duration + 1)
+        return Results(policy=self.policy.name, duration=self.duration,
+                       per_model=self.stats, edge_busy=self.edge_busy_total)
+
+
+def run_policy(policy: Policy, arrivals: list[Arrival], duration: float,
+               **kw) -> Results:
+    return Simulator(policy, arrivals, duration, **kw).run()

@@ -1,0 +1,426 @@
+"""Fleet-scale SPMD scheduler simulation (paper §8.6, TPU-native).
+
+The paper weak-scales its platform to 84 drones / 28 edges by replicating
+containers.  Here the *entire fleet* is one JAX program: per-edge scheduler
+state is a PyTree of arrays with a leading ``fleet`` axis, each tick applies
+the decision kernels of :mod:`repro.core.jax_sched` under ``vmap``, and the
+fleet axis is sharded across devices with ``NamedSharding`` — the same
+program scales from 1 edge on CPU to 10⁵ edges on a pod.
+
+Modeling simplifications vs the event-driven oracle (documented per §Design):
+
+* fixed time step ``dt`` (default 25 ms) instead of an event heap;
+* deterministic execution fractions (edge ``edge_frac·t``, cloud
+  ``cloud_frac·t̂ + θ(t)``) — variability enters via the shaped θ trace;
+* the cloud is elastic: a dispatched request's outcome is resolved at its
+  trigger time (no slot contention);
+* no DEMS-A estimator in the tick loop (validated separately).
+
+Supported policy flags: EDF-E+C routing, DEM migration, DEMS work stealing
+with trigger-time cloud queue and steal-only parking, GEMS window
+rescheduling.  ``tests/test_fleet_jax.py`` checks single-edge agreement with
+the discrete-event engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import jax_sched as js
+from repro.core.task import ModelProfile
+
+EDGE_CAP = 32
+CLOUD_CAP = 64
+SUBSTEPS = 6      # max edge executor actions (drops/starts) per tick
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetPolicy:
+    """Trace-time policy flags (subset of core.schedulers.Policy)."""
+
+    migration: bool = False
+    stealing: bool = False
+    gems: bool = False
+    use_cloud: bool = True
+    cloud_margin: float = 50.0
+
+    @classmethod
+    def from_name(cls, name: str) -> "FleetPolicy":
+        return {
+            "EDF": cls(use_cloud=False),
+            "EDF-E+C": cls(),
+            "DEM": cls(migration=True),
+            "DEMS": cls(migration=True, stealing=True),
+            "GEMS": cls(migration=True, stealing=True, gems=True),
+        }[name]
+
+
+class Profiles(NamedTuple):
+    """Array-of-struct model table (M models)."""
+
+    t_edge: jax.Array
+    t_cloud: jax.Array
+    deadline: jax.Array
+    gamma_e: jax.Array
+    gamma_c: jax.Array
+    cost_e: jax.Array
+    cost_c: jax.Array
+    steal_rank: jax.Array
+    qoe_alpha: jax.Array
+    qoe_beta: jax.Array
+    qoe_window: jax.Array
+
+    @classmethod
+    def build(cls, models: list[ModelProfile]) -> "Profiles":
+        f = jnp.asarray
+        return cls(
+            t_edge=f([m.t_edge for m in models], jnp.float32),
+            t_cloud=f([m.t_cloud for m in models], jnp.float32),
+            deadline=f([m.deadline for m in models], jnp.float32),
+            gamma_e=f([m.gamma_edge for m in models], jnp.float32),
+            gamma_c=f([m.gamma_cloud for m in models], jnp.float32),
+            cost_e=f([m.cost_edge for m in models], jnp.float32),
+            cost_c=f([m.cost_cloud for m in models], jnp.float32),
+            steal_rank=f([m.steal_rank() for m in models], jnp.float32),
+            qoe_alpha=f([m.qoe_alpha for m in models], jnp.float32),
+            qoe_beta=f([m.qoe_beta for m in models], jnp.float32),
+            qoe_window=f([m.qoe_window for m in models], jnp.float32),
+        )
+
+
+class EdgeState(NamedTuple):
+    """Per-edge scheduler state (leading fleet axis added by vmap)."""
+
+    eq: js.EdgeQueue
+    cq: js.CloudQueue
+    cq_model: jax.Array        # i32[Qc] model ids of cloud-queued tasks
+    busy_rem: jax.Array        # f32[] remaining edge execution time
+    seq: jax.Array             # i32[] insertion counter
+    # stats
+    n_success: jax.Array       # i32[M]
+    n_miss: jax.Array          # i32[M]
+    n_drop: jax.Array          # i32[M]
+    n_stolen: jax.Array        # i32[M]
+    n_edge_exec: jax.Array     # i32[M] tasks executed on the edge
+    qos_utility: jax.Array     # f32[]
+    # GEMS window state
+    lam: jax.Array             # i32[M]
+    lam_hat: jax.Array         # i32[M]
+    win_end: jax.Array         # f32[M]
+    qoe_utility: jax.Array     # f32[]
+    windows_met: jax.Array     # i32[M]
+
+
+def init_state(prof: Profiles) -> EdgeState:
+    m = prof.t_edge.shape[0]
+    zi = jnp.zeros(m, jnp.int32)
+    return EdgeState(
+        eq=js.empty_edge_queue(EDGE_CAP), cq=js.empty_cloud_queue(CLOUD_CAP),
+        cq_model=jnp.zeros(CLOUD_CAP, jnp.int32),
+        busy_rem=jnp.zeros(()), seq=jnp.zeros((), jnp.int32),
+        n_success=zi, n_miss=zi, n_drop=zi, n_stolen=zi, n_edge_exec=zi,
+        qos_utility=jnp.zeros(()),
+        lam=zi, lam_hat=zi, win_end=prof.qoe_window,
+        qoe_utility=jnp.zeros(()), windows_met=zi)
+
+
+# ---------------------------------------------------------------------------
+# per-tick logic for one edge
+# ---------------------------------------------------------------------------
+
+def _resolve_cloud(st: EdgeState, prof: Profiles, now, theta,
+                   cloud_frac, pol: FleetPolicy) -> EdgeState:
+    """Dispatch all matured cloud tasks (elastic FaaS → resolve now)."""
+    mature = st.cq.valid & (st.cq.trigger <= now)
+    run = mature & ~st.cq.steal_only
+    act = cloud_frac * prof.t_cloud[st.cq_model] + theta
+    success = run & (now + act <= st.cq.deadline)
+    util = jnp.where(success, prof.gamma_c[st.cq_model],
+                     jnp.where(run, -prof.cost_c[st.cq_model], 0.0)).sum()
+    add = functools.partial(jax.ops.segment_sum, num_segments=prof.t_edge.shape[0])
+    n_success = st.n_success + add(success.astype(jnp.int32), st.cq_model)
+    n_miss = st.n_miss + add((run & ~success).astype(jnp.int32), st.cq_model)
+    dropped = mature & st.cq.steal_only      # not stolen in time (§5.3)
+    n_drop = st.n_drop + add(dropped.astype(jnp.int32), st.cq_model)
+    st = st._replace(cq=st.cq._replace(valid=st.cq.valid & ~mature),
+                     n_success=n_success, n_miss=n_miss, n_drop=n_drop,
+                     qos_utility=st.qos_utility + util)
+    if pol.gems:
+        st = _gems_bulk(st, prof, now, success, run | dropped, st.cq_model)
+    return st
+
+
+def _gems_bulk(st: EdgeState, prof: Profiles, now, success_mask, done_mask,
+               model_ids) -> EdgeState:
+    """Window counters for a batch of task completions/drops."""
+    m = prof.t_edge.shape[0]
+    add = functools.partial(jax.ops.segment_sum, num_segments=m)
+    lam = st.lam + add(done_mask.astype(jnp.int32), model_ids)
+    lam_hat = st.lam_hat + add(success_mask.astype(jnp.int32), model_ids)
+    return st._replace(lam=lam, lam_hat=lam_hat)
+
+
+def _gems_act(st: EdgeState, prof: Profiles, now) -> EdgeState:
+    """Alg. 1: reschedule lagging models, close expired windows."""
+    m = prof.t_edge.shape[0]
+    rate = st.lam_hat / jnp.maximum(st.lam, 1)
+    lagging = (st.lam > 0) & (rate < prof.qoe_alpha)
+
+    # move pending edge tasks of lagging models to the cloud: with an
+    # elastic cloud and trigger=now, resolve immediately.
+    feas = now + prof.t_cloud[st.eq.model] <= st.eq.deadline
+    move = (st.eq.valid & lagging[st.eq.model]
+            & (prof.gamma_c[st.eq.model] > 0) & feas)
+    act = prof.t_cloud[st.eq.model]          # deterministic estimate
+    success = move & (now + act <= st.eq.deadline)
+    add = functools.partial(jax.ops.segment_sum, num_segments=m)
+    util = jnp.where(success, prof.gamma_c[st.eq.model],
+                     jnp.where(move, -prof.cost_c[st.eq.model], 0.0)).sum()
+    st = st._replace(
+        eq=js.edge_remove(st.eq, move),
+        n_success=st.n_success + add(success.astype(jnp.int32), st.eq.model),
+        n_miss=st.n_miss + add((move & ~success).astype(jnp.int32),
+                               st.eq.model),
+        qos_utility=st.qos_utility + util)
+    st = _gems_bulk(st, prof, now, success, move, st.eq.model)
+
+    # tumbling-window close (Eqn 2)
+    expired = now > st.win_end
+    met = expired & (st.lam > 0) & (st.lam_hat / jnp.maximum(st.lam, 1)
+                                    >= prof.qoe_alpha)
+    qoe = jnp.where(met, prof.qoe_beta, 0.0).sum()
+    return st._replace(
+        lam=jnp.where(expired, 0, st.lam),
+        lam_hat=jnp.where(expired, 0, st.lam_hat),
+        win_end=jnp.where(expired, st.win_end + prof.qoe_window, st.win_end),
+        qoe_utility=st.qoe_utility + qoe,
+        windows_met=st.windows_met + met.astype(jnp.int32))
+
+
+def _offer_cloud(st: EdgeState, prof: Profiles, now, model, deadline,
+                 pol: FleetPolicy, enable) -> tuple[EdgeState, jax.Array]:
+    """Cloud admission (Policy.offer_cloud) — returns (state, accepted)."""
+    if not pol.use_cloud:
+        return st, jnp.asarray(False)
+    t_hat = prof.t_cloud[model]
+    feasible = now + t_hat <= deadline
+    negative = prof.gamma_c[model] <= 0
+    if pol.stealing:
+        trigger = jnp.where(negative, deadline - prof.t_edge[model],
+                            jnp.maximum(now, deadline - t_hat
+                                        - pol.cloud_margin))
+        ok_neg = trigger >= now
+        accept = enable & feasible & jnp.where(negative, ok_neg, True)
+        steal_only = negative
+    else:
+        trigger = now
+        accept = enable & feasible & ~negative
+        steal_only = jnp.asarray(False)
+    cq, pushed = js.cloud_push(st.cq, trigger, prof.t_edge[model], deadline,
+                               steal_only, prof.steal_rank[model],
+                               enable=accept)
+    slot = jnp.argmax(~st.cq.valid)
+    cq_model = jnp.where(pushed, st.cq_model.at[slot].set(model),
+                         st.cq_model)
+    return st._replace(cq=cq, cq_model=cq_model), pushed
+
+
+def _route_arrival(st: EdgeState, prof: Profiles, now, model,
+                   pol: FleetPolicy, arrive) -> EdgeState:
+    """Task-scheduler routing for one arriving task (§5.1–5.2)."""
+    deadline = now + prof.deadline[model]
+    te = prof.t_edge[model]
+    feasible = js.insert_feasible(st.eq, now, st.busy_rem, deadline, te,
+                                  deadline)
+    if pol.migration:
+        victims = js.victim_mask(st.eq, now, st.busy_rem, deadline, te)
+        migrate_ok = js.migration_decision(
+            st.eq, victims, now, model, deadline, prof.gamma_e,
+            prof.gamma_c, prof.t_cloud)
+        has_victims = victims.any()
+        insert_edge = arrive & feasible & (~has_victims | migrate_ok)
+
+        # migrate victims: offer each to the cloud, then drop the rejects.
+        # (victims / model / deadline read from the pre-loop queue; the loop
+        # only mutates the cloud queue and drop counters)
+        def offer_victim(i, s):
+            is_v = victims[i] & insert_edge
+            s2, pushed = _offer_cloud(s, prof, now, st.eq.model[i],
+                                      st.eq.deadline[i], pol, is_v)
+            rejected = is_v & ~pushed
+            return s2._replace(n_drop=s2.n_drop.at[st.eq.model[i]].add(
+                rejected.astype(jnp.int32)))
+        st = jax.lax.fori_loop(0, EDGE_CAP, offer_victim, st)
+        st = st._replace(eq=js.edge_remove(st.eq, victims & insert_edge))
+    else:
+        insert_edge = arrive & feasible
+
+    eq, _ = js.edge_push(st.eq, deadline, st.seq, te, deadline, model,
+                         enable=insert_edge)
+    st = st._replace(eq=eq, seq=st.seq + arrive.astype(jnp.int32))
+    to_cloud = arrive & ~insert_edge
+    st, pushed = _offer_cloud(st, prof, now, model, deadline, pol, to_cloud)
+    st = st._replace(n_drop=st.n_drop.at[model].add(
+        (to_cloud & ~pushed).astype(jnp.int32)))
+    return st
+
+
+def _edge_execute(st: EdgeState, prof: Profiles, now, dt, edge_frac,
+                  pol: FleetPolicy, min_edge_t) -> EdgeState:
+    """Edge executor: JIT drops, stealing, starting the next task."""
+    def body(_, s: EdgeState) -> EdgeState:
+        idle = s.busy_rem <= 0.0
+
+        # JIT check on the head
+        eq_after, head_idx, found = js.edge_pop_head(s.eq)
+        head_model = s.eq.model[head_idx]
+        head_dl = s.eq.deadline[head_idx]
+        head_te = prof.t_edge[head_model]
+        head_infeasible = found & (now + head_te > head_dl)
+        do_drop = idle & head_infeasible
+        s = s._replace(
+            eq=jax.tree.map(lambda a, b: jnp.where(do_drop, a, b),
+                            eq_after, s.eq),
+            n_drop=s.n_drop.at[head_model].add(do_drop.astype(jnp.int32)))
+        if pol.gems:
+            m_ids = jnp.arange(prof.t_edge.shape[0], dtype=jnp.int32)
+            s = _gems_bulk(s, prof, now, jnp.zeros_like(m_ids, bool),
+                           (m_ids == head_model) & do_drop, m_ids)
+
+        idle = idle & ~head_infeasible
+        # stealing (§5.3)
+        if pol.stealing:
+            sidx = js.steal_select(s.cq, s.eq, now, jnp.maximum(s.busy_rem,
+                                                                0.0),
+                                   min_edge_t)
+            can_steal = idle & (sidx >= 0)
+            smodel = s.cq_model[jnp.maximum(sidx, 0)]
+            sdl = s.cq.deadline[jnp.maximum(sidx, 0)]
+            s = s._replace(cq=s.cq._replace(
+                valid=jnp.where(can_steal,
+                                s.cq.valid.at[jnp.maximum(sidx, 0)].set(
+                                    False), s.cq.valid)),
+                n_stolen=s.n_stolen.at[smodel].add(
+                    can_steal.astype(jnp.int32)))
+        else:
+            can_steal = jnp.asarray(False)
+            smodel = jnp.zeros((), jnp.int32)
+            sdl = jnp.zeros(())
+
+        # start next task: stolen task first, else the queue head
+        eq_after, head_idx, found = js.edge_pop_head(s.eq)
+        start_head = idle & ~can_steal & found
+        run_model = jnp.where(can_steal, smodel, s.eq.model[head_idx])
+        run_dl = jnp.where(can_steal, sdl, s.eq.deadline[head_idx])
+        start = can_steal | start_head
+        act = edge_frac * prof.t_edge[run_model]
+        success = start & (now + act <= run_dl)
+        util = jnp.where(success, prof.gamma_e[run_model],
+                         jnp.where(start, -prof.cost_e[run_model], 0.0))
+        s = s._replace(
+            eq=jax.tree.map(lambda a, b: jnp.where(start_head, a, b),
+                            eq_after, s.eq),
+            # carry sub-tick execution debt so tick quantization does not
+            # waste edge throughput (finish mid-tick → next task starts
+            # from the leftover, like the continuous-time oracle)
+            busy_rem=jnp.where(start, s.busy_rem + act, s.busy_rem),
+            n_success=s.n_success.at[run_model].add(
+                success.astype(jnp.int32)),
+            n_edge_exec=s.n_edge_exec.at[run_model].add(
+                start.astype(jnp.int32)),
+            n_miss=s.n_miss.at[run_model].add(
+                (start & ~success).astype(jnp.int32)),
+            qos_utility=s.qos_utility + util)
+        if pol.gems:
+            m_ids = jnp.arange(prof.t_edge.shape[0], dtype=jnp.int32)
+            run_onehot = (m_ids == run_model) & start
+            s = _gems_bulk(s, prof, now, run_onehot & success, run_onehot,
+                           m_ids)
+        return s
+
+    st = jax.lax.fori_loop(0, SUBSTEPS, body, st)
+    # at most one tick of banked debt; idle edges do not accumulate credit
+    return st._replace(busy_rem=jnp.maximum(st.busy_rem - dt, -dt))
+
+
+def make_step(prof: Profiles, pol: FleetPolicy, dt: float,
+              edge_frac: float, cloud_frac: float):
+    """Build the single-edge tick function (to be vmapped over the fleet)."""
+    min_edge_t = float(np.min(np.asarray(prof.t_edge)))
+    m = prof.t_edge.shape[0]
+
+    def step(st: EdgeState, inputs) -> tuple[EdgeState, None]:
+        now, theta, arrive, order = inputs   # arrive: bool[M]; order: i32[M]
+        st = _resolve_cloud(st, prof, now, theta, cloud_frac, pol)
+        # §3.3: tasks of a segment are inserted in randomized order
+        def route_one(i, s):
+            mdl = order[i]
+            return _route_arrival(s, prof, now, mdl, pol, arrive[mdl])
+        st = jax.lax.fori_loop(0, m, route_one, st)
+        st = _edge_execute(st, prof, now, dt, edge_frac, pol, min_edge_t)
+        if pol.gems:
+            st = _gems_act(st, prof, now)
+        return st, None
+
+    return step
+
+
+def simulate_fleet(models: list[ModelProfile], policy: str, *,
+                   n_edges: int, drones_per_edge: int = 3,
+                   duration_ms: float = 300_000.0, dt: float = 25.0,
+                   edge_frac: float = 0.62, cloud_frac: float = 0.80,
+                   theta_fn=None, seed: int = 0,
+                   mesh: Optional[jax.sharding.Mesh] = None) -> EdgeState:
+    """Simulate ``n_edges`` base stations; returns stacked final states.
+
+    With ``mesh`` given, fleet state and arrivals are sharded over its
+    first axis (pjit-style data parallelism over edges).
+    """
+    prof = Profiles.build(models)
+    m = len(models)
+    n_ticks = int(duration_ms / dt)
+    rng = np.random.default_rng(seed)
+
+    # one segment per drone per second → per-tick arrival counts; we spread
+    # each drone's per-segment task burst across model slots determin.
+    times = np.arange(n_ticks, dtype=np.float32) * dt
+    arrive = np.zeros((n_ticks, n_edges, m), dtype=bool)
+    for e in range(n_edges):
+        for d in range(drones_per_edge):
+            phase = rng.uniform(0, 1000.0)
+            seg_t = np.arange(phase, duration_ms, 1000.0)
+            ticks = np.minimum((seg_t / dt).astype(int), n_ticks - 1)
+            arrive[ticks, e, :] = True
+    theta = np.array([theta_fn(t) if theta_fn else 0.0 for t in times],
+                     dtype=np.float32)
+    order = np.stack([rng.permuted(np.tile(np.arange(m), (n_edges, 1)),
+                                   axis=1) for _ in range(n_ticks)]
+                     ).astype(np.int32)
+
+    step = make_step(prof, FleetPolicy.from_name(policy), dt, edge_frac,
+                     cloud_frac)
+    vstep = jax.vmap(step, in_axes=(0, (None, None, 0, 0)))
+
+    def scan_body(state, xs):
+        now, th, arr, ordr = xs
+        state, _ = vstep(state, (now, th, arr, ordr))
+        return state, None
+
+    state = jax.vmap(lambda _: init_state(prof))(jnp.arange(n_edges))
+    xs = (jnp.asarray(times), jnp.asarray(theta), jnp.asarray(arrive),
+          jnp.asarray(order))
+    if mesh is not None:
+        axis = mesh.axis_names[0]
+        shard = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(axis))
+        state = jax.tree.map(
+            lambda a: jax.device_put(a, jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(
+                    *([axis] + [None] * (a.ndim - 1))))), state)
+    final, _ = jax.jit(lambda s, x: jax.lax.scan(scan_body, s, x))(state, xs)
+    return final

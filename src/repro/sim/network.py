@@ -1,0 +1,146 @@
+"""Network and execution-latency models (paper §1.2 Figs 1–2, §8.5).
+
+The paper benchmarks per-model latency distributions on a Jetson-class edge
+(tight, Fig 1a) and AWS Lambda over WAN (long-tailed, Fig 1b), then *shapes*
+the edge↔cloud link during experiments:
+
+* latency: a "trapezium" waveform θ(t) ramping 0→400 ms over [60 s, 90 s),
+  holding, and ramping down over [210 s, 240 s)  (§8.5, Fig 12a)
+* bandwidth: SUMO+NS3 cellular traces from 7 mobile devices (Fig 2c) — we
+  synthesize statistically similar traces with a bounded random walk.
+
+All times ms, bandwidth Mbps, sizes kB.  Samplers draw from a
+``numpy.random.Generator`` owned by the simulator so runs are reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+
+SEGMENT_KB = 38.0          # 1 s video segment size (§8.1)
+NOMINAL_BW_MBPS = 20.0     # bandwidth assumed by the t̂ benchmarks
+
+
+def transfer_ms(size_kb: float, bw_mbps: float) -> float:
+    """Transfer time of ``size_kb`` at ``bw_mbps`` (8 kb per kB)."""
+    return size_kb * 8.0 / max(bw_mbps, 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Latency / bandwidth shaping traces
+# ---------------------------------------------------------------------------
+
+def constant(value: float) -> Callable[[float], float]:
+    return lambda t: value
+
+
+def trapezium(low: float = 0.0, high: float = 400.0,
+              ramp_up: tuple[float, float] = (60_000.0, 90_000.0),
+              ramp_down: tuple[float, float] = (210_000.0, 240_000.0),
+              ) -> Callable[[float], float]:
+    """§8.5 trapezium waveform for added one-way latency θ(t)."""
+    u0, u1 = ramp_up
+    d0, d1 = ramp_down
+
+    def theta(t: float) -> float:
+        if t < u0 or t >= d1:
+            return low
+        if t < u1:
+            return low + (high - low) * (t - u0) / (u1 - u0)
+        if t < d0:
+            return high
+        return high - (high - low) * (t - d0) / (d1 - d0)
+
+    return theta
+
+
+def cellular_bandwidth_trace(seed: int = 7, duration_ms: float = 600_000.0,
+                             step_ms: float = 1_000.0, lo: float = 0.25,
+                             hi: float = 40.0, start: float = 18.0,
+                             ) -> Callable[[float], float]:
+    """Synthetic mobile 4G bandwidth trace (Fig 2c analogue).
+
+    Bounded multiplicative random walk with occasional deep fades, matching
+    the high divergence across mobile devices the paper reports.
+    """
+    rng = np.random.default_rng(seed)
+    n = int(duration_ms / step_ms) + 2
+    vals = np.empty(n)
+    v = start
+    for i in range(n):
+        v *= math.exp(rng.normal(0.0, 0.25))
+        if rng.random() < 0.04:       # deep fade (underpass / handover)
+            v *= 0.08
+        v = min(max(v, lo), hi)
+        vals[i] = v
+
+    def bw(t: float) -> float:
+        return float(vals[min(int(t / step_ms), n - 1)])
+
+    return bw
+
+
+# ---------------------------------------------------------------------------
+# Execution-duration samplers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EdgeLatencyModel:
+    """Actual edge duration t̄_i^j around the 99th-pct estimate t_i (Fig 1a).
+
+    The estimate is a p99, so actual durations are usually *below* it —
+    this is precisely the slack that work stealing (§5.3) exploits.
+    """
+
+    mean_frac: float = 0.62
+    sd_frac: float = 0.10
+    lo_frac: float = 0.42
+    hi_frac: float = 1.10   # rare overruns beyond the p99 estimate
+    spike_p: float = 0.0    # transient stalls (GC pause, thermal throttle)
+    spike_mult: float = 1.4
+
+    def sample(self, rng: np.random.Generator, t_edge: float) -> float:
+        f = rng.normal(self.mean_frac, self.sd_frac)
+        f = float(np.clip(f, self.lo_frac, self.hi_frac))
+        if self.spike_p and rng.random() < self.spike_p:
+            f *= self.spike_mult
+        return t_edge * f
+
+
+@dataclasses.dataclass
+class CloudLatencyModel:
+    """Actual cloud duration: FaaS execution + WAN effects (Fig 1b, 2).
+
+    ``t̂`` is the benchmarked p95 end-to-end estimate.  We decompose the
+    sample into a lognormal body calibrated so ~5 % of unshaped samples
+    exceed t̂, plus shaped deltas: added latency θ(t) and the bandwidth
+    penalty relative to the nominal benchmark bandwidth.  Cold starts
+    appear as a small probability of a large multiplier (§4, [47]).
+    """
+
+    median_frac: float = 0.70
+    sigma: float = 0.18           # p95 of LogNormal(ln .7, .18) ≈ 0.94·t̂
+    cold_start_p: float = 0.01
+    cold_start_ms: float = 900.0
+    latency_at: Callable[[float], float] = dataclasses.field(
+        default_factory=lambda: constant(0.0))
+    bandwidth_at: Callable[[float], float] = dataclasses.field(
+        default_factory=lambda: constant(NOMINAL_BW_MBPS))
+    segment_kb: float = SEGMENT_KB
+
+    def shaped_delta(self, now: float) -> float:
+        """Deterministic extra latency from shaping at time ``now``."""
+        extra_bw = transfer_ms(self.segment_kb, self.bandwidth_at(now)) - \
+            transfer_ms(self.segment_kb, NOMINAL_BW_MBPS)
+        return self.latency_at(now) + max(0.0, extra_bw)
+
+    def sample(self, rng: np.random.Generator, t_cloud: float,
+               now: float) -> float:
+        body = t_cloud * float(rng.lognormal(math.log(self.median_frac),
+                                             self.sigma))
+        if rng.random() < self.cold_start_p:
+            body += self.cold_start_ms
+        return body + self.shaped_delta(now)

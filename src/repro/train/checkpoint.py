@@ -1,0 +1,29 @@
+"""Minimal dependency-free checkpointing (npz + JSON treedef)."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def save(path: str, pytree) -> None:
+    leaves, treedef = jax.tree.flatten(pytree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path + ".npz",
+             **{f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)})
+    with open(path + ".tree.json", "w") as f:
+        json.dump({"treedef": str(treedef), "n": len(leaves)}, f)
+
+
+def load(path: str, like) -> object:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    data = np.load(path + ".npz")
+    leaves_like, treedef = jax.tree.flatten(like)
+    n = len(leaves_like)
+    loaded = [data[f"leaf_{i}"] for i in range(n)]
+    for a, b in zip(loaded, leaves_like):
+        if tuple(a.shape) != tuple(np.shape(b)):
+            raise ValueError(f"shape mismatch {a.shape} vs {np.shape(b)}")
+    return jax.tree.unflatten(treedef, loaded)

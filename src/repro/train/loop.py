@@ -1,0 +1,65 @@
+"""Training loop over the model zoo (CPU-runnable on reduced configs)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import FastSyntheticLM
+from repro.models.model import Model
+from repro.train.optimizer import AdamW, AdamWState
+from repro.train import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: dict
+    opt_state: AdamWState
+    step: int = 0
+
+
+def make_train_step(model: Model, opt: AdamW) -> Callable:
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return loss, new_params, new_opt
+    return step
+
+
+def train(cfg: ArchConfig, *, steps: int = 100, batch: int = 8,
+          seq_len: int = 128, lr: float = 3e-3, seed: int = 0,
+          log_every: int = 20, checkpoint_path: Optional[str] = None,
+          log=print) -> tuple[TrainState, list[float]]:
+    model = Model(cfg)
+    opt = AdamW(lr=lr)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = opt.init(params)
+    step_fn = make_train_step(model, opt)
+    data = FastSyntheticLM(vocab=cfg.vocab, seq_len=seq_len, batch=batch,
+                           seed=seed).batches()
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        raw = next(data)
+        b = {"tokens": jnp.asarray(raw["tokens"]),
+             "labels": jnp.asarray(raw["labels"])}
+        if cfg.family == "encdec":
+            b["frames"] = jnp.zeros((batch, cfg.n_frames, cfg.d_model))
+        if cfg.family == "vlm":
+            b["patches"] = jnp.zeros((batch, cfg.n_image_tokens,
+                                      cfg.d_model))
+        loss, params, opt_state = step_fn(params, opt_state, b)
+        losses.append(float(loss))
+        if i % log_every == 0 or i == steps - 1:
+            log(f"step {i:4d} loss {float(loss):.4f} "
+                f"({(time.time() - t0) / (i + 1):.2f}s/step)")
+    state = TrainState(params=params, opt_state=opt_state, step=steps)
+    if checkpoint_path:
+        ckpt.save(checkpoint_path, params)
+        log(f"checkpoint → {checkpoint_path}.npz")
+    return state, losses

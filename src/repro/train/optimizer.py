@@ -1,0 +1,64 @@
+"""AdamW in pure JAX (no optax dependency).
+
+Moments are stored in a configurable dtype — bf16 for the ≥100B configs so
+optimizer state fits the per-device HBM budget (see EXPERIMENTS.md
+§Dry-run), f32 otherwise.  State shards exactly like the parameters (same
+pytree structure → same PartitionSpecs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"
+
+    def init(self, params) -> AdamWState:
+        dt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+            v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps) + \
+                self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - self.lr * delta
+            return (new_p.astype(p.dtype), m32.astype(m.dtype),
+                    v32.astype(v.dtype))
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu)

@@ -1,0 +1,320 @@
+"""Unit tests for the paper's task/utility model and scheduling policies."""
+import numpy as np
+import pytest
+
+from repro.core.task import (ACTIVE, PASSIVE, TABLE1, ModelProfile, Outcome,
+                             Task, migration_score, table2)
+from repro.core.schedulers import (ALL_POLICIES, AdaptiveEstimator,
+                                   CloudAccept, Policy, make_policy)
+from repro.sim.engine import Arrival, Simulator, run_policy
+from repro.sim.network import (CloudLatencyModel, EdgeLatencyModel,
+                               cellular_bandwidth_trace, constant, trapezium,
+                               transfer_ms)
+from repro.sim.workloads import STANDARD_WORKLOADS, gems_workload, standard
+
+
+# ---------------------------------------------------------------------------
+# Table 1 identities (γ^E = β − K, γ^C = β − K̂) — paper footnote 3.
+# ---------------------------------------------------------------------------
+
+EXPECTED_GAMMAS = {  # from Table 1's γ^E / γ^C columns
+    "HV": (124, 100), "DEV": (99, 74), "MD": (74, 50),
+    "BP": (38, -3), "CD": (171, 23), "DEO": (244, 40),
+}
+
+
+@pytest.mark.parametrize("name", list(TABLE1))
+def test_table1_gamma_columns(name):
+    m = TABLE1[name]
+    ge, gc = EXPECTED_GAMMAS[name]
+    assert m.gamma_edge == ge
+    assert m.gamma_cloud == gc
+
+
+def test_bp_is_the_negative_cloud_utility_model():
+    negatives = [n for n, m in TABLE1.items() if m.gamma_cloud <= 0]
+    assert negatives == ["BP"]
+
+
+def test_utility_eqn1_cases():
+    m = TABLE1["HV"]
+    t = Task(uid=1, model=m, created=0.0)
+    for outcome, expect in [
+            (Outcome.EDGE_SUCCESS, m.beta - m.cost_edge),
+            (Outcome.EDGE_MISS, -m.cost_edge),
+            (Outcome.CLOUD_SUCCESS, m.beta - m.cost_cloud),
+            (Outcome.CLOUD_MISS, -m.cost_cloud),
+            (Outcome.DROPPED, 0.0)]:
+        t.outcome = outcome
+        assert t.utility() == expect
+
+
+def test_migration_score_eqn3():
+    m = TABLE1["HV"]
+    assert migration_score(m, cloud_feasible=True) == m.gamma_edge - m.gamma_cloud
+    assert migration_score(m, cloud_feasible=False) == m.gamma_edge
+    bp = TABLE1["BP"]   # γ^C ≤ 0 → score is γ^E even if feasible
+    assert migration_score(bp, cloud_feasible=True) == bp.gamma_edge
+
+
+def test_table2_workloads():
+    wl1 = table2("WL1", alpha=0.9)
+    assert [m.name for m in wl1] == ["HV", "DEV", "MD", "CD"]
+    hv = wl1[0]
+    assert (hv.qoe_beta, hv.deadline, hv.t_edge, hv.t_cloud) == (360, 400, 100, 200)
+    assert hv.beta == TABLE1["HV"].beta            # QoS β retained
+    wl2 = table2("WL2", alpha=1.0)
+    cd = [m for m in wl2 if m.name == "CD"][0]
+    assert (cd.deadline, cd.t_edge, cd.t_cloud) == (1000, 750, 950)
+    with pytest.raises(ValueError):
+        table2("WL3", 0.9)
+
+
+# ---------------------------------------------------------------------------
+# Policy admission / ordering logic
+# ---------------------------------------------------------------------------
+
+def _task(name="HV", created=0.0, uid=1):
+    return Task(uid=uid, model=TABLE1[name], created=created)
+
+
+def test_edf_priority_is_absolute_deadline():
+    p = make_policy("EDF-E+C")
+    t = _task("HV", created=100.0)
+    assert p.edge_key(t) == 100.0 + TABLE1["HV"].deadline
+
+
+def test_cloud_rejects_infeasible_and_negative():
+    p = make_policy("EDF-E+C")
+    t = _task("HV", created=0.0)
+    # infeasible: now too late for the cloud latency
+    acc = p.offer_cloud(t, now=t.abs_deadline - 10, t_cloud=t.model.t_cloud)
+    assert not acc.accept
+    # negative cloud utility (BP) rejected without stealing
+    bp = _task("BP")
+    assert not p.offer_cloud(bp, now=0.0, t_cloud=bp.model.t_cloud).accept
+
+
+def test_dems_parks_negative_utility_for_stealing():
+    p = make_policy("DEMS")
+    bp = _task("BP")
+    acc = p.offer_cloud(bp, now=0.0, t_cloud=bp.model.t_cloud)
+    assert acc.accept and acc.steal_only
+    # trigger is the latest time it could still start on the edge (§5.3)
+    assert acc.trigger == bp.abs_deadline - bp.model.t_edge
+
+
+def test_dems_trigger_time_defers_positive_tasks():
+    p = make_policy("DEMS")
+    hv = _task("HV")
+    acc = p.offer_cloud(hv, now=0.0, t_cloud=hv.model.t_cloud)
+    assert acc.accept and not acc.steal_only
+    assert acc.trigger == pytest.approx(
+        hv.abs_deadline - hv.model.t_cloud - p.cloud_margin)
+
+
+def test_fifo_cloud_for_non_stealing_policies():
+    p = make_policy("EDF-E+C")
+    hv = _task("HV")
+    acc = p.offer_cloud(hv, now=5.0, t_cloud=hv.model.t_cloud)
+    assert acc.accept and acc.trigger == 5.0
+
+
+def test_migration_decision_prefers_keeping_higher_scores():
+    p = make_policy("DEM")
+    new = _task("CD")      # S = γE−γC = 148 when cloud-feasible
+    victims = [_task("HV", uid=2)]   # S = 24
+    assert p.migration_decision(new, victims, 0.0, lambda m: m.t_cloud)
+    # reversed: victim CD (148) outweighs new HV (24) → keep victims
+    assert not p.migration_decision(
+        _task("HV"), [_task("CD", uid=3)], 0.0, lambda m: m.t_cloud)
+
+
+# ---------------------------------------------------------------------------
+# DEMS-A adaptive estimator (§5.4)
+# ---------------------------------------------------------------------------
+
+def test_adaptive_estimator_inflates_and_cools():
+    est = AdaptiveEstimator(static=400.0, w=4, eps=10.0, t_cp=10_000.0)
+    assert est.current == 400.0
+    for _ in range(4):
+        est.observe(800.0)
+    assert est.current == pytest.approx(800.0)
+    # skipping tasks for longer than the cooling period resets the estimate
+    est.on_skip(now=0.0)
+    est.on_skip(now=5_000.0)
+    assert est.current == pytest.approx(800.0)
+    est.on_skip(now=10_001.0)
+    assert est.current == 400.0
+
+
+def test_adaptive_estimator_ignores_small_excursions():
+    est = AdaptiveEstimator(static=400.0, w=10, eps=10.0)
+    for _ in range(10):
+        est.observe(405.0)
+    assert est.current == 400.0
+
+
+def test_adaptive_window_is_circular():
+    est = AdaptiveEstimator(static=100.0, w=3, eps=1.0)
+    for v in (500.0, 500.0, 500.0, 100.0, 100.0, 100.0):
+        est.observe(v)
+    # after the buffer fully turns over, only the recent values matter, but
+    # the estimate never adapts downward except via cooling reset (§5.4)
+    assert est.current == pytest.approx(500.0)
+
+
+# ---------------------------------------------------------------------------
+# Simulator end-to-end behaviour
+# ---------------------------------------------------------------------------
+
+def _run(policy_name, workload="3D-A", seed=7, **kw):
+    return run_policy(make_policy(policy_name), standard(workload, seed=1),
+                      300_000.0, seed=seed, **kw)
+
+
+def test_all_policies_run_and_conserve_tasks():
+    arr = standard("2D-P", seed=0)
+    for name in ALL_POLICIES:
+        r = run_policy(make_policy(name), arr, 300_000.0, seed=3)
+        assert r.generated == len(arr)
+        for st in r.per_model.values():
+            total = (st.edge_success + st.edge_miss + st.cloud_success
+                     + st.cloud_miss + st.dropped)
+            assert total == st.generated, f"{name}: task leak"
+
+
+def test_cld_drops_bp_and_completes_the_rest():
+    r = _run("CLD")
+    bp = r.per_model["BP"]
+    assert bp.completed == 0 and bp.dropped == bp.generated
+    assert r.completion_rate > 0.70
+
+
+def test_edge_only_saturates_under_heavy_load():
+    r_light = _run("EDF", workload="2D-P")
+    r_heavy = _run("EDF", workload="4D-A")
+    assert r_light.completion_rate > r_heavy.completion_rate
+    assert r_heavy.edge_utilization > 0.7
+
+
+def test_dems_beats_e_plus_c_on_utility():
+    e = _run("EDF-E+C")
+    d = _run("DEMS")
+    assert d.qos_utility > e.qos_utility
+    assert d.completion_rate >= 0.95 * e.completion_rate
+
+
+def test_dems_work_stealing_recovers_bp_tasks():
+    r = _run("DEMS", workload="4D-P")
+    assert r.stolen > 0
+    # BP (the negative-cloud-utility model) is the most-stolen model (§8.4)
+    others = max(st.stolen for n, st in r.per_model.items() if n != "BP")
+    assert r.per_model["BP"].stolen >= others
+
+
+def test_dems_migration_occurs():
+    assert _run("DEMS").migrated > 0
+
+
+def test_dems_a_improves_under_latency_variability():
+    cm = CloudLatencyModel(latency_at=trapezium())
+    base = run_policy(make_policy("DEMS"), standard("4D-P", seed=1),
+                      300_000.0, seed=5, cloud_model=cm)
+    adpt = run_policy(make_policy("DEMS-A"), standard("4D-P", seed=1),
+                      300_000.0, seed=5, cloud_model=cm)
+    assert adpt.qos_utility > base.qos_utility
+
+
+def test_gems_reschedules_lagging_models():
+    em = EdgeLatencyModel(mean_frac=1.0, sd_frac=0.02, lo_frac=0.95,
+                          hi_frac=1.1, spike_p=0.04, spike_mult=1.6)
+    cm = CloudLatencyModel(median_frac=0.92, sigma=0.06)
+    arr = gems_workload("WL2", alpha=1.0, n_drones=3, seed=2)
+    g = run_policy(make_policy("GEMS"), arr, 300_000.0, seed=42,
+                   edge_model=em, cloud_model=cm, cloud_concurrency=6)
+    d = run_policy(make_policy("DEMS"), arr, 300_000.0, seed=42,
+                   edge_model=em, cloud_model=cm, cloud_concurrency=6)
+    assert g.gems_rescheduled > 50
+    assert d.gems_rescheduled == 0
+    assert g.total_utility > d.total_utility
+
+
+def test_qoe_windows_accounted():
+    arr = gems_workload("WL1", alpha=0.9, n_drones=2, seed=0)
+    r = run_policy(make_policy("GEMS"), arr, 300_000.0, seed=1)
+    st = r.per_model["HV"]
+    assert st.windows_total > 0
+    assert st.qoe_utility == st.windows_met * 360
+
+
+def test_utility_accounting_consistency():
+    r = _run("DEMS")
+    assert r.qos_utility == pytest.approx(r.edge_utility + r.cloud_utility)
+    assert r.total_utility == pytest.approx(r.qos_utility + r.qoe_utility)
+
+
+def test_deterministic_given_seed():
+    a = _run("DEMS", seed=11)
+    b = _run("DEMS", seed=11)
+    assert a.qos_utility == b.qos_utility and a.completed == b.completed
+
+
+# ---------------------------------------------------------------------------
+# Network models
+# ---------------------------------------------------------------------------
+
+def test_trapezium_waveform():
+    th = trapezium()
+    assert th(0) == 0 and th(75_000) == pytest.approx(200.0)
+    assert th(150_000) == 400.0 and th(225_000) == pytest.approx(200.0)
+    assert th(300_000) == 0.0
+
+
+def test_cellular_trace_bounded():
+    bw = cellular_bandwidth_trace(seed=3)
+    vals = [bw(t) for t in np.linspace(0, 600_000, 500)]
+    assert min(vals) >= 0.25 and max(vals) <= 40.0
+    assert np.std(vals) > 1.0    # actually varies
+
+
+def test_transfer_time():
+    assert transfer_ms(38.0, 10.0) == pytest.approx(30.4)
+
+
+def test_cloud_sampler_tail_calibration():
+    cm = CloudLatencyModel(cold_start_p=0.0)
+    rng = np.random.default_rng(0)
+    s = np.array([cm.sample(rng, 400.0, 0.0) for _ in range(4000)])
+    assert 0.02 < np.mean(s > 400.0) < 0.12   # ~p95 estimate
+    assert np.median(s) < 400.0
+
+
+def test_workload_counts_match_paper():
+    # §8.3: 2D-P → 2400, 3D-A → 5400, 4D-A → 7200 tasks per base station
+    assert len(standard("2D-P")) == 2400
+    assert len(standard("3D-A")) == 5400
+    assert len(standard("4D-A")) == 7200
+
+
+def test_gems_b_dominates_gems_when_windows_unwinnable():
+    """Beyond-paper GEMS-B: at α=1.0 with a constrained cloud the
+    winnability guard must not do worse than GEMS on QoE."""
+    em = EdgeLatencyModel(mean_frac=1.0, sd_frac=0.02, lo_frac=0.95,
+                          hi_frac=1.1, spike_p=0.04, spike_mult=1.6)
+    cm = CloudLatencyModel(median_frac=0.92, sigma=0.06)
+    arr = gems_workload("WL2", alpha=1.0, n_drones=3, seed=2)
+    qoe = {}
+    for pol in ("GEMS", "GEMS-B"):
+        rs = [run_policy(make_policy(pol), arr, 300_000.0, seed=100 + s,
+                         edge_model=em, cloud_model=cm,
+                         cloud_concurrency=6) for s in range(3)]
+        qoe[pol] = np.median([r.qoe_utility for r in rs])
+    assert qoe["GEMS-B"] >= qoe["GEMS"]
+
+
+def test_gems_b_equals_gems_when_windows_winnable():
+    arr = gems_workload("WL1", alpha=0.5, n_drones=2, seed=0)
+    a = run_policy(make_policy("GEMS"), arr, 120_000.0, seed=1)
+    b = run_policy(make_policy("GEMS-B"), arr, 120_000.0, seed=1)
+    assert b.qoe_utility == a.qoe_utility

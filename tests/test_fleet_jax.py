@@ -1,0 +1,84 @@
+"""Fleet simulator vs the discrete-event oracle, plus SPMD scaling checks."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.schedulers import make_policy
+from repro.core.task import PASSIVE, TABLE1
+from repro.sim.engine import run_policy
+from repro.sim.fleet_jax import FleetPolicy, Profiles, simulate_fleet
+from repro.sim.network import CloudLatencyModel, EdgeLatencyModel
+from repro.sim.workloads import task_stream
+
+MODELS = [TABLE1[n] for n in PASSIVE]
+
+
+def _engine_result(policy, duration=120_000.0, seed=0):
+    em = EdgeLatencyModel(mean_frac=0.62, sd_frac=0.0, lo_frac=0.62,
+                          hi_frac=0.62)
+    cm = CloudLatencyModel(median_frac=0.80, sigma=1e-6, cold_start_p=0.0)
+    arr = task_stream(MODELS, n_drones=3, duration_ms=duration, seed=seed)
+    return run_policy(make_policy(policy), arr, duration, seed=seed,
+                      edge_model=em, cloud_model=cm, cloud_concurrency=512)
+
+
+@pytest.mark.parametrize("policy", ["EDF-E+C", "DEMS", "GEMS"])
+def test_fleet_matches_event_engine_approximately(policy):
+    """Tick-based SPMD sim tracks the event-driven oracle within 10 %."""
+    duration = 120_000.0
+    oracle = _engine_result(policy, duration)
+    final = simulate_fleet(MODELS, policy, n_edges=1, drones_per_edge=3,
+                           duration_ms=duration, dt=25.0,
+                           edge_frac=0.62, cloud_frac=0.80, seed=0)
+    got = float(np.asarray(final.n_success).sum())
+    want = oracle.completed
+    assert abs(got - want) / want < 0.10, (got, want)
+    got_u = float(np.asarray(final.qos_utility).sum())
+    assert abs(got_u - oracle.qos_utility) / abs(oracle.qos_utility) < 0.15
+
+
+def test_fleet_dems_steals_and_beats_e_plus_c():
+    kw = dict(n_edges=2, drones_per_edge=3, duration_ms=90_000.0)
+    dems = simulate_fleet(MODELS, "DEMS", **kw)
+    epc = simulate_fleet(MODELS, "EDF-E+C", **kw)
+    assert np.asarray(dems.n_stolen).sum() > 0
+    assert np.asarray(dems.qos_utility).sum() >= \
+        np.asarray(epc.qos_utility).sum()
+
+
+def test_fleet_scales_edges_linearly():
+    """Weak scaling (paper §8.6): per-edge results independent of fleet size."""
+    a = simulate_fleet(MODELS, "DEMS", n_edges=1, duration_ms=60_000.0,
+                       seed=1)
+    b = simulate_fleet(MODELS, "DEMS", n_edges=8, duration_ms=60_000.0,
+                       seed=1)
+    per_edge_a = float(np.asarray(a.n_success).sum())
+    per_edge_b = float(np.asarray(b.n_success).sum()) / 8
+    assert abs(per_edge_b - per_edge_a) / per_edge_a < 0.15
+
+
+def test_fleet_gems_accrues_qoe():
+    import dataclasses
+    models = [dataclasses.replace(m, qoe_alpha=0.5, qoe_beta=100.0,
+                                  qoe_window=10_000.0) for m in MODELS]
+    final = simulate_fleet(models, "GEMS", n_edges=1,
+                           duration_ms=60_000.0)
+    assert float(np.asarray(final.qoe_utility).sum()) > 0
+    assert int(np.asarray(final.windows_met).sum()) > 0
+
+
+def test_fleet_task_conservation():
+    final = simulate_fleet(MODELS, "DEMS", n_edges=2, drones_per_edge=2,
+                           duration_ms=60_000.0)
+    done = (np.asarray(final.n_success).sum() + np.asarray(final.n_miss).sum()
+            + np.asarray(final.n_drop).sum())
+    generated = 2 * 2 * 60 * len(MODELS)
+    # a handful of tasks may still be queued when the horizon ends
+    assert generated * 0.97 <= done <= generated
+
+
+def test_fleet_sharded_over_mesh_axis():
+    mesh = jax.make_mesh((jax.device_count(),), ("fleet",))
+    final = simulate_fleet(MODELS, "DEMS", n_edges=4,
+                           duration_ms=30_000.0, mesh=mesh)
+    assert np.asarray(final.n_success).sum() > 0

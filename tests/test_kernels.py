@@ -1,0 +1,311 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,s,hd", [
+    (1, 4, 4, 128, 64),      # MHA
+    (2, 8, 2, 256, 64),      # GQA 4:1
+    (1, 4, 1, 128, 128),     # MQA
+])
+@pytest.mark.parametrize("window", [0, 64])
+def test_flash_attention_matches_ref(b, h, kv, s, hd, dtype, window):
+    rng = jax.random.PRNGKey(hash((b, h, s, window)) % 2**31)
+    kq, kk, kv_ = jax.random.split(rng, 3)
+    q = jax.random.normal(kq, (b, h, s, hd), dtype)
+    k = jax.random.normal(kk, (b, kv, s, hd), dtype)
+    v = jax.random.normal(kv_, (b, kv, s, hd), dtype)
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64)
+    want = ref.ref_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_non_causal():
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (1, 2, 128, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 128, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 128, 64))
+    got = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    want = ref.ref_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_odd_block_shapes():
+    # block sizes that do not divide into a square grid (s=256, bq=128, bk=64)
+    rng = jax.random.PRNGKey(3)
+    q = jax.random.normal(rng, (1, 2, 256, 64))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.PRNGKey(5), (1, 2, 256, 64))
+    got = ops.flash_attention(q, k, v, block_q=128, block_k=64)
+    want = ref.ref_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,w,hd", [
+    (2, 4, 4, 512, 64),
+    (3, 8, 2, 1024, 64),
+    (1, 4, 1, 256, 128),
+])
+def test_decode_attention_matches_ref(b, h, kv, w, hd, dtype):
+    rng = jax.random.PRNGKey(hash((b, h, w)) % 2**31)
+    kq, kk, kv_, kl = jax.random.split(rng, 4)
+    q = jax.random.normal(kq, (b, h, hd), dtype)
+    k = jax.random.normal(kk, (b, kv, w, hd), dtype)
+    v = jax.random.normal(kv_, (b, kv, w, hd), dtype)
+    lengths = jax.random.randint(kl, (b,), 1, w + 1)
+    got = ops.decode_attention(q, k, v, lengths, block_s=128)
+    want = ref.ref_decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_length_one():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 256, 64))
+    lengths = jnp.array([1])
+    got = ops.decode_attention(q, k, v, lengths, block_s=128)
+    want = ref.ref_decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# selective scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("g,s,p,n,chunk", [
+    (4, 256, 64, 64, 128),
+    (2, 128, 32, 16, 64),
+    (8, 512, 64, 64, 128),
+])
+def test_ssm_scan_matches_ref(g, s, p, n, chunk):
+    rng = jax.random.PRNGKey(hash((g, s, p, n)) % 2**31)
+    ks = jax.random.split(rng, 5)
+    x = jax.random.normal(ks[0], (g, s, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (g, s)))
+    a = -jnp.exp(jax.random.normal(ks[2], (g,)) * 0.3)
+    bm = jax.random.normal(ks[3], (g, s, n)) * 0.3
+    cm = jax.random.normal(ks[4], (g, s, n)) * 0.3
+    got_y, got_f = ops.ssm_scan(x, dt, a, bm, cm, chunk=chunk)
+    want_y, want_f = ref.ref_selective_scan(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got_f), np.asarray(want_f),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_scan_state_carries_across_chunks():
+    """Constant decay ~1 accumulates across the whole sequence; a chunking
+    bug (state reset per chunk) would show up immediately."""
+    g, s, p, n = 1, 256, 8, 4
+    x = jnp.ones((g, s, p))
+    dt = jnp.full((g, s), 0.001)      # tiny decay → near-pure accumulation
+    a = jnp.full((g,), -0.01)
+    bm = jnp.ones((g, s, n))
+    cm = jnp.ones((g, s, n))
+    y, _ = ops.ssm_scan(x, dt, a, bm, cm, chunk=64)
+    # y grows ≈ linearly with t; the last value must be ≈ s · dt · n
+    assert float(y[0, -1, 0]) > 0.9 * s * 0.001 * n
+
+
+# ---------------------------------------------------------------------------
+# ragged MoE GEMM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,d,f,e,block_t", [
+    (256, 64, 128, 4, 128),
+    (512, 128, 64, 8, 128),
+    (128, 32, 32, 3, 64),
+])
+def test_moe_gemm_matches_ref(t, d, f, e, block_t):
+    rng = jax.random.PRNGKey(hash((t, d, f, e)) % 2**31)
+    kx, kw, ko = jax.random.split(rng, 3)
+    x = jax.random.normal(kx, (t, d))
+    w = jax.random.normal(kw, (e, d, f)) / np.sqrt(d)
+    # random ragged split of T rows over E experts (some may be empty)
+    cuts = np.sort(np.asarray(
+        jax.random.randint(ko, (e - 1,), 0, t + 1)))
+    offsets = jnp.asarray(np.concatenate([[0], cuts, [t]]), jnp.int32)
+    got = ops.moe_gemm(x, w, offsets, block_t=block_t)
+    want = ref.ref_moe_gemm(x, w, offsets)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_gemm_empty_experts():
+    t, d, f, e = 128, 32, 32, 4
+    x = jax.random.normal(jax.random.PRNGKey(0), (t, d))
+    w = jax.random.normal(jax.random.PRNGKey(1), (e, d, f))
+    offsets = jnp.array([0, 0, t, t, t], jnp.int32)   # only expert 1 active
+    got = ops.moe_gemm(x, w, offsets, block_t=64)
+    want = x @ w[1]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# model-layer integration: chunked SSD algebra vs sequential oracle
+# ---------------------------------------------------------------------------
+
+def test_ssd_chunked_module_matches_sequential_scan():
+    """models.ssm.ssd_chunked (matmul form) ≡ sequential recurrence."""
+    from repro.configs.base import ArchConfig
+    from repro.models import ssm as SSM
+
+    cfg = ArchConfig(name="t", family="hybrid", n_layers=1, d_model=64,
+                     n_heads=4, n_kv_heads=4, d_ff=128, vocab=128,
+                     ssm_state=16, ssm_head_dim=32, dtype="float32",
+                     param_dtype="float32")
+    rng = jax.random.PRNGKey(0)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    pin = 2 * di + 2 * n + h
+    p = {"w_in": jax.random.normal(rng, (d, pin)) * 0.05,
+         "dt_bias": jnp.zeros((h,)),
+         "a_log": jnp.zeros((h,)),
+         "d_skip": jnp.ones((h,)),
+         "w_out": jax.random.normal(jax.random.PRNGKey(1), (di, d)) * 0.05}
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 256, d)) * 0.3
+
+    y_chunked, fin = SSM.ssd_chunked(p, cfg, x)
+
+    # sequential: run the same recurrence one token at a time
+    state = jnp.zeros((2, h, cfg.ssm_head_dim, n))
+    ys = []
+    for t in range(x.shape[1]):
+        yt, state = SSM.ssd_decode_step(p, cfg, x[:, t:t + 1], state)
+        ys.append(yt)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunked), np.asarray(y_seq),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(state),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_mlstm_parallel_matches_decode_steps():
+    from repro.configs.base import ArchConfig
+    from repro.models import xlstm as XL
+
+    cfg = ArchConfig(name="t", family="ssm", n_layers=1, d_model=64,
+                     n_heads=4, n_kv_heads=4, d_ff=0, vocab=128,
+                     dtype="float32", param_dtype="float32")
+    rng = jax.random.PRNGKey(0)
+    d, di = cfg.d_model, cfg.d_inner
+    ks = jax.random.split(rng, 5)
+    p = {"wq": jax.random.normal(ks[0], (d, di)) * 0.05,
+         "wk": jax.random.normal(ks[1], (d, di)) * 0.05,
+         "wv": jax.random.normal(ks[2], (d, di)) * 0.05,
+         "w_gate": jax.random.normal(ks[3], (d, 2 * cfg.n_heads)) * 0.05,
+         "w_out": jax.random.normal(ks[4], (di, d)) * 0.05}
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 256, d)) * 0.3
+
+    y_par, (cf, nf) = XL.mlstm_parallel(p, cfg, x)
+
+    h, pd = cfg.n_heads, di // cfg.n_heads
+    state = (jnp.zeros((2, h, pd, pd)), jnp.zeros((2, h, pd)))
+    ys = []
+    for t in range(x.shape[1]):
+        yt, state = XL.mlstm_decode_step(p, cfg, x[:, t:t + 1], state)
+        ys.append(yt)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(cf), np.asarray(state[0]),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_model_pallas_attention_path_matches_ref():
+    """cfg.attn_impl='pallas' must reproduce the jnp model end to end
+    (forward + prefill + decode) in interpret mode."""
+    import dataclasses
+    from repro.configs.base import reduced
+    from repro.configs.registry import ARCHS
+    from repro.models.model import Model
+
+    base_cfg = reduced(ARCHS["granite-3-2b"])
+    cfg_p = dataclasses.replace(base_cfg, attn_impl="pallas",
+                                sliding_window=0, long_context_window=0)
+    cfg_r = dataclasses.replace(base_cfg, sliding_window=0,
+                                long_context_window=0)
+    m_r, m_p = Model(cfg_r), Model(cfg_p)
+    rng = jax.random.PRNGKey(0)
+    params = m_r.init(rng)
+    tokens = jax.random.randint(rng, (2, 32), 0, cfg_r.vocab)
+    f_r, _ = m_r.forward(params, {"tokens": tokens})
+    f_p, _ = m_p.forward(params, {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(f_r), np.asarray(f_p),
+                               rtol=1e-4, atol=1e-4)
+
+    _, cache = m_p.prefill(params, {"tokens": tokens[:, :28]}, 40)
+    l_r, _ = m_r.decode_step(params, cache, tokens[:, 28:29],
+                             jnp.asarray(28))
+    l_p, _ = m_p.decode_step(params, cache, tokens[:, 28:29],
+                             jnp.asarray(28))
+    np.testing.assert_allclose(np.asarray(l_r), np.asarray(l_p),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused RMSNorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(2, 128, 256), (4, 96, 512), (1, 1, 64),
+                                   (300, 128)])
+def test_rmsnorm_matches_ref(shape, dtype):
+    rng = jax.random.PRNGKey(hash(shape) % 2**31)
+    x = jax.random.normal(rng, shape, dtype)
+    scale = jax.random.normal(jax.random.PRNGKey(1), shape[-1:], dtype) + 1.0
+    got = ops.rmsnorm(x, scale, block_r=64)
+    want = ref.ref_rmsnorm(x, scale)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+def test_rmsnorm_matches_model_layer():
+    from repro.models.layers import rms_norm
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 64, 128))
+    scale = jnp.ones((128,)) * 1.5
+    got = ops.rmsnorm(x, scale)
+    want = rms_norm(x, scale, eps=1e-5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_moe_gemm_bf16(dtype):
+    t, d, f, e = 256, 64, 64, 4
+    x = jax.random.normal(jax.random.PRNGKey(0), (t, d), dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(1), (e, d, f)) /
+         np.sqrt(d)).astype(dtype)
+    offsets = jnp.array([0, 64, 128, 192, 256], jnp.int32)
+    got = ops.moe_gemm(x, w, offsets, block_t=64)
+    want = ref.ref_moe_gemm(x.astype(jnp.float32), w.astype(jnp.float32),
+                            offsets)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=3e-2, atol=3e-2)

@@ -1,0 +1,84 @@
+"""Integration tests: live serve engine + end-to-end training loop."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import reduced
+from repro.configs.registry import ARCHS
+from repro.core.schedulers import make_policy
+from repro.core.task import ModelProfile
+from repro.serve.engine import ServableModel, ServeEngine, run_stream
+from repro.train.loop import train
+from repro.train import checkpoint as ckpt
+
+
+def _servable(name, arch, beta=100, ke=1, kc=25, deadline=400.0):
+    cfg = reduced(ARCHS[arch], n_layers=2, d_model=128, vocab=512)
+    prof = ModelProfile(name=name, beta=beta, deadline=deadline,
+                        t_edge=20.0, t_cloud=60.0, cost_edge=ke,
+                        cost_cloud=kc, qoe_beta=50.0, qoe_alpha=0.8,
+                        qoe_window=2_000.0)
+    return ServableModel.from_arch(prof, cfg, batch=1, seq=16)
+
+
+def test_serve_engine_runs_real_models():
+    models = {"HV": _servable("HV", "granite-3-2b"),
+              "BP": _servable("BP", "starcoder2-3b", beta=40, kc=43)}
+    engine = ServeEngine(make_policy("DEMS"), models, cloud_concurrency=2,
+                         seed=0)
+    r = run_stream(engine, {"HV": 12.0, "BP": 6.0}, duration_ms=3_000.0)
+    assert r.generated >= 40
+    assert r.completed > 0
+    assert r.completion_rate > 0.5
+    # conservation
+    for st in r.per_model.values():
+        done = (st.edge_success + st.edge_miss + st.cloud_success
+                + st.cloud_miss + st.dropped)
+        assert done <= st.generated    # a few may be in flight at stop
+
+
+def test_serve_engine_gems_windows():
+    models = {"HV": _servable("HV", "granite-3-2b")}
+    engine = ServeEngine(make_policy("GEMS"), models, cloud_concurrency=2,
+                         seed=0)
+    r = run_stream(engine, {"HV": 15.0}, duration_ms=3_000.0)
+    st = r.per_model["HV"]
+    assert st.windows_total >= 1
+    assert st.qoe_utility == st.windows_met * 50.0
+
+
+def test_train_loop_learns_and_checkpoints(tmp_path):
+    cfg = reduced(ARCHS["granite-3-2b"], n_layers=2, d_model=128, vocab=256)
+    path = str(tmp_path / "ck")
+    state, losses = train(cfg, steps=60, batch=8, seq_len=64,
+                          checkpoint_path=path, log=lambda *a: None)
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.1, \
+        "loss did not decrease"
+    restored = ckpt.load(path, state.params)
+    for a, b in zip(jax.tree.leaves(restored),
+                    jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    import jax.numpy as jnp
+    path = str(tmp_path / "ck2")
+    ckpt.save(path, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError):
+        ckpt.load(path, {"w": jnp.zeros((5, 4))})
+
+
+def test_data_pipeline_determinism_and_structure():
+    from repro.data.pipeline import FastSyntheticLM
+    a = next(FastSyntheticLM(vocab=128, seq_len=32, batch=4).batches())
+    b = next(FastSyntheticLM(vocab=128, seq_len=32, batch=4).batches())
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # labels are next-token shifted
+    assert a["tokens"].shape == (4, 32)
+    assert (a["tokens"] < 128).all()
+    # structure exists: derived tokens appear at the advertised rate
+    # (mixing cascades, so only pairs whose source token survived match)
+    derived = (a["labels"] == (a["tokens"] * 31 + 7) % 128).mean()
+    assert derived > 0.2

@@ -1,0 +1,140 @@
+"""Unit tests for the logical-axis rule engine and launcher helpers."""
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import (DEFAULT_RULES, logical_to_pspec,
+                                   sharding_rules)
+
+
+@pytest.fixture(scope="module")
+def mesh2d():
+    n = jax.device_count()
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+class FakeMesh:
+    """Shape-only stand-in so we can test 16×16 rules on a 1-CPU host."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def _spec(shape, logical, mesh):
+    return logical_to_pspec(shape, logical, mesh, DEFAULT_RULES)
+
+
+def test_divisible_dims_shard():
+    m = FakeMesh(pod=1, data=16, model=16)
+    assert _spec((64, 4096), ("batch", "seq"), m) == P(("pod", "data"), None) \
+        or _spec((64, 4096), ("batch", "seq"), m)[0] is not None
+
+
+def test_indivisible_heads_fall_back_to_replication():
+    m = FakeMesh(pod=1, data=16, model=16)
+    # llava: 56 heads % 16 != 0 → heads dim replicated
+    spec = _spec((2, 128, 56, 128), ("batch", "seq", "heads", "head_dim"), m)
+    assert spec[2] is None
+    # qwen2: 64 heads divide → sharded
+    spec = _spec((2, 128, 64, 128), ("batch", "seq", "heads", "head_dim"), m)
+    assert spec[2] == "model"
+
+
+def test_axis_used_only_once_per_tensor():
+    m = FakeMesh(pod=1, data=16, model=16)
+    # both kv_seq and kv_heads want 'model'; first divisible dim wins
+    spec = _spec((80, 128, 32768, 8, 128),
+                 (None, "batch", "kv_seq", "kv_heads", None), m)
+    assert spec[2] == "model" and spec[3] is None
+
+
+def test_seq_model_fallback_for_attention_logits():
+    m = FakeMesh(pod=1, data=16, model=16)
+    # heads take 'model' when divisible → seq_model unused
+    spec = _spec((2, 64, 4096, 4096),
+                 ("batch", "heads", "seq_model", None), m)
+    assert spec[1] == "model" and spec[2] is None
+    # heads 56 fail → seq_model picks up the axis
+    spec = _spec((2, 56, 4096, 4096),
+                 ("batch", "heads", "seq_model", None), m)
+    assert spec[1] is None and spec[2] == "model"
+
+
+def test_missing_pod_axis_is_filtered(mesh2d):
+    with sharding_rules(mesh2d):
+        from repro.launch.sharding import shard
+        import jax.numpy as jnp
+        x = shard(jnp.zeros((jax.device_count(), 8)), "batch", "seq")
+        assert x.shape == (jax.device_count(), 8)
+
+
+def test_dryrun_helpers():
+    from repro.launch import dryrun as D
+    from repro.configs.registry import ARCHS
+
+    # skips documented for non-SWA full-attention archs
+    assert ("grok-1-314b", "long_500k") in D.SKIPS
+    assert ("whisper-medium", "long_500k") in D.SKIPS
+    assert ("qwen2-72b", "long_500k") not in D.SKIPS   # SWA variant runs
+
+    # microbatching tiers
+    assert D.n_micro_for(ARCHS["granite-3-2b"], "train_4k") == 1
+    assert D.n_micro_for(ARCHS["qwen2-72b"], "train_4k") == 8
+    assert D.n_micro_for(ARCHS["nemotron-4-340b"], "train_4k") == 16
+    assert D.n_micro_for(ARCHS["nemotron-4-340b"], "decode_32k") == 1
+
+    # the long_500k variant flips sliding_window on
+    v = D.variant_for(ARCHS["qwen2-72b"], "long_500k")
+    assert v.sliding_window == 8192
+    assert D.variant_for(ARCHS["qwen2-72b"], "decode_32k").sliding_window == 0
+
+    # delta units per family
+    assert D.delta_unit(ARCHS["granite-3-2b"]) == 1
+    assert D.delta_unit(ARCHS["xlstm-1.3b"]) == 8
+    assert D.delta_unit(ARCHS["zamba2-7b"]) == 6
+
+
+def test_input_specs_cover_all_families():
+    from repro.launch import dryrun as D
+    from repro.configs.registry import ARCHS
+
+    for name, cfg in ARCHS.items():
+        for shape in D.SHAPES:
+            specs = D.input_specs(cfg, shape)
+            assert "tokens" in specs or "token" in specs
+            for k, v in specs.items():
+                D.batch_logical(cfg, k)     # raises on unknown keys
+
+
+def test_roofline_hlo_collective_parsing():
+    from repro.roofline.analysis import collective_bytes, parse_collectives
+    hlo = """
+HloModule jit_step
+%body.1 (x: f32[8]) -> f32[8] {
+  %ar = bf16[256,1024]{1,0} all-reduce(%p), replica_groups={}
+}
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %ag = f32[512,512]{1,0} all-gather(%p0), dimensions={0}
+  %aa = bf16[64]{0} all-to-all(%p1)
+}
+"""
+    cols = parse_collectives(hlo)
+    kinds = sorted(c.kind for c in cols)
+    assert kinds == ["all-gather", "all-reduce", "all-to-all"]
+    agg = collective_bytes(hlo, body_trip_count=10)
+    assert agg["all-gather"] == 512 * 512 * 4
+    assert agg["all-reduce"] == 256 * 1024 * 2 * 10   # body × trip count
+    assert agg["all-to-all"] == 64 * 2
+
+
+def test_roofline_extrapolation():
+    from repro.roofline.analysis import RooflineTerms, extrapolate
+    # linear: base 10, per-layer 5 → at 40 layers: 210
+    assert extrapolate(15.0, 20.0, 1, 2, 40) == pytest.approx(210.0)
+    t = RooflineTerms.build(flops=1.97e14, hbm_bytes=1.0, coll_bytes=1.0)
+    assert t.bottleneck == "compute" and t.compute_s == pytest.approx(1.0)
