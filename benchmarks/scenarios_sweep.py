@@ -1,0 +1,68 @@
+"""Sweep scenario × policy and report completion rate / QoS / QoE.
+
+    PYTHONPATH=src python benchmarks/scenarios_sweep.py \
+        --backend oracle --duration-ms 120000
+    PYTHONPATH=src python benchmarks/scenarios_sweep.py \
+        --backend fleet --policies DEMS DEMS-COOP GEMS GEMS-COOP
+
+Oracle rows carry the full event-driven metric set (windows, stealing,
+migration); fleet rows add the cross-edge peer-offload count.  Output is
+CSV on stdout, one row per (scenario, policy).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.scenarios import (fleet_summary, get, names, run_scenario_fleet,
+                             run_scenario_oracle)
+
+ORACLE_POLICIES = ("EDF-E+C", "DEMS", "GEMS")
+FLEET_POLICIES = ("EDF-E+C", "DEMS", "DEMS-COOP", "GEMS", "GEMS-COOP")
+
+
+def sweep_oracle(scenarios, policies, duration_ms) -> None:
+    print("scenario,policy,generated,completed,completion_rate,"
+          "qos_utility,qoe_utility,stolen,migrated,gems_rescheduled")
+    for sc in scenarios:
+        spec = get(sc, duration_ms=duration_ms) if duration_ms else get(sc)
+        for pol in policies:
+            r = run_scenario_oracle(spec, pol).merged
+            print(f"{sc},{pol},{r.generated},{r.completed},"
+                  f"{r.completion_rate:.4f},{r.qos_utility:.0f},"
+                  f"{r.qoe_utility:.0f},{r.stolen},{r.migrated},"
+                  f"{r.gems_rescheduled}")
+
+
+def sweep_fleet(scenarios, policies, duration_ms, dt) -> None:
+    print("scenario,policy,completed,completion_rate,qos_utility,"
+          "qoe_utility,stolen,peer_offloaded")
+    for sc in scenarios:
+        spec = get(sc, duration_ms=duration_ms) if duration_ms else get(sc)
+        for pol in policies:
+            s = fleet_summary(run_scenario_fleet(spec, pol, dt=dt))
+            print(f"{sc},{pol},{s['completed']},"
+                  f"{s['completion_rate']:.4f},{s['qos_utility']:.0f},"
+                  f"{s['qoe_utility']:.0f},{s['stolen']},"
+                  f"{s['peer_offloaded']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="oracle",
+                    choices=("oracle", "fleet"))
+    ap.add_argument("--scenarios", nargs="*", default=list(names()))
+    ap.add_argument("--policies", nargs="*", default=None)
+    ap.add_argument("--duration-ms", type=float, default=None)
+    ap.add_argument("--dt", type=float, default=25.0)
+    args = ap.parse_args()
+
+    if args.backend == "oracle":
+        sweep_oracle(args.scenarios, args.policies or ORACLE_POLICIES,
+                     args.duration_ms)
+    else:
+        sweep_fleet(args.scenarios, args.policies or FLEET_POLICIES,
+                    args.duration_ms, args.dt)
+
+
+if __name__ == "__main__":
+    main()

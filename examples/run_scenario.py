@@ -1,0 +1,70 @@
+"""Run a named scenario through the oracle and/or the JAX fleet simulator.
+
+    PYTHONPATH=src python examples/run_scenario.py --scenario rush-hour \
+        --policy DEMS --backend both
+    PYTHONPATH=src python examples/run_scenario.py --scenario hetero-edges \
+        --policy DEMS --backend fleet --cooperation
+
+``--cooperation`` enables the cross-edge peer-offload exchange (fleet
+backend only; the oracle runs edges as silos).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.schedulers import ALL_POLICIES
+from repro.scenarios import (fleet_summary, get, names, run_scenario_fleet,
+                             run_scenario_oracle)
+from repro.sim.fleet_jax import FleetPolicy
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", default="baseline", choices=names())
+    ap.add_argument("--policy", default="DEMS")
+    ap.add_argument("--backend", default="both",
+                    choices=("oracle", "fleet", "both"))
+    ap.add_argument("--duration-ms", type=float, default=None,
+                    help="override the scenario's mission duration")
+    ap.add_argument("--cooperation", action="store_true",
+                    help="cross-edge peer offload (fleet backend)")
+    ap.add_argument("--dt", type=float, default=25.0)
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.duration_ms is not None:
+        overrides["duration_ms"] = args.duration_ms
+    spec = get(args.scenario, **overrides)
+    print(f"scenario={spec.name} edges={spec.n_edges} drones={spec.n_drones}"
+          f" models={','.join(spec.model_names)}"
+          f" duration={spec.duration_ms / 1000:.0f}s")
+
+    if args.backend in ("oracle", "both"):
+        if args.policy not in ALL_POLICIES:
+            ap.error(f"--policy {args.policy!r} unknown to the oracle; "
+                     f"choose from {ALL_POLICIES}")
+        run = run_scenario_oracle(spec, args.policy)
+        print("oracle  ", run.merged.summary())
+        for e, r in enumerate(run.per_edge):
+            print(f"  edge{e} tasks={r.completed}/{r.generated} "
+                  f"QoS={r.qos_utility:.0f} util="
+                  f"{100 * r.edge_utilization:.0f}%")
+
+    if args.backend in ("fleet", "both"):
+        try:
+            pol = FleetPolicy.from_name(args.policy)
+        except KeyError:
+            ap.error(f"--policy {args.policy!r} unknown to the fleet sim")
+        if args.cooperation:
+            import dataclasses
+            pol = dataclasses.replace(pol, cooperation=True)
+        final = run_scenario_fleet(spec, pol, dt=args.dt)
+        s = fleet_summary(final)
+        print(f"fleet    tasks={s['completed']} "
+              f"({100 * s['completion_rate']:.1f}% of settled) "
+              f"QoS={s['qos_utility']:.0f} QoE={s['qoe_utility']:.0f} "
+              f"stolen={s['stolen']} peer_offloaded={s['peer_offloaded']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -193,6 +193,38 @@ def steal_select(cq: CloudQueue, q: EdgeQueue, now, busy_rem,
 
 
 # ---------------------------------------------------------------------------
+# cross-edge peer offload (fleet-scope work stealing, beyond-paper)
+# ---------------------------------------------------------------------------
+
+def queue_load(q: EdgeQueue, busy_rem) -> jax.Array:
+    """Total pending edge work: banked execution time + queued t_edge."""
+    return jnp.maximum(busy_rem, 0.0) + jnp.where(q.valid, q.t_edge, 0.0).sum()
+
+
+def queue_slacks(q: EdgeQueue, now, busy_rem) -> jax.Array:
+    """Per-slot slack (deadline − projected completion); +inf for empties."""
+    proj = projected_completions(q, now, busy_rem)
+    return jnp.where(q.valid, q.deadline - proj, POS)
+
+
+def export_select(q: EdgeQueue, now, busy_rem, dst_load,
+                  slack_thresh) -> jax.Array:
+    """Index of the task an overloaded edge should export, or −1.
+
+    Candidates are queued tasks whose local slack is below
+    ``slack_thresh`` (projected to miss, or nearly so) that would still be
+    feasible appended behind the destination edge's current load.  The
+    worst-slack candidate is exported first — the fleet-scope mirror of
+    §5.3's "steal the task that needs rescue most".
+    """
+    slacks = queue_slacks(q, now, busy_rem)
+    feasible_dst = now + dst_load + q.t_edge <= q.deadline
+    cand = q.valid & feasible_dst & (slacks < slack_thresh)
+    idx = jnp.argmin(jnp.where(cand, slacks, POS))
+    return jnp.where(cand.any(), idx, -1)
+
+
+# ---------------------------------------------------------------------------
 # §6 — GEMS window rescheduler (Alg. 1 lines 9–14)
 # ---------------------------------------------------------------------------
 

@@ -14,16 +14,22 @@ HBM_BW = 819e9                  # B/s
 ICI_BW = 50e9                   # B/s per link
 
 
+def _auto_axis_kwargs(n_axes: int) -> dict:
+    """``axis_types=Auto`` where available; older jax has no AxisType and
+    treats every mesh axis as Auto anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_auto_axis_kwargs(len(axes)))
 
 
 def make_host_mesh():
     """Whatever this process actually has (tests / CPU smoke)."""
     n = jax.device_count()
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((n, 1), ("data", "model"), **_auto_axis_kwargs(2))

@@ -1,0 +1,21 @@
+"""Scenario engine: declarative fleet missions compiled to both simulators.
+
+See :mod:`repro.scenarios.spec` for the vocabulary,
+:mod:`repro.scenarios.registry` for the named library, and
+:mod:`repro.scenarios.runner` for one-call execution on the discrete-event
+oracle or the JAX fleet simulator.
+"""
+from repro.scenarios.compile import (OracleInputs, compile_fleet,
+                                     compile_oracle)
+from repro.scenarios.registry import SCENARIOS, get, names
+from repro.scenarios.runner import (fleet_summary, merge_results,
+                                    run_scenario_fleet, run_scenario_oracle)
+from repro.scenarios.spec import (Burst, CloudOutage, DroneSpec, EdgeSite,
+                                  ScenarioSpec, ThetaTrapezium)
+
+__all__ = [
+    "Burst", "CloudOutage", "DroneSpec", "EdgeSite", "OracleInputs",
+    "SCENARIOS", "ScenarioSpec", "ThetaTrapezium", "compile_fleet",
+    "compile_oracle", "fleet_summary", "get", "merge_results", "names",
+    "run_scenario_fleet", "run_scenario_oracle",
+]

@@ -1,0 +1,169 @@
+"""Lower a :class:`ScenarioSpec` to simulator inputs.
+
+Two targets, sharing the same arrival-time and handover geometry so the
+oracle and the fleet simulator see the same mission:
+
+* :func:`compile_oracle` — per-edge :class:`repro.sim.engine.Arrival`
+  streams plus per-edge θ(t) traces and outage windows for the
+  discrete-event engine.  For a single static edge with no events the
+  generated stream is **bit-for-bit identical** to
+  :func:`repro.sim.workloads.task_stream` (same RNG draw order), so every
+  existing workload is the degenerate scenario.
+* :func:`compile_fleet` — dense per-tick :class:`~repro.sim.fleet_jax.
+  FleetSignals` arrays: the drone→edge assignment is baked into the
+  arrival mask (handover re-homes future arrivals), edge speed factors
+  become per-edge load multipliers, outages become the cloud-up mask and
+  a post-outage cold-start bump on θ.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.scenarios.mobility import assignment
+from repro.scenarios.spec import ScenarioSpec
+from repro.sim import network
+from repro.sim.engine import Arrival
+from repro.sim.fleet_jax import FleetSignals
+
+
+@dataclasses.dataclass
+class OracleInputs:
+    """Compiled inputs for one :class:`repro.sim.engine.Simulator` per edge."""
+
+    spec: ScenarioSpec
+    edge_arrivals: list[list[Arrival]]
+    theta_fns: list[Callable[[float], float]]
+    # (start, end, cold_ms, cold_window_ms) per outage — the engine's
+    # 4-tuple form, preserving each outage's own cold-start profile
+    outages: tuple[tuple[float, float, float, float], ...]
+
+
+def _theta_fn(spec: ScenarioSpec, e: int) -> Callable[[float], float]:
+    th = spec.theta
+    if th is None or (th.edges is not None and e not in th.edges):
+        return network.constant(0.0)
+    return network.trapezium(th.low, th.high, th.ramp_up, th.ramp_down)
+
+
+def _arrival_times(spec: ScenarioSpec, d: int,
+                   rng: np.random.Generator) -> tuple[float, list[float]]:
+    """Base (phase, segment times) for drone ``d`` — task_stream protocol."""
+    phase = float(rng.uniform(0, spec.segment_ms))
+    n_segments = int(spec.duration_ms / spec.segment_ms)
+    times = [s * spec.segment_ms + phase for s in range(n_segments)]
+    return phase, times
+
+
+def _burst_times(spec: ScenarioSpec, phase: float) -> list[float]:
+    """Extra arrival times so total rate = rate_mult × base inside bursts."""
+    extra: list[float] = []
+    for b in spec.bursts:
+        if b.rate_mult <= 1.0:
+            continue
+        step = spec.segment_ms / (b.rate_mult - 1.0)
+        t = b.start_ms + (phase % step)
+        while t < min(b.end_ms, spec.duration_ms):
+            extra.append(t)
+            t += step
+    return extra
+
+
+def _emit(spec: ScenarioSpec, sink, seed=None) -> None:
+    """Walk every arrival event once, calling ``sink(t, d, e, order)``.
+
+    The base loop replicates ``workloads.task_stream`` draw-for-draw (one
+    shared RNG: per-drone phase, then per-segment model permutation), so a
+    1-edge static no-event spec compiles to the identical stream.  Burst
+    extras draw from per-drone child generators to leave the base stream
+    untouched.
+    """
+    rng = np.random.default_rng(spec.seed if seed is None else seed)
+    m = len(spec.model_names)
+    extras: list[tuple[float, int]] = []
+    for d in range(spec.n_drones):
+        phase, times = _arrival_times(spec, d, rng)
+        for t in times:
+            if t >= spec.duration_ms:
+                continue
+            order = rng.permutation(m)
+            if not spec.drone_alive(d, t):
+                continue                      # churn: draw but do not emit
+            sink(t, d, assignment(spec, d, t), order)
+        extras.extend((t, d) for t in _burst_times(spec, phase))
+    for t, d in sorted(extras):
+        erng = np.random.default_rng([spec.seed, 0x6275, d, int(t)])
+        order = erng.permutation(m)
+        if spec.drone_alive(d, t):
+            sink(t, d, assignment(spec, d, t), order)
+
+
+def compile_oracle(spec: ScenarioSpec) -> OracleInputs:
+    """Per-edge arrival streams + traces for the discrete-event engine."""
+    edge_models = [spec.edge_models(e) for e in range(spec.n_edges)]
+    edge_arrivals: list[list[Arrival]] = [[] for _ in range(spec.n_edges)]
+
+    def sink(t: float, d: int, e: int, order) -> None:
+        for k in order:
+            edge_arrivals[e].append(
+                Arrival(time=t, model=edge_models[e][int(k)], drone=d))
+
+    _emit(spec, sink)
+    return OracleInputs(
+        spec=spec,
+        edge_arrivals=edge_arrivals,
+        theta_fns=[_theta_fn(spec, e) for e in range(spec.n_edges)],
+        outages=tuple((o.start_ms, o.end_ms, o.cold_ms, o.cold_window_ms)
+                      for o in spec.outages))
+
+
+def compile_fleet(spec: ScenarioSpec, dt: float = 25.0) -> FleetSignals:
+    """Dense per-tick array signals for :func:`repro.sim.fleet_jax.run_fleet`.
+
+    The fleet simulator inserts at most one task per (edge, model) per
+    tick, so coincident same-model arrivals within one ``dt`` collapse —
+    negligible at the default 25 ms tick versus 1 s segments.
+    """
+    import jax.numpy as jnp
+
+    m = len(spec.model_names)
+    n_edges = spec.n_edges
+    n_ticks = int(spec.duration_ms / dt)
+    times = np.arange(n_ticks, dtype=np.float32) * dt
+
+    arrive = np.zeros((n_ticks, n_edges, m), dtype=bool)
+
+    def sink(t: float, d: int, e: int, order) -> None:
+        tick = min(int(t / dt), n_ticks - 1)
+        arrive[tick, e, :] = True
+
+    _emit(spec, sink)
+
+    # per-edge θ(t); post-outage cold starts appear as a θ bump so the
+    # first post-recovery dispatches pay the container-warmup price.
+    theta = np.zeros((n_ticks, n_edges), dtype=np.float32)
+    for e in range(n_edges):
+        fn = _theta_fn(spec, e)
+        theta[:, e] = [fn(t) for t in times]
+    cloud_up = np.ones(n_ticks, dtype=bool)
+    for o in spec.outages:
+        down = (times >= o.start_ms) & (times < o.end_ms)
+        cloud_up &= ~down
+        cold = (times >= o.end_ms) & (times < o.end_ms + o.cold_window_ms)
+        theta[cold, :] += o.cold_ms
+
+    load_mult = np.broadcast_to(
+        np.array([e.speed_factor for e in spec.edges], np.float32),
+        (n_ticks, n_edges)).copy()
+
+    rng = np.random.default_rng([spec.seed, 0x0dde])
+    order = np.stack([rng.permuted(np.tile(np.arange(m), (n_edges, 1)),
+                                   axis=1) for _ in range(n_ticks)]
+                     ).astype(np.int32)
+
+    return FleetSignals(
+        times=jnp.asarray(times), theta=jnp.asarray(theta),
+        arrive=jnp.asarray(arrive), order=jnp.asarray(order),
+        load_mult=jnp.asarray(load_mult), cloud_up=jnp.asarray(cloud_up))

@@ -1,0 +1,109 @@
+"""Named scenario library ("handle as many scenarios as you can imagine").
+
+Each entry is a zero-argument builder returning a fresh
+:class:`ScenarioSpec`; ``get(name)`` also accepts overrides (e.g. a
+shorter ``duration_ms`` for tests and quick sweeps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core.task import ACTIVE, PASSIVE
+from repro.scenarios.spec import (Burst, CloudOutage, DroneSpec, EdgeSite,
+                                  ScenarioSpec, ThetaTrapezium)
+
+
+def baseline() -> ScenarioSpec:
+    """The paper's 3D-P workload as a degenerate scenario: one edge, three
+    hovering drones, no events — compiles bit-for-bit to ``task_stream``."""
+    return ScenarioSpec(name="baseline")
+
+
+def rush_hour() -> ScenarioSpec:
+    """Arrival burst: every drone triples its segment rate for a minute
+    (VIP convoy passes through) while the fleet keeps steady elsewhere."""
+    return ScenarioSpec(
+        name="rush-hour",
+        edges=(EdgeSite(0, 0), EdgeSite(3_000, 0)),
+        drones=(DroneSpec(waypoints=((0.0, 100.0),)),
+                DroneSpec(waypoints=((100.0, 0.0),)),
+                DroneSpec(waypoints=((3_000.0, 100.0),)),
+                DroneSpec(waypoints=((2_900.0, 0.0),))),
+        bursts=(Burst(start_ms=60_000.0, end_ms=120_000.0, rate_mult=3.0),))
+
+
+def roaming_vips() -> ScenarioSpec:
+    """Two VIP drones commute across three coverage zones (handover) while
+    two station-keeping drones hold the end zones (active workload)."""
+    return ScenarioSpec(
+        name="roaming-vips",
+        model_names=ACTIVE,
+        edges=(EdgeSite(0, 0), EdgeSite(2_500, 0), EdgeSite(5_000, 0)),
+        drones=(DroneSpec(waypoints=((0.0, 0.0), (5_000.0, 0.0)),
+                          speed_mps=25.0),
+                DroneSpec(waypoints=((5_000.0, 200.0), (0.0, 200.0)),
+                          speed_mps=18.0),
+                DroneSpec(waypoints=((100.0, 0.0),)),
+                DroneSpec(waypoints=((4_900.0, 0.0),))))
+
+
+def flaky_cloud() -> ScenarioSpec:
+    """§8.5 trapezium WAN latency plus a hard cloud outage with cold
+    starts on recovery — the regime where edge-heavy policies win."""
+    return ScenarioSpec(
+        name="flaky-cloud",
+        theta=ThetaTrapezium(),
+        outages=(CloudOutage(start_ms=150_000.0, end_ms=180_000.0,
+                             cold_ms=900.0, cold_window_ms=5_000.0),))
+
+
+def hetero_edges() -> ScenarioSpec:
+    """Heterogeneous edge tiers: an Orin-class fast site, a Nano-class
+    slow site, and a nominal one, each serving local drones."""
+    return ScenarioSpec(
+        name="hetero-edges",
+        edges=(EdgeSite(0, 0, speed_factor=0.7),
+               EdgeSite(3_000, 0, speed_factor=1.0),
+               EdgeSite(6_000, 0, speed_factor=1.6)),
+        drones=tuple(DroneSpec(waypoints=((x, 0.0),))
+                     for x in (0.0, 100.0, 3_000.0, 3_100.0, 6_000.0,
+                               6_100.0)))
+
+
+def churn() -> ScenarioSpec:
+    """Drone churn: staggered spawns and dropouts (battery swaps, crashes)
+    across two sites — arrival load ramps up, shifts, and decays."""
+    d = 300_000.0
+    return ScenarioSpec(
+        name="churn",
+        edges=(EdgeSite(0, 0), EdgeSite(3_000, 0)),
+        drones=(DroneSpec(waypoints=((0.0, 0.0),), despawn_ms=0.6 * d),
+                DroneSpec(waypoints=((100.0, 0.0),), spawn_ms=0.2 * d),
+                DroneSpec(waypoints=((200.0, 0.0),), spawn_ms=0.4 * d,
+                          despawn_ms=0.8 * d),
+                DroneSpec(waypoints=((3_000.0, 0.0),), despawn_ms=0.5 * d),
+                DroneSpec(waypoints=((3_100.0, 0.0),), spawn_ms=0.1 * d),
+                DroneSpec(waypoints=((3_200.0, 0.0),), spawn_ms=0.5 * d)))
+
+
+SCENARIOS: dict[str, Callable[[], ScenarioSpec]] = {
+    "baseline": baseline,
+    "rush-hour": rush_hour,
+    "roaming-vips": roaming_vips,
+    "flaky-cloud": flaky_cloud,
+    "hetero-edges": hetero_edges,
+    "churn": churn,
+}
+
+
+def names() -> tuple[str, ...]:
+    return tuple(SCENARIOS)
+
+
+def get(name: str, **overrides) -> ScenarioSpec:
+    if name not in SCENARIOS:
+        raise ValueError(f"unknown scenario {name!r}; choose from "
+                         f"{sorted(SCENARIOS)}")
+    spec = SCENARIOS[name]()
+    return dataclasses.replace(spec, **overrides) if overrides else spec

@@ -1,0 +1,90 @@
+"""Drive a compiled scenario through either simulator and merge results.
+
+``run_scenario_oracle`` runs one discrete-event :class:`Simulator` per
+edge site (each with its own θ trace, outage windows and speed-scaled
+model table) and merges the per-edge :class:`Results`.
+``run_scenario_fleet`` lowers the same spec to dense tick signals and runs
+the vmapped/shardable JAX fleet simulator, optionally with cross-edge
+peer offload (``FleetPolicy.cooperation`` / ``"<name>-COOP"``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.schedulers import make_policy
+from repro.scenarios.compile import compile_fleet, compile_oracle
+from repro.scenarios.spec import ScenarioSpec
+from repro.sim.engine import ModelStats, Results, Simulator
+from repro.sim.network import CloudLatencyModel, EdgeLatencyModel
+
+
+def merge_results(results: list[Results]) -> Results:
+    """Fleet-wide totals: per-model stats summed across edge sites."""
+    per_model: dict[str, ModelStats] = {}
+    for r in results:
+        for name, st in r.per_model.items():
+            agg = per_model.setdefault(name, ModelStats())
+            for f in dataclasses.fields(ModelStats):
+                setattr(agg, f.name,
+                        getattr(agg, f.name) + getattr(st, f.name))
+    # duration = total edge-time so edge_utilization reads as fleet average
+    return Results(policy=results[0].policy if results else "?",
+                   duration=sum(r.duration for r in results),
+                   per_model=per_model,
+                   edge_busy=sum(r.edge_busy for r in results))
+
+
+@dataclasses.dataclass
+class OracleScenarioRun:
+    spec: ScenarioSpec
+    per_edge: list[Results]
+    merged: Results
+
+
+def run_scenario_oracle(spec: ScenarioSpec, policy: str, *,
+                        edge_model: EdgeLatencyModel | None = None,
+                        cloud_concurrency: int = 16,
+                        **policy_overrides) -> OracleScenarioRun:
+    """One event-driven Simulator per edge site; silo (non-cooperative)."""
+    compiled = compile_oracle(spec)
+    per_edge: list[Results] = []
+    for e, arrivals in enumerate(compiled.edge_arrivals):
+        cloud_model = CloudLatencyModel(latency_at=compiled.theta_fns[e])
+        sim = Simulator(
+            make_policy(policy, **policy_overrides), arrivals,
+            spec.duration_ms,
+            cloud_concurrency=cloud_concurrency,
+            edge_model=edge_model, cloud_model=cloud_model,
+            cloud_outages=compiled.outages,
+            seed=spec.seed + e)
+        per_edge.append(sim.run())
+    return OracleScenarioRun(spec=spec, per_edge=per_edge,
+                             merged=merge_results(per_edge))
+
+
+def run_scenario_fleet(spec: ScenarioSpec, policy, *, dt: float = 25.0,
+                       edge_frac: float = 0.62, cloud_frac: float = 0.80,
+                       mesh=None):
+    """The scenario through the JAX fleet simulator (stacked EdgeState)."""
+    from repro.sim.fleet_jax import run_fleet
+
+    signals = compile_fleet(spec, dt)
+    return run_fleet(spec.models, policy, signals, dt=dt,
+                     edge_frac=edge_frac, cloud_frac=cloud_frac, mesh=mesh)
+
+
+def fleet_summary(final) -> dict[str, float]:
+    """Scalar fleet-level metrics from a stacked final EdgeState."""
+    success = int(np.asarray(final.n_success).sum())
+    miss = int(np.asarray(final.n_miss).sum())
+    drop = int(np.asarray(final.n_drop).sum())
+    settled = max(success + miss + drop, 1)
+    return dict(
+        completed=success, missed=miss, dropped=drop,
+        completion_rate=success / settled,
+        qos_utility=float(np.asarray(final.qos_utility).sum()),
+        qoe_utility=float(np.asarray(final.qoe_utility).sum()),
+        stolen=int(np.asarray(final.n_stolen).sum()),
+        peer_offloaded=int(np.asarray(final.n_peer_out).sum()))

@@ -1,0 +1,126 @@
+"""Declarative scenario specifications (fleet control plane, ROADMAP "as
+many scenarios as you can imagine").
+
+A :class:`ScenarioSpec` describes *what happens* during a fleet mission —
+edge sites on a 2-D plane with coverage zones and heterogeneous speeds,
+drones flying waypoint routes (with spawn/despawn churn), arrival-rate
+bursts, WAN latency shaping and cloud outages — independently of *how* it
+is simulated.  :mod:`repro.scenarios.compile` lowers a spec to
+
+* per-edge :class:`repro.sim.engine.Arrival` streams + latency traces for
+  the discrete-event oracle, and
+* dense per-tick array signals (drone→edge assignment baked into arrival
+  masks, per-edge θ(t) and load multipliers, cloud-up mask) for the
+  vmapped fleet simulator in :mod:`repro.sim.fleet_jax`.
+
+All times are milliseconds, positions meters, speeds m/s.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.task import PASSIVE, TABLE1, ModelProfile
+
+DEFAULT_SEGMENT_MS = 1_000.0
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeSite:
+    """One base station: position, coverage radius, relative speed.
+
+    ``speed_factor`` scales the edge's *actual and expected* execution
+    latency (>1 = slower hardware), modeling heterogeneous Jetson tiers.
+    """
+
+    x: float = 0.0
+    y: float = 0.0
+    radius: float = 1_500.0
+    speed_factor: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DroneSpec:
+    """One drone: a waypoint route plus optional churn window.
+
+    The drone flies the waypoint polyline at ``speed_mps``, ping-ponging
+    back and forth; ``speed_mps == 0`` or a single waypoint means it
+    hovers at ``waypoints[0]``.  Outside [``spawn_ms``, ``despawn_ms``)
+    the drone emits no tasks (churn / dropout).
+    """
+
+    waypoints: tuple[tuple[float, float], ...] = ((0.0, 0.0),)
+    speed_mps: float = 0.0
+    spawn_ms: float = 0.0
+    despawn_ms: Optional[float] = None   # None → mission end
+
+
+@dataclasses.dataclass(frozen=True)
+class Burst:
+    """Arrival-rate burst: segment rate × ``rate_mult`` during the window."""
+
+    start_ms: float
+    end_ms: float
+    rate_mult: float = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CloudOutage:
+    """Cloud FaaS unavailability window with post-recovery cold starts."""
+
+    start_ms: float
+    end_ms: float
+    cold_ms: float = 600.0          # penalty on dispatches just after the end
+    cold_window_ms: float = 3_000.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ThetaTrapezium:
+    """§8.5 trapezium added-latency waveform, optionally per edge subset."""
+
+    low: float = 0.0
+    high: float = 400.0
+    ramp_up: tuple[float, float] = (60_000.0, 90_000.0)
+    ramp_down: tuple[float, float] = (210_000.0, 240_000.0)
+    edges: Optional[tuple[int, ...]] = None   # None → every edge
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """A complete mission description, compilable to both simulators."""
+
+    name: str
+    duration_ms: float = 300_000.0
+    segment_ms: float = DEFAULT_SEGMENT_MS
+    model_names: tuple[str, ...] = PASSIVE
+    edges: tuple[EdgeSite, ...] = (EdgeSite(),)
+    drones: tuple[DroneSpec, ...] = (DroneSpec(), DroneSpec(), DroneSpec())
+    bursts: tuple[Burst, ...] = ()
+    outages: tuple[CloudOutage, ...] = ()
+    theta: Optional[ThetaTrapezium] = None
+    seed: int = 0
+
+    @property
+    def models(self) -> list[ModelProfile]:
+        return [TABLE1[n] for n in self.model_names]
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.edges)
+
+    @property
+    def n_drones(self) -> int:
+        return len(self.drones)
+
+    def edge_models(self, e: int) -> list[ModelProfile]:
+        """Model table as seen by edge ``e`` (speed factor folded into t)."""
+        sf = self.edges[e].speed_factor
+        if sf == 1.0:
+            return self.models
+        return [dataclasses.replace(m, t_edge=m.t_edge * sf)
+                for m in self.models]
+
+    def drone_alive(self, d: int, t: float) -> bool:
+        dr = self.drones[d]
+        end = self.duration_ms if dr.despawn_ms is None else dr.despawn_ms
+        return dr.spawn_ms <= t < end

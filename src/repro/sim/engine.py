@@ -138,6 +138,9 @@ class Simulator:
                  cloud_concurrency: int = 16,
                  edge_model: Optional[EdgeLatencyModel] = None,
                  cloud_model: Optional[CloudLatencyModel] = None,
+                 cloud_outages: tuple[tuple[float, float], ...] = (),
+                 outage_cold_ms: float = 0.0,
+                 outage_cold_window_ms: float = 3_000.0,
                  seed: int = 0):
         self.policy = policy
         self.arrivals = sorted(arrivals, key=lambda a: a.time)
@@ -146,6 +149,16 @@ class Simulator:
         self.edge_model = edge_model or EdgeLatencyModel()
         self.cloud_model = cloud_model or CloudLatencyModel()
         self.cloud_slots = cloud_concurrency
+        # cloud FaaS outage windows (scenario events): dispatch stalls
+        # during [start, end); dispatches shortly after recovery pay a
+        # cold-start penalty (the warm container pool has drained).
+        # Entries are (start, end) or (start, end, cold_ms, cold_window_ms);
+        # 2-tuples take the Simulator-level defaults.
+        self.cloud_outages = tuple(sorted(
+            tuple(o) if len(tuple(o)) == 4
+            else (*o, outage_cold_ms, outage_cold_window_ms)
+            for o in cloud_outages))
+        self._recovery_checks: set[float] = set()
 
         self.profiles: dict[str, ModelProfile] = {}
         for a in self.arrivals:
@@ -386,7 +399,30 @@ class Simulator:
             self._push(acc.trigger, "cloud_check", None)
         return True
 
+    def _outage_end(self, t: float) -> Optional[float]:
+        """End of the outage window containing ``t``, or None if cloud up."""
+        for start, end, _, _ in self.cloud_outages:
+            if start <= t < end:
+                return end
+        return None
+
+    def _cold_penalty(self) -> float:
+        """Post-outage cold start: warm pool drained while the cloud was
+        down, so dispatches within that outage's cold window pay its
+        warmup price."""
+        for _, end, cold_ms, cold_window_ms in self.cloud_outages:
+            if cold_ms and 0.0 <= self.now - end < cold_window_ms:
+                return cold_ms
+        return 0.0
+
     def _cloud_dispatch(self) -> None:
+        up_at = self._outage_end(self.now)
+        if up_at is not None:
+            # cloud down: park everything; re-check the queue on recovery.
+            if up_at not in self._recovery_checks:
+                self._recovery_checks.add(up_at)
+                self._push(up_at, "cloud_check", None)
+            return
         while self.cloud_inflight < self.cloud_slots and self.cloud_pending:
             task = self.cloud_pending[0]
             if self._triggers[task.uid] > self.now:
@@ -404,7 +440,7 @@ class Simulator:
             if self.policy.adaptive:
                 self.adaptive[task.model.name].on_sent()
             dur = self.cloud_model.sample(self.rng, task.model.t_cloud,
-                                          self.now)
+                                          self.now) + self._cold_penalty()
             self.cloud_inflight += 1
             self._push(self.now + dur, "cloud_done", (task, dur))
 

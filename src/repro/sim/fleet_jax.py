@@ -48,16 +48,25 @@ class FleetPolicy:
     gems: bool = False
     use_cloud: bool = True
     cloud_margin: float = 50.0
+    # cross-edge cooperation (beyond-paper; fleet-scope work stealing):
+    # after each tick, edges whose minimum queue slack drops below
+    # ``coop_slack_ms`` export their worst-slack feasible tasks to the
+    # least-loaded peer, at most ``coop_max_transfers`` moves per tick.
+    cooperation: bool = False
+    coop_slack_ms: float = 0.0
+    coop_max_transfers: int = 2
 
     @classmethod
     def from_name(cls, name: str) -> "FleetPolicy":
-        return {
+        coop = name.endswith("-COOP")
+        base = {
             "EDF": cls(use_cloud=False),
             "EDF-E+C": cls(),
             "DEM": cls(migration=True),
             "DEMS": cls(migration=True, stealing=True),
             "GEMS": cls(migration=True, stealing=True, gems=True),
-        }[name]
+        }[name[:-5] if coop else name]
+        return dataclasses.replace(base, cooperation=True) if coop else base
 
 
 class Profiles(NamedTuple):
@@ -114,6 +123,9 @@ class EdgeState(NamedTuple):
     win_end: jax.Array         # f32[M]
     qoe_utility: jax.Array     # f32[]
     windows_met: jax.Array     # i32[M]
+    # cross-edge cooperation stats
+    n_peer_out: jax.Array      # i32[] tasks exported to a peer edge
+    n_peer_in: jax.Array       # i32[] tasks imported from a peer edge
 
 
 def init_state(prof: Profiles) -> EdgeState:
@@ -126,7 +138,26 @@ def init_state(prof: Profiles) -> EdgeState:
         n_success=zi, n_miss=zi, n_drop=zi, n_stolen=zi, n_edge_exec=zi,
         qos_utility=jnp.zeros(()),
         lam=zi, lam_hat=zi, win_end=prof.qoe_window,
-        qoe_utility=jnp.zeros(()), windows_met=zi)
+        qoe_utility=jnp.zeros(()), windows_met=zi,
+        n_peer_out=jnp.zeros((), jnp.int32),
+        n_peer_in=jnp.zeros((), jnp.int32))
+
+
+class FleetSignals(NamedTuple):
+    """Dense per-tick scenario signals driving the fleet simulator.
+
+    Produced either by :func:`default_signals` (the paper's steady
+    3-drones-per-edge workload) or by
+    :func:`repro.scenarios.compile.compile_fleet` (mobility, handover,
+    bursts, churn, outages, heterogeneous edges).
+    """
+
+    times: jax.Array       # f32[T]    tick start times [ms]
+    theta: jax.Array       # f32[T,E]  per-edge added WAN latency θ(t)
+    arrive: jax.Array      # bool[T,E,M] model m arrives at edge e this tick
+    order: jax.Array       # i32[T,E,M] randomized insertion order (§3.3)
+    load_mult: jax.Array   # f32[T,E]  edge execution-time multiplier
+    cloud_up: jax.Array    # bool[T]   cloud FaaS availability
 
 
 # ---------------------------------------------------------------------------
@@ -134,9 +165,14 @@ def init_state(prof: Profiles) -> EdgeState:
 # ---------------------------------------------------------------------------
 
 def _resolve_cloud(st: EdgeState, prof: Profiles, now, theta,
-                   cloud_frac, pol: FleetPolicy) -> EdgeState:
-    """Dispatch all matured cloud tasks (elastic FaaS → resolve now)."""
-    mature = st.cq.valid & (st.cq.trigger <= now)
+                   cloud_frac, pol: FleetPolicy, cloud_up) -> EdgeState:
+    """Dispatch all matured cloud tasks (elastic FaaS → resolve now).
+
+    During a cloud outage (``cloud_up`` False) matured tasks stay parked
+    on the trigger-time queue; the dispatch-time deadline check settles
+    their fate once the cloud returns — mirroring the oracle's behavior.
+    """
+    mature = st.cq.valid & (st.cq.trigger <= now) & cloud_up
     run = mature & ~st.cq.steal_only
     act = cloud_frac * prof.t_cloud[st.cq_model] + theta
     success = run & (now + act <= st.cq.deadline)
@@ -202,16 +238,20 @@ def _gems_act(st: EdgeState, prof: Profiles, now) -> EdgeState:
         windows_met=st.windows_met + met.astype(jnp.int32))
 
 
-def _offer_cloud(st: EdgeState, prof: Profiles, now, model, deadline,
+def _offer_cloud(st: EdgeState, prof: Profiles, now, model, deadline, te,
                  pol: FleetPolicy, enable) -> tuple[EdgeState, jax.Array]:
-    """Cloud admission (Policy.offer_cloud) — returns (state, accepted)."""
+    """Cloud admission (Policy.offer_cloud) — returns (state, accepted).
+
+    ``te`` is the task's *effective* edge latency on this edge (speed
+    factor folded in), kept on the cloud queue for steal decisions.
+    """
     if not pol.use_cloud:
         return st, jnp.asarray(False)
     t_hat = prof.t_cloud[model]
     feasible = now + t_hat <= deadline
     negative = prof.gamma_c[model] <= 0
     if pol.stealing:
-        trigger = jnp.where(negative, deadline - prof.t_edge[model],
+        trigger = jnp.where(negative, deadline - te,
                             jnp.maximum(now, deadline - t_hat
                                         - pol.cloud_margin))
         ok_neg = trigger >= now
@@ -221,7 +261,7 @@ def _offer_cloud(st: EdgeState, prof: Profiles, now, model, deadline,
         trigger = now
         accept = enable & feasible & ~negative
         steal_only = jnp.asarray(False)
-    cq, pushed = js.cloud_push(st.cq, trigger, prof.t_edge[model], deadline,
+    cq, pushed = js.cloud_push(st.cq, trigger, te, deadline,
                                steal_only, prof.steal_rank[model],
                                enable=accept)
     slot = jnp.argmax(~st.cq.valid)
@@ -231,10 +271,16 @@ def _offer_cloud(st: EdgeState, prof: Profiles, now, model, deadline,
 
 
 def _route_arrival(st: EdgeState, prof: Profiles, now, model,
-                   pol: FleetPolicy, arrive) -> EdgeState:
-    """Task-scheduler routing for one arriving task (§5.1–5.2)."""
+                   pol: FleetPolicy, arrive, load_mult) -> EdgeState:
+    """Task-scheduler routing for one arriving task (§5.1–5.2).
+
+    ``load_mult`` is the edge's speed factor: the effective edge latency
+    ``load_mult·t_edge`` is stored on the queues, so feasibility, JIT
+    checks, stealing and execution all see the heterogeneous speed —
+    matching the oracle compiler, which folds it into the model table.
+    """
     deadline = now + prof.deadline[model]
-    te = prof.t_edge[model]
+    te = prof.t_edge[model] * load_mult
     feasible = js.insert_feasible(st.eq, now, st.busy_rem, deadline, te,
                                   deadline)
     if pol.migration:
@@ -251,7 +297,8 @@ def _route_arrival(st: EdgeState, prof: Profiles, now, model,
         def offer_victim(i, s):
             is_v = victims[i] & insert_edge
             s2, pushed = _offer_cloud(s, prof, now, st.eq.model[i],
-                                      st.eq.deadline[i], pol, is_v)
+                                      st.eq.deadline[i], st.eq.t_edge[i],
+                                      pol, is_v)
             rejected = is_v & ~pushed
             return s2._replace(n_drop=s2.n_drop.at[st.eq.model[i]].add(
                 rejected.astype(jnp.int32)))
@@ -264,7 +311,8 @@ def _route_arrival(st: EdgeState, prof: Profiles, now, model,
                          enable=insert_edge)
     st = st._replace(eq=eq, seq=st.seq + arrive.astype(jnp.int32))
     to_cloud = arrive & ~insert_edge
-    st, pushed = _offer_cloud(st, prof, now, model, deadline, pol, to_cloud)
+    st, pushed = _offer_cloud(st, prof, now, model, deadline, te, pol,
+                              to_cloud)
     st = st._replace(n_drop=st.n_drop.at[model].add(
         (to_cloud & ~pushed).astype(jnp.int32)))
     return st
@@ -272,7 +320,12 @@ def _route_arrival(st: EdgeState, prof: Profiles, now, model,
 
 def _edge_execute(st: EdgeState, prof: Profiles, now, dt, edge_frac,
                   pol: FleetPolicy, min_edge_t) -> EdgeState:
-    """Edge executor: JIT drops, stealing, starting the next task."""
+    """Edge executor: JIT drops, stealing, starting the next task.
+
+    Queue entries carry the *effective* edge latency (speed factor folded
+    in at insert time), so every check and the executed duration reflect
+    heterogeneous edge speeds consistently.
+    """
     def body(_, s: EdgeState) -> EdgeState:
         idle = s.busy_rem <= 0.0
 
@@ -280,7 +333,7 @@ def _edge_execute(st: EdgeState, prof: Profiles, now, dt, edge_frac,
         eq_after, head_idx, found = js.edge_pop_head(s.eq)
         head_model = s.eq.model[head_idx]
         head_dl = s.eq.deadline[head_idx]
-        head_te = prof.t_edge[head_model]
+        head_te = s.eq.t_edge[head_idx]
         head_infeasible = found & (now + head_te > head_dl)
         do_drop = idle & head_infeasible
         s = s._replace(
@@ -301,6 +354,7 @@ def _edge_execute(st: EdgeState, prof: Profiles, now, dt, edge_frac,
             can_steal = idle & (sidx >= 0)
             smodel = s.cq_model[jnp.maximum(sidx, 0)]
             sdl = s.cq.deadline[jnp.maximum(sidx, 0)]
+            ste = s.cq.t_edge[jnp.maximum(sidx, 0)]
             s = s._replace(cq=s.cq._replace(
                 valid=jnp.where(can_steal,
                                 s.cq.valid.at[jnp.maximum(sidx, 0)].set(
@@ -311,14 +365,16 @@ def _edge_execute(st: EdgeState, prof: Profiles, now, dt, edge_frac,
             can_steal = jnp.asarray(False)
             smodel = jnp.zeros((), jnp.int32)
             sdl = jnp.zeros(())
+            ste = jnp.zeros(())
 
         # start next task: stolen task first, else the queue head
         eq_after, head_idx, found = js.edge_pop_head(s.eq)
         start_head = idle & ~can_steal & found
         run_model = jnp.where(can_steal, smodel, s.eq.model[head_idx])
         run_dl = jnp.where(can_steal, sdl, s.eq.deadline[head_idx])
+        run_te = jnp.where(can_steal, ste, s.eq.t_edge[head_idx])
         start = can_steal | start_head
-        act = edge_frac * prof.t_edge[run_model]
+        act = edge_frac * run_te
         success = start & (now + act <= run_dl)
         util = jnp.where(success, prof.gamma_e[run_model],
                          jnp.where(start, -prof.cost_e[run_model], 0.0))
@@ -355,12 +411,14 @@ def make_step(prof: Profiles, pol: FleetPolicy, dt: float,
     m = prof.t_edge.shape[0]
 
     def step(st: EdgeState, inputs) -> tuple[EdgeState, None]:
-        now, theta, arrive, order = inputs   # arrive: bool[M]; order: i32[M]
-        st = _resolve_cloud(st, prof, now, theta, cloud_frac, pol)
+        # arrive: bool[M]; order: i32[M]; load_mult/theta per edge scalars
+        now, theta, arrive, order, load_mult, cloud_up = inputs
+        st = _resolve_cloud(st, prof, now, theta, cloud_frac, pol, cloud_up)
         # §3.3: tasks of a segment are inserted in randomized order
         def route_one(i, s):
             mdl = order[i]
-            return _route_arrival(s, prof, now, mdl, pol, arrive[mdl])
+            return _route_arrival(s, prof, now, mdl, pol, arrive[mdl],
+                                  load_mult)
         st = jax.lax.fori_loop(0, m, route_one, st)
         st = _edge_execute(st, prof, now, dt, edge_frac, pol, min_edge_t)
         if pol.gems:
@@ -370,19 +428,82 @@ def make_step(prof: Profiles, pol: FleetPolicy, dt: float,
     return step
 
 
-def simulate_fleet(models: list[ModelProfile], policy: str, *,
-                   n_edges: int, drones_per_edge: int = 3,
-                   duration_ms: float = 300_000.0, dt: float = 25.0,
-                   edge_frac: float = 0.62, cloud_frac: float = 0.80,
-                   theta_fn=None, seed: int = 0,
-                   mesh: Optional[jax.sharding.Mesh] = None) -> EdgeState:
-    """Simulate ``n_edges`` base stations; returns stacked final states.
+# ---------------------------------------------------------------------------
+# cross-edge peer offload (fleet-level exchange between ticks)
+# ---------------------------------------------------------------------------
 
-    With ``mesh`` given, fleet state and arrivals are sharded over its
-    first axis (pjit-style data parallelism over edges).
+def peer_offload(fs: EdgeState, now, slack_ms,
+                 max_transfers: int) -> EdgeState:
+    """Move doomed tasks from overloaded edges to the least-loaded peer.
+
+    Operates on the *stacked* fleet state (leading edge axis).  Each of
+    the ``max_transfers`` rounds picks the worst-min-slack edge *among
+    those with an actually exportable task* (so an unexportable straggler
+    cannot starve other overloaded edges), selects its worst-slack task
+    that is still feasible behind the least-loaded other edge's queue,
+    and re-homes it — the paper's §5.3 work-stealing idea lifted from
+    edge↔cloud to edge↔edge.  Queue ``t_edge`` entries carry the source
+    edge's speed factor; destination feasibility reuses them, which is
+    conservative when the destination is faster.  Under a sharded fleet
+    axis the gathers/scatters lower to cross-device collectives.
     """
-    prof = Profiles.build(models)
-    m = len(models)
+    n_edges = fs.busy_rem.shape[0]
+    if n_edges < 2:
+        return fs
+
+    def one_transfer(_, fs: EdgeState) -> EdgeState:
+        busy = jnp.maximum(fs.busy_rem, 0.0)
+        slacks = jax.vmap(js.queue_slacks, in_axes=(0, None, 0))(
+            fs.eq, now, busy)                              # [E, Q]
+        min_slack = slacks.min(-1)                         # [E]
+        load = jax.vmap(js.queue_load)(fs.eq, fs.busy_rem)  # [E]
+
+        # each edge's best available destination load (least-loaded other
+        # edge): the global minimum, or the runner-up for that edge itself
+        lead = jnp.argmin(load)
+        runner_up = jnp.where(jnp.arange(n_edges) == lead, js.POS,
+                              load).min()
+        dst_load = jnp.where(jnp.arange(n_edges) == lead, runner_up,
+                             load.min())                   # [E]
+        exportable = (fs.eq.valid & (slacks < slack_ms)
+                      & (now + dst_load[:, None] + fs.eq.t_edge
+                         <= fs.eq.deadline)).any(-1)       # [E]
+        over = (min_slack < slack_ms) & exportable
+        src = jnp.argmin(jnp.where(over, min_slack, js.POS))
+        dst = jnp.argmin(jnp.where(jnp.arange(n_edges) == src, js.POS, load))
+
+        src_eq = jax.tree.map(lambda a: a[src], fs.eq)
+        vidx = js.export_select(src_eq, now, busy[src], load[dst], slack_ms)
+        ok = over.any() & (vidx >= 0)
+        vi = jnp.maximum(vidx, 0)
+
+        free = ~fs.eq.valid[dst]
+        ok = ok & free.any()
+        slot = jnp.argmax(free)
+        eq = fs.eq
+        moved = js.EdgeQueue(
+            valid=eq.valid.at[src, vi].set(False).at[dst, slot].set(True),
+            key=eq.key.at[dst, slot].set(src_eq.key[vi]),
+            seq=eq.seq.at[dst, slot].set(fs.seq[dst]),
+            t_edge=eq.t_edge.at[dst, slot].set(src_eq.t_edge[vi]),
+            deadline=eq.deadline.at[dst, slot].set(src_eq.deadline[vi]),
+            model=eq.model.at[dst, slot].set(src_eq.model[vi]))
+        new_eq = jax.tree.map(lambda a, b: jnp.where(ok, a, b), moved, eq)
+        oki = ok.astype(jnp.int32)
+        return fs._replace(
+            eq=new_eq,
+            seq=fs.seq.at[dst].add(oki),
+            n_peer_out=fs.n_peer_out.at[src].add(oki),
+            n_peer_in=fs.n_peer_in.at[dst].add(oki))
+
+    return jax.lax.fori_loop(0, max_transfers, one_transfer, fs)
+
+
+def default_signals(n_models: int, *, n_edges: int, drones_per_edge: int = 3,
+                    duration_ms: float = 300_000.0, dt: float = 25.0,
+                    theta_fn=None, seed: int = 0) -> FleetSignals:
+    """The paper's steady workload as dense tick signals (§8.1/§8.6)."""
+    m = n_models
     n_ticks = int(duration_ms / dt)
     rng = np.random.default_rng(seed)
 
@@ -396,31 +517,72 @@ def simulate_fleet(models: list[ModelProfile], policy: str, *,
             seg_t = np.arange(phase, duration_ms, 1000.0)
             ticks = np.minimum((seg_t / dt).astype(int), n_ticks - 1)
             arrive[ticks, e, :] = True
-    theta = np.array([theta_fn(t) if theta_fn else 0.0 for t in times],
-                     dtype=np.float32)
+    theta_t = np.array([theta_fn(t) if theta_fn else 0.0 for t in times],
+                       dtype=np.float32)
+    theta = np.broadcast_to(theta_t[:, None], (n_ticks, n_edges))
     order = np.stack([rng.permuted(np.tile(np.arange(m), (n_edges, 1)),
                                    axis=1) for _ in range(n_ticks)]
                      ).astype(np.int32)
+    return FleetSignals(
+        times=jnp.asarray(times), theta=jnp.asarray(theta),
+        arrive=jnp.asarray(arrive), order=jnp.asarray(order),
+        load_mult=jnp.ones((n_ticks, n_edges), jnp.float32),
+        cloud_up=jnp.ones(n_ticks, bool))
 
-    step = make_step(prof, FleetPolicy.from_name(policy), dt, edge_frac,
-                     cloud_frac)
-    vstep = jax.vmap(step, in_axes=(0, (None, None, 0, 0)))
+
+def run_fleet(models: list[ModelProfile], policy, signals: FleetSignals, *,
+              dt: float = 25.0, edge_frac: float = 0.62,
+              cloud_frac: float = 0.80,
+              mesh: Optional[jax.sharding.Mesh] = None) -> EdgeState:
+    """Run the fleet simulator over arbitrary scenario signals.
+
+    ``policy`` is a :class:`FleetPolicy` or a name (``"DEMS"``,
+    ``"GEMS-COOP"``, …).  With ``mesh`` given, fleet state is sharded over
+    its first axis (pjit-style data parallelism over edges); the peer
+    offload exchange then runs as cross-device collectives.
+    """
+    pol = policy if isinstance(policy, FleetPolicy) \
+        else FleetPolicy.from_name(policy)
+    prof = Profiles.build(models)
+    n_edges = signals.arrive.shape[1]
+
+    step = make_step(prof, pol, dt, edge_frac, cloud_frac)
+    vstep = jax.vmap(step, in_axes=(0, (None, 0, 0, 0, 0, None)))
+    cooperate = pol.cooperation and n_edges > 1
 
     def scan_body(state, xs):
-        now, th, arr, ordr = xs
-        state, _ = vstep(state, (now, th, arr, ordr))
+        now, th, arr, ordr, lm, cup = xs
+        state, _ = vstep(state, (now, th, arr, ordr, lm, cup))
+        if cooperate:
+            state = peer_offload(state, now + dt, pol.coop_slack_ms,
+                                 pol.coop_max_transfers)
         return state, None
 
     state = jax.vmap(lambda _: init_state(prof))(jnp.arange(n_edges))
-    xs = (jnp.asarray(times), jnp.asarray(theta), jnp.asarray(arrive),
-          jnp.asarray(order))
+    xs = tuple(signals)
     if mesh is not None:
         axis = mesh.axis_names[0]
-        shard = jax.sharding.NamedSharding(
-            mesh, jax.sharding.PartitionSpec(axis))
         state = jax.tree.map(
             lambda a: jax.device_put(a, jax.sharding.NamedSharding(
                 mesh, jax.sharding.PartitionSpec(
                     *([axis] + [None] * (a.ndim - 1))))), state)
     final, _ = jax.jit(lambda s, x: jax.lax.scan(scan_body, s, x))(state, xs)
     return final
+
+
+def simulate_fleet(models: list[ModelProfile], policy: str, *,
+                   n_edges: int, drones_per_edge: int = 3,
+                   duration_ms: float = 300_000.0, dt: float = 25.0,
+                   edge_frac: float = 0.62, cloud_frac: float = 0.80,
+                   theta_fn=None, seed: int = 0,
+                   mesh: Optional[jax.sharding.Mesh] = None) -> EdgeState:
+    """Simulate ``n_edges`` base stations under the paper's steady
+    workload; returns stacked final states.  Scenario-driven runs (bursts,
+    mobility, outages, …) go through :func:`run_fleet` with signals from
+    :mod:`repro.scenarios.compile`."""
+    signals = default_signals(len(models), n_edges=n_edges,
+                              drones_per_edge=drones_per_edge,
+                              duration_ms=duration_ms, dt=dt,
+                              theta_fn=theta_fn, seed=seed)
+    return run_fleet(models, policy, signals, dt=dt, edge_frac=edge_frac,
+                     cloud_frac=cloud_frac, mesh=mesh)

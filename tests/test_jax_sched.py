@@ -9,7 +9,9 @@ queue states and asserts exact agreement.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import jax_sched as js
 from repro.core.schedulers import AdaptiveEstimator, make_policy

@@ -1,0 +1,89 @@
+"""Trace-shaping tests for sim/network.py (§8.5, Figs 1–2)."""
+import numpy as np
+import pytest
+
+from repro.sim.network import (NOMINAL_BW_MBPS, SEGMENT_KB,
+                               CloudLatencyModel, cellular_bandwidth_trace,
+                               constant, transfer_ms, trapezium)
+
+
+# ---------------------------------------------------------------------------
+# trapezium θ(t)
+# ---------------------------------------------------------------------------
+
+def test_trapezium_breakpoints_default():
+    th = trapezium()
+    assert th(0.0) == 0.0
+    assert th(59_999.9) == 0.0
+    assert th(60_000.0) == 0.0            # ramp starts at low
+    assert th(75_000.0) == pytest.approx(200.0)
+    assert th(90_000.0) == 400.0          # plateau begins
+    assert th(150_000.0) == 400.0
+    assert th(210_000.0) == 400.0         # ramp-down start
+    assert th(225_000.0) == pytest.approx(200.0)
+    assert th(240_000.0) == 0.0           # back to low, stays there
+    assert th(1e9) == 0.0
+
+
+def test_trapezium_custom_levels_and_monotone_ramps():
+    th = trapezium(low=50.0, high=250.0, ramp_up=(10_000.0, 20_000.0),
+                   ramp_down=(30_000.0, 40_000.0))
+    assert th(0.0) == 50.0
+    assert th(25_000.0) == 250.0
+    up = [th(t) for t in np.linspace(10_000.0, 20_000.0, 11)]
+    down = [th(t) for t in np.linspace(30_000.0, 40_000.0, 11)]
+    assert all(a <= b + 1e-9 for a, b in zip(up, up[1:]))
+    assert all(a >= b - 1e-9 for a, b in zip(down, down[1:]))
+    assert min(up + down) >= 50.0 and max(up + down) <= 250.0
+
+
+# ---------------------------------------------------------------------------
+# bounded bandwidth random walk
+# ---------------------------------------------------------------------------
+
+def test_bandwidth_walk_stays_within_bounds():
+    lo, hi = 0.25, 40.0
+    bw = cellular_bandwidth_trace(seed=7, duration_ms=120_000.0,
+                                  lo=lo, hi=hi)
+    samples = [bw(t) for t in np.arange(0.0, 125_000.0, 250.0)]
+    assert min(samples) >= lo
+    assert max(samples) <= hi
+    assert np.std(samples) > 0.0          # it actually moves
+
+
+def test_bandwidth_walk_reproducible_and_clamped_past_horizon():
+    a = cellular_bandwidth_trace(seed=3, duration_ms=10_000.0)
+    b = cellular_bandwidth_trace(seed=3, duration_ms=10_000.0)
+    assert [a(t) for t in range(0, 10_000, 500)] == \
+        [b(t) for t in range(0, 10_000, 500)]
+    assert a(10 * 10_000.0) == a(1e12)    # beyond-horizon → last value
+
+
+# ---------------------------------------------------------------------------
+# transfer_ms edge cases
+# ---------------------------------------------------------------------------
+
+def test_transfer_ms_nominal_segment():
+    # 38 kB at 20 Mbps: 38·8/20 = 15.2 ms
+    assert transfer_ms(SEGMENT_KB, NOMINAL_BW_MBPS) == pytest.approx(15.2)
+
+
+def test_transfer_ms_degenerate_inputs():
+    assert transfer_ms(0.0, 10.0) == 0.0
+    # zero / negative bandwidth clamps to 1e-3 Mbps instead of dividing by 0
+    assert transfer_ms(1.0, 0.0) == pytest.approx(8_000.0)
+    assert transfer_ms(1.0, -5.0) == pytest.approx(8_000.0)
+    # monotone: more bandwidth, less time
+    assert transfer_ms(38.0, 40.0) < transfer_ms(38.0, 20.0)
+
+
+def test_shaped_delta_combines_theta_and_bandwidth_penalty():
+    cm = CloudLatencyModel(latency_at=constant(100.0),
+                           bandwidth_at=constant(NOMINAL_BW_MBPS / 2))
+    want_bw = transfer_ms(SEGMENT_KB, NOMINAL_BW_MBPS / 2) - \
+        transfer_ms(SEGMENT_KB, NOMINAL_BW_MBPS)
+    assert cm.shaped_delta(0.0) == pytest.approx(100.0 + want_bw)
+    # bandwidth above nominal never *reduces* latency below θ
+    cm2 = CloudLatencyModel(latency_at=constant(7.0),
+                            bandwidth_at=constant(2 * NOMINAL_BW_MBPS))
+    assert cm2.shaped_delta(0.0) == pytest.approx(7.0)

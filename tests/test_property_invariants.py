@@ -3,7 +3,9 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.schedulers import ALL_POLICIES, make_policy
 from repro.core.task import ModelProfile

@@ -1,0 +1,176 @@
+"""Scenario engine acceptance tests (ISSUE 1).
+
+1. a single-edge, no-event scenario compiles to the existing
+   ``task_stream`` workload bit-for-bit;
+2. on a 2-edge fleet with one overloaded edge, cross-edge peer offload
+   strictly increases completed tasks over cooperation disabled;
+3. a handover scenario re-homes a roaming drone's arrivals to the
+   covering edge in both the oracle and the JAX fleet sim.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.task import PASSIVE, TABLE1
+from repro.scenarios import (Burst, CloudOutage, DroneSpec, EdgeSite,
+                             ScenarioSpec, compile_fleet, compile_oracle,
+                             fleet_summary, get, names, run_scenario_fleet,
+                             run_scenario_oracle)
+from repro.sim.fleet_jax import FleetPolicy, run_fleet
+from repro.sim.workloads import task_stream
+
+MODELS = [TABLE1[n] for n in PASSIVE]
+
+
+# ---------------------------------------------------------------------------
+# (1) degenerate scenario ≡ existing workload
+# ---------------------------------------------------------------------------
+
+def test_baseline_scenario_reproduces_task_stream_bit_for_bit():
+    spec = get("baseline", duration_ms=60_000.0, seed=3)
+    compiled = compile_oracle(spec)
+    want = task_stream(MODELS, n_drones=3, duration_ms=60_000.0, seed=3)
+    assert compiled.edge_arrivals == [want]
+
+
+# ---------------------------------------------------------------------------
+# (2) peer offload rescues an overloaded edge
+# ---------------------------------------------------------------------------
+
+def test_peer_offload_strictly_increases_completed_tasks():
+    # all six drones camp on edge 0; edge 1 idles nearby
+    spec = ScenarioSpec(
+        name="hotspot", duration_ms=60_000.0,
+        edges=(EdgeSite(0, 0), EdgeSite(3_000, 0)),
+        drones=tuple(DroneSpec(waypoints=((10.0 * i, 0.0),))
+                     for i in range(6)))
+    signals = compile_fleet(spec)
+    coop = run_fleet(spec.models, FleetPolicy(cooperation=True), signals)
+    silo = run_fleet(spec.models, FleetPolicy(), signals)
+    n_coop = int(np.asarray(coop.n_success).sum())
+    n_silo = int(np.asarray(silo.n_success).sum())
+    assert int(np.asarray(coop.n_peer_out).sum()) > 0
+    assert np.asarray(coop.n_peer_out)[0] > 0          # exporter is edge 0
+    assert np.asarray(coop.n_peer_in)[1] > 0           # importer is edge 1
+    assert n_coop > n_silo
+
+
+def test_peer_offload_noop_on_single_edge():
+    spec = get("baseline", duration_ms=30_000.0)
+    signals = compile_fleet(spec)
+    coop = run_fleet(spec.models, FleetPolicy(cooperation=True), signals)
+    silo = run_fleet(spec.models, FleetPolicy(), signals)
+    assert int(np.asarray(coop.n_peer_out).sum()) == 0
+    assert int(np.asarray(coop.n_success).sum()) == \
+        int(np.asarray(silo.n_success).sum())
+
+
+# ---------------------------------------------------------------------------
+# (3) handover re-homes a roaming drone's arrivals
+# ---------------------------------------------------------------------------
+
+HANDOVER = ScenarioSpec(
+    name="handover", duration_ms=60_000.0,
+    edges=(EdgeSite(0, 0, radius=1_100.0),
+           EdgeSite(2_000, 0, radius=1_100.0)),
+    # 2000 m at 33.4 m/s → crosses the x=1000 midline near t = 30 s
+    drones=(DroneSpec(waypoints=((0.0, 0.0), (2_000.0, 0.0)),
+                      speed_mps=33.4),))
+
+
+def test_handover_rehomes_arrivals_in_oracle():
+    compiled = compile_oracle(HANDOVER)
+    t0 = [a.time for a in compiled.edge_arrivals[0]]
+    t1 = [a.time for a in compiled.edge_arrivals[1]]
+    assert t0 and t1
+    assert max(t0) < 31_000.0 <= min(t1) + 2_000.0     # split near 30 s
+    assert max(t0) < min(t1)                           # clean handover
+    run = run_scenario_oracle(HANDOVER, "DEMS")
+    assert all(r.completed > 0 for r in run.per_edge)
+    assert run.merged.generated == len(t0) + len(t1)
+
+
+def test_handover_rehomes_arrivals_in_fleet_sim():
+    signals = compile_fleet(HANDOVER, dt=25.0)
+    arrive = np.asarray(signals.arrive)                # [T, E, M]
+    times = np.asarray(signals.times)
+    e0_times = times[arrive[:, 0].any(-1)]
+    e1_times = times[arrive[:, 1].any(-1)]
+    assert e0_times.size and e1_times.size
+    assert e0_times.max() < e1_times.min()             # re-homed, not mixed
+    final = run_fleet(HANDOVER.models, "DEMS", signals)
+    per_edge_done = np.asarray(final.n_success).sum(-1)
+    assert (per_edge_done > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# scenario events: bursts, churn, outages, heterogeneity, registry
+# ---------------------------------------------------------------------------
+
+def test_burst_raises_arrival_count_only_inside_window():
+    base = ScenarioSpec(name="b0", duration_ms=60_000.0)
+    burst = dataclasses.replace(
+        base, bursts=(Burst(start_ms=20_000.0, end_ms=40_000.0,
+                            rate_mult=3.0),))
+    n_base = len(compile_oracle(base).edge_arrivals[0])
+    got = compile_oracle(burst).edge_arrivals[0]
+    extra = [a for a in got if a.time not in
+             {b.time for b in compile_oracle(base).edge_arrivals[0]}]
+    assert len(got) > n_base
+    assert all(20_000.0 <= a.time < 40_000.0 for a in extra)
+    # rate_mult 3 ⇒ ~2 extra segments/s/drone over 20 s × 3 drones
+    assert len(got) - n_base == pytest.approx(
+        2 * 20 * 3 * len(base.model_names), rel=0.1)
+
+
+def test_churn_drops_arrivals_outside_lifetime():
+    spec = ScenarioSpec(
+        name="c0", duration_ms=60_000.0,
+        drones=(DroneSpec(despawn_ms=30_000.0),
+                DroneSpec(spawn_ms=30_000.0)))
+    arr = compile_oracle(spec).edge_arrivals[0]
+    for a in arr:
+        if a.drone == 0:
+            assert a.time < 30_000.0
+        else:
+            assert a.time >= 30_000.0
+
+
+def test_cloud_outage_hurts_oracle_completion():
+    base = ScenarioSpec(name="o0", duration_ms=60_000.0)
+    out = dataclasses.replace(
+        base, outages=(CloudOutage(start_ms=15_000.0, end_ms=45_000.0),))
+    r_base = run_scenario_oracle(base, "DEMS").merged
+    r_out = run_scenario_oracle(out, "DEMS").merged
+    assert r_out.generated == r_base.generated
+    assert r_out.completed < r_base.completed
+
+
+def test_cloud_outage_gates_fleet_dispatch():
+    base = ScenarioSpec(name="o1", duration_ms=60_000.0)
+    out = dataclasses.replace(
+        base, outages=(CloudOutage(start_ms=15_000.0, end_ms=45_000.0),))
+    s_base = fleet_summary(run_scenario_fleet(base, "DEMS"))
+    s_out = fleet_summary(run_scenario_fleet(out, "DEMS"))
+    assert not np.asarray(compile_fleet(out).cloud_up).all()
+    assert s_out["completed"] < s_base["completed"]
+
+
+def test_hetero_edges_scale_oracle_latency_and_fleet_load_mult():
+    spec = get("hetero-edges", duration_ms=30_000.0)
+    fast, nominal, slow = (spec.edge_models(e) for e in range(3))
+    assert fast[0].t_edge < nominal[0].t_edge < slow[0].t_edge
+    lm = np.asarray(compile_fleet(spec).load_mult)
+    assert np.allclose(lm[0], [0.7, 1.0, 1.6])
+
+
+def test_registry_has_six_compilable_scenarios():
+    assert len(names()) >= 6
+    for name in names():
+        spec = get(name, duration_ms=10_000.0)
+        compiled = compile_oracle(spec)
+        assert len(compiled.edge_arrivals) == spec.n_edges
+        assert sum(len(a) for a in compiled.edge_arrivals) > 0
+        signals = compile_fleet(spec)
+        assert np.asarray(signals.arrive).any()

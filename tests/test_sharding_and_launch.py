@@ -12,9 +12,8 @@ from repro.launch.sharding import (DEFAULT_RULES, logical_to_pspec,
 
 @pytest.fixture(scope="module")
 def mesh2d():
-    n = jax.device_count()
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh()
 
 
 class FakeMesh:
