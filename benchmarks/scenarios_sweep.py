@@ -1,23 +1,28 @@
-"""Sweep scenario × policy and report completion rate / QoS / QoE.
+"""Sweep scenario × policy × seed and report completion rate / QoS / QoE.
 
     PYTHONPATH=src python benchmarks/scenarios_sweep.py \
         --backend oracle --duration-ms 120000
     PYTHONPATH=src python benchmarks/scenarios_sweep.py \
-        --backend fleet --policies DEMS DEMS-COOP GEMS GEMS-COOP
+        --backend fleet --policies DEMS DEMS-A GEMS-COOP --seeds 0 1 2
+    PYTHONPATH=src python benchmarks/scenarios_sweep.py --quick
 
 Oracle rows carry the full event-driven metric set (windows, stealing,
-migration); fleet rows add the cross-edge peer-offload count.  Output is
-CSV on stdout, one row per (scenario, policy).
+migration); fleet rows add the cross-edge peer-offload count.  The fleet
+backend runs each (scenario, policy) seed sweep as *one* compiled program
+(`run_fleet_batch`), so N seeds cost one jit, not N.  Output is CSV on
+stdout, one row per (scenario, policy, seed).  ``--quick`` is the CI
+smoke path: one short scenario on both backends.
 """
 from __future__ import annotations
 
 import argparse
 
-from repro.scenarios import (fleet_summary, get, names, run_scenario_fleet,
-                             run_scenario_oracle)
+from repro.scenarios import (fleet_summary_batch, get, names,
+                             run_scenario_fleet_batch, run_scenario_oracle)
 
 ORACLE_POLICIES = ("EDF-E+C", "DEMS", "GEMS")
-FLEET_POLICIES = ("EDF-E+C", "DEMS", "DEMS-COOP", "GEMS", "GEMS-COOP")
+FLEET_POLICIES = ("EDF-E+C", "DEMS", "DEMS-A", "DEMS-COOP", "GEMS",
+                  "GEMS-A", "GEMS-COOP")
 
 
 def sweep_oracle(scenarios, policies, duration_ms) -> None:
@@ -33,17 +38,18 @@ def sweep_oracle(scenarios, policies, duration_ms) -> None:
                   f"{r.gems_rescheduled}")
 
 
-def sweep_fleet(scenarios, policies, duration_ms, dt) -> None:
-    print("scenario,policy,completed,completion_rate,qos_utility,"
+def sweep_fleet(scenarios, policies, duration_ms, dt, seeds) -> None:
+    print("scenario,policy,seed,completed,completion_rate,qos_utility,"
           "qoe_utility,stolen,peer_offloaded")
     for sc in scenarios:
         spec = get(sc, duration_ms=duration_ms) if duration_ms else get(sc)
         for pol in policies:
-            s = fleet_summary(run_scenario_fleet(spec, pol, dt=dt))
-            print(f"{sc},{pol},{s['completed']},"
-                  f"{s['completion_rate']:.4f},{s['qos_utility']:.0f},"
-                  f"{s['qoe_utility']:.0f},{s['stolen']},"
-                  f"{s['peer_offloaded']}")
+            final = run_scenario_fleet_batch(spec, pol, tuple(seeds), dt=dt)
+            for seed, s in zip(seeds, fleet_summary_batch(final)):
+                print(f"{sc},{pol},{seed},{s['completed']},"
+                      f"{s['completion_rate']:.4f},{s['qos_utility']:.0f},"
+                      f"{s['qoe_utility']:.0f},{s['stolen']},"
+                      f"{s['peer_offloaded']}")
 
 
 def main() -> None:
@@ -52,16 +58,25 @@ def main() -> None:
                     choices=("oracle", "fleet"))
     ap.add_argument("--scenarios", nargs="*", default=list(names()))
     ap.add_argument("--policies", nargs="*", default=None)
+    ap.add_argument("--seeds", nargs="*", type=int, default=[0],
+                    help="fleet backend: batched one-jit seed sweep")
     ap.add_argument("--duration-ms", type=float, default=None)
     ap.add_argument("--dt", type=float, default=25.0)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: one short scenario, both backends")
     args = ap.parse_args()
 
+    if args.quick:
+        sweep_oracle(("baseline",), ("DEMS",), 20_000.0)
+        sweep_fleet(("baseline",), ("DEMS", "DEMS-A"), 20_000.0, args.dt,
+                    (0, 1))
+        return
     if args.backend == "oracle":
         sweep_oracle(args.scenarios, args.policies or ORACLE_POLICIES,
                      args.duration_ms)
     else:
         sweep_fleet(args.scenarios, args.policies or FLEET_POLICIES,
-                    args.duration_ms, args.dt)
+                    args.duration_ms, args.dt, args.seeds)
 
 
 if __name__ == "__main__":

@@ -2,18 +2,23 @@
 
     PYTHONPATH=src python examples/run_scenario.py --scenario rush-hour \
         --policy DEMS --backend both
+    PYTHONPATH=src python examples/run_scenario.py --scenario flaky-cloud \
+        --policy DEMS-A --backend fleet --seeds 0 1 2
     PYTHONPATH=src python examples/run_scenario.py --scenario hetero-edges \
         --policy DEMS --backend fleet --cooperation
 
 ``--cooperation`` enables the cross-edge peer-offload exchange (fleet
-backend only; the oracle runs edges as silos).
+backend only; the oracle runs edges as silos).  Passing more than one
+``--seeds`` value runs the fleet backend's whole seed sweep as a single
+compiled program (``run_fleet_batch``).
 """
 from __future__ import annotations
 
 import argparse
 
 from repro.core.schedulers import ALL_POLICIES
-from repro.scenarios import (fleet_summary, get, names, run_scenario_fleet,
+from repro.scenarios import (fleet_summary, fleet_summary_batch, get, names,
+                             run_scenario_fleet, run_scenario_fleet_batch,
                              run_scenario_oracle)
 from repro.sim.fleet_jax import FleetPolicy
 
@@ -28,6 +33,8 @@ def main() -> None:
                     help="override the scenario's mission duration")
     ap.add_argument("--cooperation", action="store_true",
                     help="cross-edge peer offload (fleet backend)")
+    ap.add_argument("--seeds", nargs="*", type=int, default=None,
+                    help=">1 seed: one-jit batched fleet sweep")
     ap.add_argument("--dt", type=float, default=25.0)
     args = ap.parse_args()
 
@@ -53,11 +60,22 @@ def main() -> None:
     if args.backend in ("fleet", "both"):
         try:
             pol = FleetPolicy.from_name(args.policy)
-        except KeyError:
-            ap.error(f"--policy {args.policy!r} unknown to the fleet sim")
+        except ValueError as e:
+            ap.error(str(e))
         if args.cooperation:
             import dataclasses
             pol = dataclasses.replace(pol, cooperation=True)
+        if args.seeds and len(args.seeds) > 1:
+            final = run_scenario_fleet_batch(spec, pol, tuple(args.seeds),
+                                             dt=args.dt)
+            for seed, s in zip(args.seeds, fleet_summary_batch(final)):
+                print(f"fleet[s{seed}] tasks={s['completed']} "
+                      f"({100 * s['completion_rate']:.1f}% of settled) "
+                      f"QoS={s['qos_utility']:.0f} "
+                      f"QoE={s['qoe_utility']:.0f} stolen={s['stolen']}")
+            return
+        if args.seeds:
+            spec = get(args.scenario, seed=args.seeds[0], **overrides)
         final = run_scenario_fleet(spec, pol, dt=args.dt)
         s = fleet_summary(final)
         print(f"fleet    tasks={s['completed']} "

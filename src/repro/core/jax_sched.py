@@ -284,6 +284,15 @@ def adapt_on_sent(st: AdaptState, model) -> AdaptState:
     return st._replace(cooling_start=st.cooling_start.at[model].set(-1.0))
 
 
+def adapt_select(pred, a: AdaptState, b: AdaptState) -> AdaptState:
+    """Elementwise ``where`` over whole estimator states (masked updates).
+
+    The fleet tick loop computes a candidate post-event state for every
+    queue slot and keeps it only where the event actually fired.
+    """
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
 def adapt_on_skip(st: AdaptState, model, now, static, t_cp) -> AdaptState:
     inflated = st.current[model] > static[model]
     cs = st.cooling_start[model]

@@ -6,16 +6,19 @@ See :mod:`repro.scenarios.spec` for the vocabulary,
 oracle or the JAX fleet simulator.
 """
 from repro.scenarios.compile import (OracleInputs, compile_fleet,
-                                     compile_oracle)
+                                     compile_fleet_batch, compile_oracle)
 from repro.scenarios.registry import SCENARIOS, get, names
-from repro.scenarios.runner import (fleet_summary, merge_results,
-                                    run_scenario_fleet, run_scenario_oracle)
+from repro.scenarios.runner import (fleet_summary, fleet_summary_batch,
+                                    merge_results, run_scenario_fleet,
+                                    run_scenario_fleet_batch,
+                                    run_scenario_oracle)
 from repro.scenarios.spec import (Burst, CloudOutage, DroneSpec, EdgeSite,
                                   ScenarioSpec, ThetaTrapezium)
 
 __all__ = [
     "Burst", "CloudOutage", "DroneSpec", "EdgeSite", "OracleInputs",
     "SCENARIOS", "ScenarioSpec", "ThetaTrapezium", "compile_fleet",
-    "compile_oracle", "fleet_summary", "get", "merge_results", "names",
-    "run_scenario_fleet", "run_scenario_oracle",
+    "compile_fleet_batch", "compile_oracle", "fleet_summary",
+    "fleet_summary_batch", "get", "merge_results", "names",
+    "run_scenario_fleet", "run_scenario_fleet_batch", "run_scenario_oracle",
 ]

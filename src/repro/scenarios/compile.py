@@ -26,7 +26,7 @@ from repro.scenarios.mobility import assignment
 from repro.scenarios.spec import ScenarioSpec
 from repro.sim import network
 from repro.sim.engine import Arrival
-from repro.sim.fleet_jax import FleetSignals
+from repro.sim.fleet_jax import FleetSignals, stack_signals
 
 
 @dataclasses.dataclass
@@ -167,3 +167,12 @@ def compile_fleet(spec: ScenarioSpec, dt: float = 25.0) -> FleetSignals:
         times=jnp.asarray(times), theta=jnp.asarray(theta),
         arrive=jnp.asarray(arrive), order=jnp.asarray(order),
         load_mult=jnp.asarray(load_mult), cloud_up=jnp.asarray(cloud_up))
+
+
+def compile_fleet_batch(spec: ScenarioSpec, seeds: tuple[int, ...],
+                        dt: float = 25.0) -> FleetSignals:
+    """Stacked signals ``[R, …]`` for one scenario across ``seeds`` —
+    input to :func:`repro.sim.fleet_jax.run_fleet_batch`, which runs the
+    whole seed sweep as a single compiled program."""
+    return stack_signals([compile_fleet(sp, dt)
+                          for sp in spec.reseeded(tuple(seeds))])

@@ -6,15 +6,19 @@ model table) and merges the per-edge :class:`Results`.
 ``run_scenario_fleet`` lowers the same spec to dense tick signals and runs
 the vmapped/shardable JAX fleet simulator, optionally with cross-edge
 peer offload (``FleetPolicy.cooperation`` / ``"<name>-COOP"``).
+``run_scenario_fleet_batch`` sweeps one scenario over many seeds as a
+single compiled program (one jit instead of R Python-loop jits).
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax
 import numpy as np
 
 from repro.core.schedulers import make_policy
-from repro.scenarios.compile import compile_fleet, compile_oracle
+from repro.scenarios.compile import (compile_fleet, compile_fleet_batch,
+                                     compile_oracle)
 from repro.scenarios.spec import ScenarioSpec
 from repro.sim.engine import ModelStats, Results, Simulator
 from repro.sim.network import CloudLatencyModel, EdgeLatencyModel
@@ -75,6 +79,23 @@ def run_scenario_fleet(spec: ScenarioSpec, policy, *, dt: float = 25.0,
                      edge_frac=edge_frac, cloud_frac=cloud_frac, mesh=mesh)
 
 
+def run_scenario_fleet_batch(spec: ScenarioSpec, policy,
+                             seeds: tuple[int, ...], *, dt: float = 25.0,
+                             edge_frac: float = 0.62,
+                             cloud_frac: float = 0.80, mesh=None):
+    """One scenario × many seeds as one compiled fleet program.
+
+    Returns a stacked final EdgeState with leading ``[R, E]`` axes;
+    use :func:`fleet_summary_batch` for per-seed metrics.
+    """
+    from repro.sim.fleet_jax import run_fleet_batch
+
+    signals = compile_fleet_batch(spec, tuple(seeds), dt)
+    return run_fleet_batch(spec.models, policy, signals, dt=dt,
+                           edge_frac=edge_frac, cloud_frac=cloud_frac,
+                           mesh=mesh)
+
+
 def fleet_summary(final) -> dict[str, float]:
     """Scalar fleet-level metrics from a stacked final EdgeState."""
     success = int(np.asarray(final.n_success).sum())
@@ -88,3 +109,10 @@ def fleet_summary(final) -> dict[str, float]:
         qoe_utility=float(np.asarray(final.qoe_utility).sum()),
         stolen=int(np.asarray(final.n_stolen).sum()),
         peer_offloaded=int(np.asarray(final.n_peer_out).sum()))
+
+
+def fleet_summary_batch(final) -> list[dict[str, float]]:
+    """Per-replica summaries from a ``run_fleet_batch`` final state."""
+    n_replicas = np.asarray(final.qos_utility).shape[0]
+    return [fleet_summary(jax.tree.map(lambda a: a[r], final))
+            for r in range(n_replicas)]

@@ -124,3 +124,8 @@ class ScenarioSpec:
         dr = self.drones[d]
         end = self.duration_ms if dr.despawn_ms is None else dr.despawn_ms
         return dr.spawn_ms <= t < end
+
+    def reseeded(self, seeds: tuple[int, ...]) -> tuple["ScenarioSpec", ...]:
+        """Replicas of this mission differing only in the RNG seed — the
+        unit of a :func:`repro.sim.fleet_jax.run_fleet_batch` sweep."""
+        return tuple(dataclasses.replace(self, seed=s) for s in seeds)

@@ -14,12 +14,19 @@ Modeling simplifications vs the event-driven oracle (documented per §Design):
   ``cloud_frac·t̂ + θ(t)``) — variability enters via the shaped θ trace;
 * the cloud is elastic: a dispatched request's outcome is resolved at its
   trigger time (no slot contention);
-* no DEMS-A estimator in the tick loop (validated separately).
+* DEMS-A observations are batched per tick (the oracle interleaves
+  estimator updates in event order within one instant).
 
 Supported policy flags: EDF-E+C routing, DEM migration, DEMS work stealing
-with trigger-time cloud queue and steal-only parking, GEMS window
-rescheduling.  ``tests/test_fleet_jax.py`` checks single-edge agreement with
-the discrete-event engine.
+with trigger-time cloud queue and steal-only parking, DEMS-A sliding-window
+cloud-latency adaptation (§5.4), GEMS window rescheduling.
+``tests/test_fleet_jax.py`` checks single-edge agreement with the
+discrete-event engine.
+
+Sweeps (seeds × scenario variants) run as *one* compiled program through
+:func:`run_fleet_batch`: stack per-run :class:`FleetSignals` with
+:func:`stack_signals` and the whole sweep becomes a single
+``vmap``-over-replicas jitted scan, optionally sharded over a mesh.
 """
 from __future__ import annotations
 
@@ -32,11 +39,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import jax_sched as js
+from repro.core import schedulers as _sched
 from repro.core.task import ModelProfile
 
 EDGE_CAP = 32
 CLOUD_CAP = 64
 SUBSTEPS = 6      # max edge executor actions (drops/starts) per tick
+
+
+# Fleet-supported policy names; flag sets derive from the oracle's registry
+# (core.schedulers._POLICIES) so the two simulators cannot drift apart.
+_FLEET_POLICY_NAMES = ("EDF", "EDF-E+C", "DEM", "DEMS", "DEMS-A", "GEMS",
+                       "GEMS-A")
+_FLEET_FLAGS = ("migration", "stealing", "gems", "adaptive", "use_cloud")
+_FLEET_POLICIES = {
+    name: {k: v for k, v in _sched._POLICIES[name].items()
+           if k in _FLEET_FLAGS}
+    for name in _FLEET_POLICY_NAMES
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +68,12 @@ class FleetPolicy:
     gems: bool = False
     use_cloud: bool = True
     cloud_margin: float = 50.0
+    # DEMS-A sliding-window cloud-latency adaptation (§5.4): estimator
+    # hyper-parameters mirror core.schedulers.AdaptiveEstimator.
+    adaptive: bool = False
+    adapt_window: int = 10
+    adapt_eps: float = 10.0
+    adapt_cooling_ms: float = 10_000.0
     # cross-edge cooperation (beyond-paper; fleet-scope work stealing):
     # after each tick, edges whose minimum queue slack drops below
     # ``coop_slack_ms`` export their worst-slack feasible tasks to the
@@ -59,13 +85,13 @@ class FleetPolicy:
     @classmethod
     def from_name(cls, name: str) -> "FleetPolicy":
         coop = name.endswith("-COOP")
-        base = {
-            "EDF": cls(use_cloud=False),
-            "EDF-E+C": cls(),
-            "DEM": cls(migration=True),
-            "DEMS": cls(migration=True, stealing=True),
-            "GEMS": cls(migration=True, stealing=True, gems=True),
-        }[name[:-5] if coop else name]
+        base_name = name[: -len("-COOP")] if coop else name
+        if base_name not in _FLEET_POLICIES:
+            supported = sorted(_FLEET_POLICIES) + sorted(
+                n + "-COOP" for n in _FLEET_POLICIES)
+            raise ValueError(f"unknown fleet policy {name!r}; choose from "
+                             f"{supported}")
+        base = cls(**_FLEET_POLICIES[base_name])
         return dataclasses.replace(base, cooperation=True) if coop else base
 
 
@@ -126,9 +152,11 @@ class EdgeState(NamedTuple):
     # cross-edge cooperation stats
     n_peer_out: jax.Array      # i32[] tasks exported to a peer edge
     n_peer_in: jax.Array       # i32[] tasks imported from a peer edge
+    # DEMS-A estimator state (§5.4): per-model sliding-window t̂
+    adapt: js.AdaptState
 
 
-def init_state(prof: Profiles) -> EdgeState:
+def init_state(prof: Profiles, adapt_window: int = 10) -> EdgeState:
     m = prof.t_edge.shape[0]
     zi = jnp.zeros(m, jnp.int32)
     return EdgeState(
@@ -140,7 +168,13 @@ def init_state(prof: Profiles) -> EdgeState:
         lam=zi, lam_hat=zi, win_end=prof.qoe_window,
         qoe_utility=jnp.zeros(()), windows_met=zi,
         n_peer_out=jnp.zeros((), jnp.int32),
-        n_peer_in=jnp.zeros((), jnp.int32))
+        n_peer_in=jnp.zeros((), jnp.int32),
+        adapt=js.adapt_init(prof.t_cloud, adapt_window))
+
+
+def _t_cloud_cur(st: EdgeState, prof: Profiles, pol: FleetPolicy) -> jax.Array:
+    """Scheduler's current cloud-latency estimate t̂ per model (§5.4)."""
+    return st.adapt.current if pol.adaptive else prof.t_cloud
 
 
 class FleetSignals(NamedTuple):
@@ -171,21 +205,48 @@ def _resolve_cloud(st: EdgeState, prof: Profiles, now, theta,
     During a cloud outage (``cloud_up`` False) matured tasks stay parked
     on the trigger-time queue; the dispatch-time deadline check settles
     their fate once the cloud returns — mirroring the oracle's behavior.
+
+    With ``pol.adaptive`` (DEMS-A, §5.4) dispatch adds the oracle's JIT
+    check against the *adapted* estimate t̂: tasks it predicts to miss are
+    skipped (dropped, feeding the cooling timer) instead of dispatched;
+    dispatched tasks fire ``on_sent`` and, since the elastic cloud
+    resolves them in the same tick, ``observe`` their actual duration.
     """
     mature = st.cq.valid & (st.cq.trigger <= now) & cloud_up
     run = mature & ~st.cq.steal_only
+    if pol.adaptive:
+        est = st.adapt.current[st.cq_model]
+        dispatch = run & (now + est <= st.cq.deadline)
+        skipped = run & ~(now + est <= st.cq.deadline)
+    else:
+        dispatch = run
+        skipped = jnp.zeros_like(run)
     act = cloud_frac * prof.t_cloud[st.cq_model] + theta
-    success = run & (now + act <= st.cq.deadline)
+    success = dispatch & (now + act <= st.cq.deadline)
     util = jnp.where(success, prof.gamma_c[st.cq_model],
-                     jnp.where(run, -prof.cost_c[st.cq_model], 0.0)).sum()
+                     jnp.where(dispatch, -prof.cost_c[st.cq_model],
+                               0.0)).sum()
     add = functools.partial(jax.ops.segment_sum, num_segments=prof.t_edge.shape[0])
     n_success = st.n_success + add(success.astype(jnp.int32), st.cq_model)
-    n_miss = st.n_miss + add((run & ~success).astype(jnp.int32), st.cq_model)
+    n_miss = st.n_miss + add((dispatch & ~success).astype(jnp.int32),
+                             st.cq_model)
     dropped = mature & st.cq.steal_only      # not stolen in time (§5.3)
-    n_drop = st.n_drop + add(dropped.astype(jnp.int32), st.cq_model)
+    n_drop = st.n_drop + add((dropped | skipped).astype(jnp.int32),
+                             st.cq_model)
     st = st._replace(cq=st.cq._replace(valid=st.cq.valid & ~mature),
                      n_success=n_success, n_miss=n_miss, n_drop=n_drop,
                      qos_utility=st.qos_utility + util)
+    if pol.adaptive:
+        def feed(i, ad):
+            m = st.cq_model[i]
+            sent = js.adapt_observe(js.adapt_on_sent(ad, m), m, act[i],
+                                    pol.adapt_eps)
+            ad = js.adapt_select(dispatch[i], sent, ad)
+            skip = js.adapt_on_skip(ad, m, now, prof.t_cloud,
+                                    pol.adapt_cooling_ms)
+            return js.adapt_select(skipped[i], skip, ad)
+        st = st._replace(adapt=jax.lax.fori_loop(0, CLOUD_CAP, feed,
+                                                 st.adapt))
     if pol.gems:
         st = _gems_bulk(st, prof, now, success, run | dropped, st.cq_model)
     return st
@@ -201,22 +262,42 @@ def _gems_bulk(st: EdgeState, prof: Profiles, now, success_mask, done_mask,
     return st._replace(lam=lam, lam_hat=lam_hat)
 
 
-def _gems_act(st: EdgeState, prof: Profiles, now) -> EdgeState:
-    """Alg. 1: reschedule lagging models, close expired windows."""
+def _gems_act(st: EdgeState, prof: Profiles, now, theta, cloud_frac,
+              pol: FleetPolicy) -> EdgeState:
+    """Alg. 1: reschedule lagging models, close expired windows.
+
+    GEMS-A: the reschedule feasibility gate uses the adapted t̂, the
+    elastic resolution runs at the same actual-duration model as
+    ``_resolve_cloud`` (``cloud_frac·t̂ + θ``), and completions feed the
+    estimator (mirroring the oracle, where rescheduled tasks go through
+    the instrumented cloud dispatch path).
+    """
     m = prof.t_edge.shape[0]
     rate = st.lam_hat / jnp.maximum(st.lam, 1)
     lagging = (st.lam > 0) & (rate < prof.qoe_alpha)
 
     # move pending edge tasks of lagging models to the cloud: with an
     # elastic cloud and trigger=now, resolve immediately.
-    feas = now + prof.t_cloud[st.eq.model] <= st.eq.deadline
+    t_hat = _t_cloud_cur(st, prof, pol)
+    feas = now + t_hat[st.eq.model] <= st.eq.deadline
     move = (st.eq.valid & lagging[st.eq.model]
             & (prof.gamma_c[st.eq.model] > 0) & feas)
     act = prof.t_cloud[st.eq.model]          # deterministic estimate
+    if pol.adaptive:
+        act = cloud_frac * prof.t_cloud[st.eq.model] + theta
     success = move & (now + act <= st.eq.deadline)
     add = functools.partial(jax.ops.segment_sum, num_segments=m)
     util = jnp.where(success, prof.gamma_c[st.eq.model],
                      jnp.where(move, -prof.cost_c[st.eq.model], 0.0)).sum()
+    if pol.adaptive:
+        eq_model = st.eq.model
+        def feed(i, ad):
+            mi = eq_model[i]
+            sent = js.adapt_observe(js.adapt_on_sent(ad, mi), mi, act[i],
+                                    pol.adapt_eps)
+            return js.adapt_select(move[i], sent, ad)
+        st = st._replace(adapt=jax.lax.fori_loop(0, EDGE_CAP, feed,
+                                                 st.adapt))
     st = st._replace(
         eq=js.edge_remove(st.eq, move),
         n_success=st.n_success + add(success.astype(jnp.int32), st.eq.model),
@@ -244,10 +325,14 @@ def _offer_cloud(st: EdgeState, prof: Profiles, now, model, deadline, te,
 
     ``te`` is the task's *effective* edge latency on this edge (speed
     factor folded in), kept on the cloud queue for steal decisions.
+
+    Feasibility and trigger times use the DEMS-A-adapted t̂ when the
+    policy is adaptive; a policy-level rejection then counts as a *skip*
+    for the estimator's cooling logic (oracle ``_offer_cloud``).
     """
     if not pol.use_cloud:
         return st, jnp.asarray(False)
-    t_hat = prof.t_cloud[model]
+    t_hat = _t_cloud_cur(st, prof, pol)[model]
     feasible = now + t_hat <= deadline
     negative = prof.gamma_c[model] <= 0
     if pol.stealing:
@@ -267,7 +352,13 @@ def _offer_cloud(st: EdgeState, prof: Profiles, now, model, deadline, te,
     slot = jnp.argmax(~st.cq.valid)
     cq_model = jnp.where(pushed, st.cq_model.at[slot].set(model),
                          st.cq_model)
-    return st._replace(cq=cq, cq_model=cq_model), pushed
+    st = st._replace(cq=cq, cq_model=cq_model)
+    if pol.adaptive:
+        skip = js.adapt_on_skip(st.adapt, model, now, prof.t_cloud,
+                                pol.adapt_cooling_ms)
+        st = st._replace(adapt=js.adapt_select(enable & ~accept, skip,
+                                               st.adapt))
+    return st, pushed
 
 
 def _route_arrival(st: EdgeState, prof: Profiles, now, model,
@@ -287,7 +378,7 @@ def _route_arrival(st: EdgeState, prof: Profiles, now, model,
         victims = js.victim_mask(st.eq, now, st.busy_rem, deadline, te)
         migrate_ok = js.migration_decision(
             st.eq, victims, now, model, deadline, prof.gamma_e,
-            prof.gamma_c, prof.t_cloud)
+            prof.gamma_c, _t_cloud_cur(st, prof, pol))
         has_victims = victims.any()
         insert_edge = arrive & feasible & (~has_victims | migrate_ok)
 
@@ -422,7 +513,7 @@ def make_step(prof: Profiles, pol: FleetPolicy, dt: float,
         st = jax.lax.fori_loop(0, m, route_one, st)
         st = _edge_execute(st, prof, now, dt, edge_frac, pol, min_edge_t)
         if pol.gems:
-            st = _gems_act(st, prof, now)
+            st = _gems_act(st, prof, now, theta, cloud_frac, pol)
         return st, None
 
     return step
@@ -530,22 +621,33 @@ def default_signals(n_models: int, *, n_edges: int, drones_per_edge: int = 3,
         cloud_up=jnp.ones(n_ticks, bool))
 
 
-def run_fleet(models: list[ModelProfile], policy, signals: FleetSignals, *,
-              dt: float = 25.0, edge_frac: float = 0.62,
-              cloud_frac: float = 0.80,
-              mesh: Optional[jax.sharding.Mesh] = None) -> EdgeState:
-    """Run the fleet simulator over arbitrary scenario signals.
-
-    ``policy`` is a :class:`FleetPolicy` or a name (``"DEMS"``,
-    ``"GEMS-COOP"``, …).  With ``mesh`` given, fleet state is sharded over
-    its first axis (pjit-style data parallelism over edges); the peer
-    offload exchange then runs as cross-device collectives.
-    """
-    pol = policy if isinstance(policy, FleetPolicy) \
+def _resolve_policy(policy) -> FleetPolicy:
+    return policy if isinstance(policy, FleetPolicy) \
         else FleetPolicy.from_name(policy)
-    prof = Profiles.build(models)
-    n_edges = signals.arrive.shape[1]
 
+
+def _shard_leading(tree, mesh: jax.sharding.Mesh):
+    """Shard every leaf's leading axis over the mesh's first axis name."""
+    axis = mesh.axis_names[0]
+    return jax.tree.map(
+        lambda a: jax.device_put(a, jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(
+                *([axis] + [None] * (a.ndim - 1))))), tree)
+
+
+def _fleet_setup(models, policy, dt, edge_frac, cloud_frac, n_edges):
+    """Shared run_fleet / run_fleet_batch setup: program + initial state."""
+    pol = _resolve_policy(policy)
+    prof = Profiles.build(models)
+    run = _fleet_program(prof, pol, dt, edge_frac, cloud_frac, n_edges)
+    state = jax.vmap(lambda _: init_state(prof, pol.adapt_window))(
+        jnp.arange(n_edges))
+    return run, state
+
+
+def _fleet_program(prof: Profiles, pol: FleetPolicy, dt: float,
+                   edge_frac: float, cloud_frac: float, n_edges: int):
+    """Build ``run(state, xs) -> final`` — the whole mission as one scan."""
     step = make_step(prof, pol, dt, edge_frac, cloud_frac)
     vstep = jax.vmap(step, in_axes=(0, (None, 0, 0, 0, 0, None)))
     cooperate = pol.cooperation and n_edges > 1
@@ -558,16 +660,63 @@ def run_fleet(models: list[ModelProfile], policy, signals: FleetSignals, *,
                                  pol.coop_max_transfers)
         return state, None
 
-    state = jax.vmap(lambda _: init_state(prof))(jnp.arange(n_edges))
+    def run(state, xs):
+        final, _ = jax.lax.scan(scan_body, state, xs)
+        return final
+
+    return run
+
+
+def run_fleet(models: list[ModelProfile], policy, signals: FleetSignals, *,
+              dt: float = 25.0, edge_frac: float = 0.62,
+              cloud_frac: float = 0.80,
+              mesh: Optional[jax.sharding.Mesh] = None) -> EdgeState:
+    """Run the fleet simulator over arbitrary scenario signals.
+
+    ``policy`` is a :class:`FleetPolicy` or a name (``"DEMS"``,
+    ``"GEMS-A-COOP"``, …).  With ``mesh`` given, fleet state is sharded
+    over its first axis (pjit-style data parallelism over edges); the peer
+    offload exchange then runs as cross-device collectives.
+    """
+    run, state = _fleet_setup(models, policy, dt, edge_frac, cloud_frac,
+                              signals.arrive.shape[1])
     xs = tuple(signals)
     if mesh is not None:
-        axis = mesh.axis_names[0]
-        state = jax.tree.map(
-            lambda a: jax.device_put(a, jax.sharding.NamedSharding(
-                mesh, jax.sharding.PartitionSpec(
-                    *([axis] + [None] * (a.ndim - 1))))), state)
-    final, _ = jax.jit(lambda s, x: jax.lax.scan(scan_body, s, x))(state, xs)
-    return final
+        state = _shard_leading(state, mesh)
+    return jax.jit(run)(state, xs)
+
+
+def stack_signals(signals: list[FleetSignals]) -> FleetSignals:
+    """Stack per-run signals over a new leading replica axis.
+
+    All runs must share (n_ticks, n_edges, n_models) — i.e. seeds or event
+    variants of one scenario shape, the unit :func:`run_fleet_batch`
+    compiles once and sweeps in a single program.
+    """
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *signals)
+
+
+def run_fleet_batch(models: list[ModelProfile], policy,
+                    signals: FleetSignals, *, dt: float = 25.0,
+                    edge_frac: float = 0.62, cloud_frac: float = 0.80,
+                    mesh: Optional[jax.sharding.Mesh] = None) -> EdgeState:
+    """One-jit sweep: ``signals`` carry a leading replica axis ``[R, …]``
+    (from :func:`stack_signals`), and the whole sweep — every replica's
+    full mission scan — runs as a single ``vmap``-over-replicas compiled
+    program instead of R sequential jits.
+
+    Returns the stacked final :class:`EdgeState` with leading ``[R, E]``
+    axes; slicing replica ``r`` reproduces ``run_fleet`` on that run's
+    signals exactly.  With ``mesh`` given, replicas are sharded over its
+    first axis, so independent seeds/scenario-variants fan out across
+    devices.
+    """
+    run, state = _fleet_setup(models, policy, dt, edge_frac, cloud_frac,
+                              signals.arrive.shape[2])
+    xs = tuple(signals)
+    if mesh is not None:
+        xs = _shard_leading(xs, mesh)
+    return jax.jit(jax.vmap(run, in_axes=(None, 0)))(state, xs)
 
 
 def simulate_fleet(models: list[ModelProfile], policy: str, *,

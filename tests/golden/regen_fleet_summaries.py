@@ -1,0 +1,31 @@
+"""Regenerate the fleet_summary golden file after an intentional change.
+
+    PYTHONPATH=src python tests/golden/regen_fleet_summaries.py
+
+Keep the duration / seed / policies in sync with tests/test_fleet_batch.py.
+"""
+import json
+import pathlib
+
+from repro.scenarios import fleet_summary, get, names, run_scenario_fleet
+
+GOLDEN_DURATION_MS = 45_000.0
+POLICIES = ("DEMS", "GEMS-COOP")
+
+
+def main() -> None:
+    out = {}
+    for sc in names():
+        out[sc] = {}
+        for pol in POLICIES:
+            spec = get(sc, duration_ms=GOLDEN_DURATION_MS, seed=0)
+            out[sc][pol] = fleet_summary(run_scenario_fleet(spec, pol,
+                                                            dt=25.0))
+            print(sc, pol, out[sc][pol]["completed"], flush=True)
+    path = pathlib.Path(__file__).parent / "fleet_summaries.json"
+    path.write_text(json.dumps(out, indent=1, sort_keys=True) + "\n")
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Batched one-jit sweeps + adaptive policy coverage + golden metrics.
+
+1. ``FleetPolicy.from_name`` accepts the full oracle-mirroring name set
+   (including ``DEMS-A`` / ``GEMS-A`` and ``-COOP`` variants) and raises
+   a ``ValueError`` listing supported names on typos;
+2. ``run_fleet_batch`` (one vmapped jit over stacked replica signals)
+   reproduces per-run ``run_fleet`` metrics exactly, seed by seed;
+3. a golden-metrics file locks ``fleet_summary`` for every registry
+   scenario × {DEMS, GEMS-COOP} at a fixed seed, with loose tolerances,
+   so refactors of the tick loop can't silently shift results.
+
+Regenerate the golden file after an *intentional* modeling change:
+
+    PYTHONPATH=src python tests/golden/regen_fleet_summaries.py
+"""
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.scenarios import (compile_fleet, compile_fleet_batch,
+                             fleet_summary, fleet_summary_batch, get, names,
+                             run_scenario_fleet, run_scenario_fleet_batch)
+from repro.sim.fleet_jax import (FleetPolicy, run_fleet, run_fleet_batch,
+                                 stack_signals)
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "fleet_summaries.json"
+GOLDEN_DURATION_MS = 45_000.0
+GOLDEN_POLICIES = ("DEMS", "GEMS-COOP")
+
+
+# ---------------------------------------------------------------------------
+# (1) policy name registry
+# ---------------------------------------------------------------------------
+
+def test_from_name_unknown_policy_raises_value_error():
+    with pytest.raises(ValueError, match="DEMS-A"):
+        FleetPolicy.from_name("DEMZ")
+    with pytest.raises(ValueError, match="choose from"):
+        FleetPolicy.from_name("GEMS-A-KOOP")
+
+
+@pytest.mark.parametrize("name,adaptive,gems,coop", [
+    ("DEMS-A", True, False, False),
+    ("GEMS-A", True, True, False),
+    ("DEMS-A-COOP", True, False, True),
+    ("GEMS-A-COOP", True, True, True),
+    ("DEMS", False, False, False),
+])
+def test_from_name_adaptive_variants(name, adaptive, gems, coop):
+    pol = FleetPolicy.from_name(name)
+    assert pol.adaptive is adaptive
+    assert pol.gems is gems
+    assert pol.cooperation is coop
+    assert pol.migration and pol.stealing
+
+
+def test_gems_a_coop_runs_end_to_end():
+    spec = get("hetero-edges", duration_ms=30_000.0)
+    s = fleet_summary(run_scenario_fleet(spec, "GEMS-A-COOP"))
+    assert s["completed"] > 0
+
+
+# ---------------------------------------------------------------------------
+# (2) one-jit batched sweep ≡ looped run_fleet
+# ---------------------------------------------------------------------------
+
+def test_run_fleet_batch_matches_looped_run_fleet_exactly():
+    spec = get("baseline", duration_ms=30_000.0)
+    seeds = (0, 1, 2)
+    signals = [compile_fleet(sp) for sp in spec.reseeded(seeds)]
+    batch = run_fleet_batch(spec.models, "DEMS-A", stack_signals(signals))
+    for r, sig in enumerate(signals):
+        single = run_fleet(spec.models, "DEMS-A", sig)
+        replica = jax.tree.map(lambda a: a[r], batch)
+        for got, want in zip(jax.tree.leaves(replica),
+                             jax.tree.leaves(single)):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_run_scenario_fleet_batch_summaries_match_per_seed_runs():
+    spec = get("baseline", duration_ms=30_000.0)
+    seeds = (3, 4)
+    batch = run_scenario_fleet_batch(spec, "DEMS", seeds)
+    summaries = fleet_summary_batch(batch)
+    assert len(summaries) == len(seeds)
+    for seed, got in zip(seeds, summaries):
+        want = fleet_summary(run_scenario_fleet(
+            get("baseline", duration_ms=30_000.0, seed=seed), "DEMS"))
+        assert got == want
+
+
+def test_compile_fleet_batch_stacks_replica_axis():
+    spec = get("baseline", duration_ms=10_000.0)
+    sig = compile_fleet_batch(spec, (0, 1, 2))
+    assert sig.arrive.shape[0] == 3
+    assert sig.arrive.shape[1:] == compile_fleet(spec).arrive.shape
+    # different seeds → different arrival patterns
+    a = np.asarray(sig.arrive)
+    assert not np.array_equal(a[0], a[1])
+
+
+# ---------------------------------------------------------------------------
+# (3) golden metrics: registry × {DEMS, GEMS-COOP} at seed 0
+# ---------------------------------------------------------------------------
+
+def _assert_close(scenario, policy, key, got, want):
+    if key == "completion_rate":
+        tol = 0.02
+    else:
+        tol = max(3.0, 0.05 * abs(want))
+    assert abs(got - want) <= tol, (
+        f"{scenario}/{policy}/{key}: got {got}, golden {want} (±{tol:.3g}) "
+        f"— if the modeling change is intentional, regenerate "
+        f"tests/golden/fleet_summaries.json")
+
+
+@pytest.mark.parametrize("scenario", sorted(names()))
+def test_golden_fleet_summaries(scenario):
+    golden = json.loads(GOLDEN.read_text())
+    assert scenario in golden, "regenerate the golden file for new scenarios"
+    for policy in GOLDEN_POLICIES:
+        spec = get(scenario, duration_ms=GOLDEN_DURATION_MS, seed=0)
+        got = fleet_summary(run_scenario_fleet(spec, policy, dt=25.0))
+        for key, want in golden[scenario][policy].items():
+            _assert_close(scenario, policy, key, got[key], want)

@@ -7,16 +7,17 @@ from repro.core.schedulers import make_policy
 from repro.core.task import PASSIVE, TABLE1
 from repro.sim.engine import run_policy
 from repro.sim.fleet_jax import FleetPolicy, Profiles, simulate_fleet
-from repro.sim.network import CloudLatencyModel, EdgeLatencyModel
+from repro.sim.network import CloudLatencyModel, EdgeLatencyModel, trapezium
 from repro.sim.workloads import task_stream
 
 MODELS = [TABLE1[n] for n in PASSIVE]
 
 
-def _engine_result(policy, duration=120_000.0, seed=0):
+def _engine_result(policy, duration=120_000.0, seed=0, theta_fn=None):
     em = EdgeLatencyModel(mean_frac=0.62, sd_frac=0.0, lo_frac=0.62,
                           hi_frac=0.62)
-    cm = CloudLatencyModel(median_frac=0.80, sigma=1e-6, cold_start_p=0.0)
+    cm = CloudLatencyModel(median_frac=0.80, sigma=1e-6, cold_start_p=0.0,
+                           **({"latency_at": theta_fn} if theta_fn else {}))
     arr = task_stream(MODELS, n_drones=3, duration_ms=duration, seed=seed)
     return run_policy(make_policy(policy), arr, duration, seed=seed,
                       edge_model=em, cloud_model=cm, cloud_concurrency=512)
@@ -35,6 +36,35 @@ def test_fleet_matches_event_engine_approximately(policy):
     assert abs(got - want) / want < 0.10, (got, want)
     got_u = float(np.asarray(final.qos_utility).sum())
     assert abs(got_u - oracle.qos_utility) / abs(oracle.qos_utility) < 0.15
+
+
+def test_fleet_dems_a_matches_oracle_under_trapezium():
+    """§5.4 adaptation in the vmapped tick loop tracks the oracle's
+    DEMS-A under the §8.5 trapezium θ trace (single edge)."""
+    duration = 300_000.0
+    oracle = _engine_result("DEMS-A", duration, theta_fn=trapezium())
+    final = simulate_fleet(MODELS, "DEMS-A", n_edges=1, drones_per_edge=3,
+                           duration_ms=duration, dt=25.0, edge_frac=0.62,
+                           cloud_frac=0.80, theta_fn=trapezium(), seed=0)
+    got = float(np.asarray(final.n_success).sum())
+    want = oracle.completed
+    assert abs(got - want) / want < 0.10, (got, want)
+    got_u = float(np.asarray(final.qos_utility).sum())
+    assert abs(got_u - oracle.qos_utility) / abs(oracle.qos_utility) < 0.15
+    # the estimator must have reacted: some model's t̂ ends above static
+    cur = np.asarray(final.adapt.current)
+    static = np.asarray([m.t_cloud for m in MODELS])
+    assert (cur > static + 1.0).any(), cur
+
+
+def test_fleet_dems_a_beats_dems_under_variability():
+    """Paper Fig. 11: adaptation pays off on QoS when θ(t) swings."""
+    kw = dict(n_edges=1, drones_per_edge=3, duration_ms=300_000.0,
+              theta_fn=trapezium(), seed=0)
+    adpt = simulate_fleet(MODELS, "DEMS-A", **kw)
+    base = simulate_fleet(MODELS, "DEMS", **kw)
+    assert float(np.asarray(adpt.qos_utility).sum()) >= \
+        float(np.asarray(base.qos_utility).sum())
 
 
 def test_fleet_dems_steals_and_beats_e_plus_c():

@@ -195,6 +195,47 @@ def test_adaptive_skip_cooling_matches_oracle(events):
         assert float(stj.current[0]) == pytest.approx(est.current)
 
 
+adapt_event_st = st.tuples(
+    st.integers(0, 1),                     # model index
+    st.integers(0, 2),                     # 0 = observe, 1 = skip, 2 = sent
+    st.floats(50, 2000),                   # observed duration (if observe)
+    st.integers(1, 2_000))                 # time advance [ms]
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(adapt_event_st, min_size=1, max_size=40),
+       st.integers(2, 8))
+def test_adaptive_mixed_sequence_matches_oracle(events, w):
+    """AdaptState mirrors AdaptiveEstimator step-for-step on arbitrary
+    interleavings of observe / on_skip / on_sent across two models."""
+    t_cp = 5_000.0
+    ests = [AdaptiveEstimator(static=400.0, w=w, eps=10.0, t_cp=t_cp)
+            for _ in range(2)]
+    static = jnp.array([400.0, 400.0])
+    stj = js.adapt_init(static, w=w)
+    now = 0.0
+    for m, kind, val, dt_ms in events:
+        now += float(dt_ms)
+        if kind == 0:
+            ests[m].observe(val)
+            stj = js.adapt_observe(stj, m, val, eps=10.0)
+        elif kind == 1:
+            ests[m].on_skip(now)
+            stj = js.adapt_on_skip(stj, m, now, static, t_cp=t_cp)
+        else:
+            ests[m].on_sent()
+            stj = js.adapt_on_sent(stj, m)
+        for k in range(2):
+            assert float(stj.current[k]) == \
+                pytest.approx(ests[k].current, rel=1e-6)
+            want_cs = ests[k]._cooling_start
+            got_cs = float(stj.cooling_start[k])
+            if want_cs is None:
+                assert got_cs == -1.0
+            else:
+                assert got_cs == pytest.approx(want_cs)
+
+
 def test_queue_push_pop_roundtrip():
     q = js.empty_edge_queue(4)
     q, ok = js.edge_push(q, 30.0, 0, 1.0, 30.0, 2)
