@@ -5,9 +5,12 @@ shaping: synthetic cellular traces (Fig. 2c analogue).  Expectation:
 DEMS-A ≥ DEMS on QoS utility with similar on-time tasks (paper: +16–27 %).
 
 ``main_fleet`` repeats the latency-shaped comparison on the JAX fleet
-simulator: the seed sweep for each policy runs as one compiled program
-(`run_fleet_batch`), checking that the vmapped DEMS-A adaptation shows
-the same qualitative gain as the event-driven oracle.
+simulator and adds the congestion regimes (``cloud-crunch``: a saturated
+finite FaaS pool; ``bw-fade``: a cellular deep fade): the seed sweep for
+each policy runs as one compiled program (`run_fleet_batch`), checking
+that the vmapped DEMS-A adaptation shows the same qualitative gain as
+the event-driven oracle now that the fleet cloud is contended and
+bandwidth-shaped rather than elastic.
 """
 from __future__ import annotations
 
@@ -57,10 +60,11 @@ def main(quick: bool = False, rows: Rows | None = None) -> dict:
 
 
 def main_fleet(quick: bool = False, rows: Rows | None = None) -> dict:
-    """Fleet-side Fig. 11: DEMS-A vs DEMS under the §8.5 trapezium, the
-    per-policy seed sweep batched into a single jit."""
+    """Fleet-side Fig. 11: DEMS-A vs DEMS under the §8.5 trapezium *and*
+    under the congestion scenarios (finite cloud pool, bandwidth fade),
+    every per-policy seed sweep batched into a single jit."""
     from repro.scenarios import (ScenarioSpec, ThetaTrapezium,
-                                 fleet_summary_batch,
+                                 fleet_summary_batch, get,
                                  run_scenario_fleet_batch)
 
     rows = rows or Rows()
@@ -70,17 +74,22 @@ def main_fleet(quick: bool = False, rows: Rows | None = None) -> dict:
         spec = dataclasses.replace(spec, theta=ThetaTrapezium(
             ramp_up=(24_000.0, 36_000.0), ramp_down=(84_000.0, 96_000.0)))
     seeds = (7,) if quick else (7, 17, 27)
+    duration = 60_000.0 if quick else 300_000.0
     out = {}
-    base, _ = timed(lambda: fleet_summary_batch(
-        run_scenario_fleet_batch(spec, "DEMS", seeds)))
-    adpt, us = timed(lambda: fleet_summary_batch(
-        run_scenario_fleet_batch(spec, "DEMS-A", seeds)))
-    gains = [100 * (a["qos_utility"] / b["qos_utility"] - 1)
-             for a, b in zip(adpt, base)]
-    out["fleet"] = (base, adpt)
-    rows.add("fig11/fleet/latency", us,
-             f"DEMS-A qos {np.median(gains):+.1f}% over {len(seeds)} seeds "
-             f"(one-jit batch; paper oracle: +15..27%)")
+    runs = [("latency", spec),
+            ("cloud-crunch", get("cloud-crunch", duration_ms=duration)),
+            ("bw-fade", get("bw-fade", duration_ms=duration))]
+    for label, sc in runs:
+        base, _ = timed(lambda: fleet_summary_batch(
+            run_scenario_fleet_batch(sc, "DEMS", seeds)))
+        adpt, us = timed(lambda: fleet_summary_batch(
+            run_scenario_fleet_batch(sc, "DEMS-A", seeds)))
+        gains = [100 * (a["qos_utility"] / b["qos_utility"] - 1)
+                 for a, b in zip(adpt, base)]
+        out[label] = (base, adpt)
+        rows.add(f"fig11/fleet/{label}", us,
+                 f"DEMS-A qos {np.median(gains):+.1f}% over {len(seeds)} "
+                 f"seeds (one-jit batch; paper oracle: +15..27%)")
     return out
 
 

@@ -11,7 +11,7 @@ migration); fleet rows add the cross-edge peer-offload count.  The fleet
 backend runs each (scenario, policy) seed sweep as *one* compiled program
 (`run_fleet_batch`), so N seeds cost one jit, not N.  Output is CSV on
 stdout, one row per (scenario, policy, seed).  ``--quick`` is the CI
-smoke path: one short scenario on both backends.
+smoke path: one calm and one congested short scenario on both backends.
 """
 from __future__ import annotations
 
@@ -67,9 +67,11 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.quick:
-        sweep_oracle(("baseline",), ("DEMS",), 20_000.0)
-        sweep_fleet(("baseline",), ("DEMS", "DEMS-A"), 20_000.0, args.dt,
-                    (0, 1))
+        # one calm and one congested scenario so neither the elastic-limit
+        # nor the finite-pool/bw-shaping path can rot
+        sweep_oracle(("baseline", "cloud-crunch"), ("DEMS",), 20_000.0)
+        sweep_fleet(("baseline", "cloud-crunch"), ("DEMS", "DEMS-A"),
+                    20_000.0, args.dt, (0, 1))
         return
     if args.backend == "oracle":
         sweep_oracle(args.scenarios, args.policies or ORACLE_POLICIES,

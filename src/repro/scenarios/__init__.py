@@ -12,11 +12,13 @@ from repro.scenarios.runner import (fleet_summary, fleet_summary_batch,
                                     merge_results, run_scenario_fleet,
                                     run_scenario_fleet_batch,
                                     run_scenario_oracle)
-from repro.scenarios.spec import (Burst, CloudOutage, DroneSpec, EdgeSite,
-                                  ScenarioSpec, ThetaTrapezium)
+from repro.scenarios.spec import (BandwidthTrace, Burst, CloudOutage,
+                                  DroneSpec, EdgeSite, ScenarioSpec,
+                                  ThetaTrapezium)
 
 __all__ = [
-    "Burst", "CloudOutage", "DroneSpec", "EdgeSite", "OracleInputs",
+    "BandwidthTrace", "Burst", "CloudOutage", "DroneSpec", "EdgeSite",
+    "OracleInputs",
     "SCENARIOS", "ScenarioSpec", "ThetaTrapezium", "compile_fleet",
     "compile_fleet_batch", "compile_oracle", "fleet_summary",
     "fleet_summary_batch", "get", "merge_results", "names",

@@ -13,7 +13,10 @@ oracle and the fleet simulator see the same mission:
   FleetSignals` arrays: the drone→edge assignment is baked into the
   arrival mask (handover re-homes future arrivals), edge speed factors
   become per-edge load multipliers, outages become the cloud-up mask and
-  a post-outage cold-start bump on θ.
+  a post-outage cold-start bump on θ, and the cellular bandwidth trace
+  becomes the dense ``bw`` channel (same signed transfer-penalty
+  convention as the oracle's ``CloudLatencyModel.shaped_delta``).
+
 """
 from __future__ import annotations
 
@@ -36,6 +39,7 @@ class OracleInputs:
     spec: ScenarioSpec
     edge_arrivals: list[list[Arrival]]
     theta_fns: list[Callable[[float], float]]
+    bw_fns: list[Callable[[float], float]]
     # (start, end, cold_ms, cold_window_ms) per outage — the engine's
     # 4-tuple form, preserving each outage's own cold-start profile
     outages: tuple[tuple[float, float, float, float], ...]
@@ -46,6 +50,16 @@ def _theta_fn(spec: ScenarioSpec, e: int) -> Callable[[float], float]:
     if th is None or (th.edges is not None and e not in th.edges):
         return network.constant(0.0)
     return network.trapezium(th.low, th.high, th.ramp_up, th.ramp_down)
+
+
+def _bw_fn(spec: ScenarioSpec, e: int) -> Callable[[float], float]:
+    """Edge ``e``'s cellular bandwidth trace (nominal when unshaped)."""
+    b = spec.bandwidth
+    if b is None or (b.edges is not None and e not in b.edges):
+        return network.constant(network.NOMINAL_BW_MBPS)
+    return network.cellular_bandwidth_trace(
+        seed=b.seed, duration_ms=spec.duration_ms, step_ms=b.step_ms,
+        lo=b.lo, hi=b.hi, start=b.start)
 
 
 def _arrival_times(spec: ScenarioSpec, d: int,
@@ -115,6 +129,7 @@ def compile_oracle(spec: ScenarioSpec) -> OracleInputs:
         spec=spec,
         edge_arrivals=edge_arrivals,
         theta_fns=[_theta_fn(spec, e) for e in range(spec.n_edges)],
+        bw_fns=[_bw_fn(spec, e) for e in range(spec.n_edges)],
         outages=tuple((o.start_ms, o.end_ms, o.cold_ms, o.cold_window_ms)
                       for o in spec.outages))
 
@@ -123,8 +138,11 @@ def compile_fleet(spec: ScenarioSpec, dt: float = 25.0) -> FleetSignals:
     """Dense per-tick array signals for :func:`repro.sim.fleet_jax.run_fleet`.
 
     The fleet simulator inserts at most one task per (edge, model) per
-    tick, so coincident same-model arrivals within one ``dt`` collapse —
-    negligible at the default 25 ms tick versus 1 s segments.
+    tick; coincident same-model arrivals (colliding drone phases, burst
+    extras landing on base segment times) would silently collapse on a
+    boolean mask and deflate the load versus the oracle, so each extra
+    task spills to the next tick with a free (edge, model) slot — a few
+    ``dt`` of skew against sub-second deadlines, but an exact task count.
     """
     import jax.numpy as jnp
 
@@ -137,16 +155,27 @@ def compile_fleet(spec: ScenarioSpec, dt: float = 25.0) -> FleetSignals:
 
     def sink(t: float, d: int, e: int, order) -> None:
         tick = min(int(t / dt), n_ticks - 1)
-        arrive[tick, e, :] = True
+        for k in order:
+            tk = tick
+            while tk < n_ticks - 1 and arrive[tk, e, k]:
+                tk += 1
+            if arrive[tk, e, k]:     # horizon full → spill backwards so a
+                tk = tick            # burst running to the end still keeps
+                while tk > 0 and arrive[tk, e, k]:   # its task count
+                    tk -= 1
+            arrive[tk, e, k] = True
 
     _emit(spec, sink)
 
-    # per-edge θ(t); post-outage cold starts appear as a θ bump so the
-    # first post-recovery dispatches pay the container-warmup price.
+    # per-edge θ(t) and cellular bandwidth, evaluated vectorized over the
+    # whole tick grid (array-native trace fns — no per-tick Python loop);
+    # post-outage cold starts appear as a θ bump so the first
+    # post-recovery dispatches pay the container-warmup price.
     theta = np.zeros((n_ticks, n_edges), dtype=np.float32)
+    bw = np.empty((n_ticks, n_edges), dtype=np.float32)
     for e in range(n_edges):
-        fn = _theta_fn(spec, e)
-        theta[:, e] = [fn(t) for t in times]
+        theta[:, e] = network.sample_trace(_theta_fn(spec, e), times)
+        bw[:, e] = network.sample_trace(_bw_fn(spec, e), times)
     cloud_up = np.ones(n_ticks, dtype=bool)
     for o in spec.outages:
         down = (times >= o.start_ms) & (times < o.end_ms)
@@ -165,7 +194,8 @@ def compile_fleet(spec: ScenarioSpec, dt: float = 25.0) -> FleetSignals:
 
     return FleetSignals(
         times=jnp.asarray(times), theta=jnp.asarray(theta),
-        arrive=jnp.asarray(arrive), order=jnp.asarray(order),
+        bw=jnp.asarray(bw), arrive=jnp.asarray(arrive),
+        order=jnp.asarray(order),
         load_mult=jnp.asarray(load_mult), cloud_up=jnp.asarray(cloud_up))
 
 

@@ -10,8 +10,9 @@ import dataclasses
 from typing import Callable
 
 from repro.core.task import ACTIVE, PASSIVE
-from repro.scenarios.spec import (Burst, CloudOutage, DroneSpec, EdgeSite,
-                                  ScenarioSpec, ThetaTrapezium)
+from repro.scenarios.spec import (BandwidthTrace, Burst, CloudOutage,
+                                  DroneSpec, EdgeSite, ScenarioSpec,
+                                  ThetaTrapezium)
 
 
 def baseline() -> ScenarioSpec:
@@ -87,6 +88,26 @@ def churn() -> ScenarioSpec:
                 DroneSpec(waypoints=((3_200.0, 0.0),), spawn_ms=0.5 * d)))
 
 
+def cloud_crunch() -> ScenarioSpec:
+    """Finite cloud pool under pressure: each edge's FaaS share shrinks to
+    two concurrent slots while a mid-mission burst quadruples arrivals —
+    the GEMS_STRESS-style regime where cloud *queue-wait*, not WAN
+    latency, is what the scheduler must adapt around."""
+    return ScenarioSpec(
+        name="cloud-crunch",
+        cloud_concurrency=2,
+        bursts=(Burst(start_ms=10_000.0, end_ms=40_000.0, rate_mult=4.0),))
+
+
+def bw_fade() -> ScenarioSpec:
+    """Cellular deep fade: the edge↔cloud link's bandwidth walks far below
+    the nominal 20 Mbps (Fig 2c), inflating every transfer by the signed
+    penalty convention — edge-leaning policies should win."""
+    return ScenarioSpec(
+        name="bw-fade",
+        bandwidth=BandwidthTrace(seed=11, lo=0.3, hi=6.0, start=2.0))
+
+
 SCENARIOS: dict[str, Callable[[], ScenarioSpec]] = {
     "baseline": baseline,
     "rush-hour": rush_hour,
@@ -94,6 +115,8 @@ SCENARIOS: dict[str, Callable[[], ScenarioSpec]] = {
     "flaky-cloud": flaky_cloud,
     "hetero-edges": hetero_edges,
     "churn": churn,
+    "cloud-crunch": cloud_crunch,
+    "bw-fade": bw_fade,
 }
 
 

@@ -49,17 +49,29 @@ class OracleScenarioRun:
 
 def run_scenario_oracle(spec: ScenarioSpec, policy: str, *,
                         edge_model: EdgeLatencyModel | None = None,
-                        cloud_concurrency: int = 16,
+                        cloud_concurrency: int | None = None,
+                        cloud_model_overrides: dict | None = None,
                         **policy_overrides) -> OracleScenarioRun:
-    """One event-driven Simulator per edge site; silo (non-cooperative)."""
+    """One event-driven Simulator per edge site; silo (non-cooperative).
+
+    ``cloud_concurrency`` defaults to ``spec.cloud_concurrency`` (each
+    edge's share of the bounded FaaS pool); ``cloud_model_overrides``
+    replaces :class:`CloudLatencyModel` fields (e.g. ``sigma=1e-6`` for
+    deterministic fleet-agreement comparisons) while the compiled θ and
+    bandwidth traces stay attached.
+    """
     compiled = compile_oracle(spec)
     per_edge: list[Results] = []
     for e, arrivals in enumerate(compiled.edge_arrivals):
-        cloud_model = CloudLatencyModel(latency_at=compiled.theta_fns[e])
+        cloud_model = CloudLatencyModel(
+            latency_at=compiled.theta_fns[e],
+            bandwidth_at=compiled.bw_fns[e],
+            **(cloud_model_overrides or {}))
         sim = Simulator(
             make_policy(policy, **policy_overrides), arrivals,
             spec.duration_ms,
-            cloud_concurrency=cloud_concurrency,
+            cloud_concurrency=spec.cloud_concurrency
+            if cloud_concurrency is None else cloud_concurrency,
             edge_model=edge_model, cloud_model=cloud_model,
             cloud_outages=compiled.outages,
             seed=spec.seed + e)
@@ -71,12 +83,17 @@ def run_scenario_oracle(spec: ScenarioSpec, policy: str, *,
 def run_scenario_fleet(spec: ScenarioSpec, policy, *, dt: float = 25.0,
                        edge_frac: float = 0.62, cloud_frac: float = 0.80,
                        mesh=None):
-    """The scenario through the JAX fleet simulator (stacked EdgeState)."""
+    """The scenario through the JAX fleet simulator (stacked EdgeState).
+
+    The spec's ``cloud_concurrency`` becomes each edge's finite
+    ``cloud_slots`` pool, matching the oracle path slot for slot.
+    """
     from repro.sim.fleet_jax import run_fleet
 
     signals = compile_fleet(spec, dt)
     return run_fleet(spec.models, policy, signals, dt=dt,
-                     edge_frac=edge_frac, cloud_frac=cloud_frac, mesh=mesh)
+                     edge_frac=edge_frac, cloud_frac=cloud_frac,
+                     cloud_slots=spec.cloud_concurrency, mesh=mesh)
 
 
 def run_scenario_fleet_batch(spec: ScenarioSpec, policy,
@@ -93,7 +110,7 @@ def run_scenario_fleet_batch(spec: ScenarioSpec, policy,
     signals = compile_fleet_batch(spec, tuple(seeds), dt)
     return run_fleet_batch(spec.models, policy, signals, dt=dt,
                            edge_frac=edge_frac, cloud_frac=cloud_frac,
-                           mesh=mesh)
+                           cloud_slots=spec.cloud_concurrency, mesh=mesh)
 
 
 def fleet_summary(final) -> dict[str, float]:

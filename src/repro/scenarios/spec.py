@@ -86,6 +86,27 @@ class ThetaTrapezium:
 
 
 @dataclasses.dataclass(frozen=True)
+class BandwidthTrace:
+    """Cellular bandwidth shaping (Fig 2c analogue), per edge subset.
+
+    Parameters mirror :func:`repro.sim.network.cellular_bandwidth_trace`;
+    the compiled trace applies the *signed* transfer-penalty convention
+    (see ``network.py``) identically in the oracle's
+    ``CloudLatencyModel.shaped_delta`` and the fleet's dense ``bw``
+    signal.  The walk seed derives from ``seed`` alone (not the
+    scenario's), so reseeded replicas of one mission share the same radio
+    environment.
+    """
+
+    seed: int = 7
+    lo: float = 0.25
+    hi: float = 40.0
+    start: float = 18.0
+    step_ms: float = 1_000.0
+    edges: Optional[tuple[int, ...]] = None   # None → every edge
+
+
+@dataclasses.dataclass(frozen=True)
 class ScenarioSpec:
     """A complete mission description, compilable to both simulators."""
 
@@ -98,6 +119,11 @@ class ScenarioSpec:
     bursts: tuple[Burst, ...] = ()
     outages: tuple[CloudOutage, ...] = ()
     theta: Optional[ThetaTrapezium] = None
+    bandwidth: Optional[BandwidthTrace] = None
+    # each edge's share of the bounded cloud FaaS concurrency: the
+    # oracle Simulator's ``cloud_concurrency`` and the fleet simulator's
+    # per-edge ``cloud_slots`` (small values → queue-wait under load)
+    cloud_concurrency: int = 16
     seed: int = 0
 
     @property

@@ -290,7 +290,9 @@ class ServeEngine:
             t_start = self.now()
             delay = self.cloud_net.shaped_delta(t_start) + \
                 max(0.0, float(self.rng.normal(30.0, 10.0)))  # RTT jitter
-            time.sleep(delay / 1e3)
+            # shaped_delta is signed (above-nominal bandwidth speeds the
+            # transfer up), so the sum can go below zero — sleep() can't
+            time.sleep(max(delay, 0.0) / 1e3)
             self.models[task.model.name].run()
             if self.policy.adaptive:
                 self.adaptive[task.model.name].observe(

@@ -11,9 +11,22 @@ Modeling simplifications vs the event-driven oracle (documented per §Design):
 
 * fixed time step ``dt`` (default 25 ms) instead of an event heap;
 * deterministic execution fractions (edge ``edge_frac·t``, cloud
-  ``cloud_frac·t̂ + θ(t)``) — variability enters via the shaped θ trace;
-* the cloud is elastic: a dispatched request's outcome is resolved at its
-  trigger time (no slot contention);
+  ``cloud_frac·t̂ + θ(t) + bw-penalty``) — variability enters via the
+  shaped θ trace and the dense cellular-bandwidth signal ``bw`` (the
+  signed transfer penalty convention of
+  :meth:`repro.sim.network.CloudLatencyModel.shaped_delta`);
+* the cloud is a **finite pool**: each edge owns ``cloud_slots``
+  busy-until slots (its share of the bounded FaaS concurrency, mirroring
+  the oracle's per-edge ``cloud_concurrency``).  A matured task only
+  dispatches when a slot is free; while the pool is saturated it stays
+  parked on the trigger-time queue (still stealable) and the estimated
+  queue-wait ``max(0, min(busy_until) − now)`` is folded into the t̂ used
+  by routing, migration, stealing triggers and GEMS feasibility.  With a
+  large pool the wait is identically zero and the elastic model is
+  recovered exactly;
+* tasks matured in the same tick dispatch in queue-slot order (the oracle
+  pops in trigger order) — indistinguishable in the elastic limit, an
+  approximation under saturation;
 * DEMS-A observations are batched per tick (the oracle interleaves
   estimator updates in event order within one instant).
 
@@ -41,10 +54,12 @@ import numpy as np
 from repro.core import jax_sched as js
 from repro.core import schedulers as _sched
 from repro.core.task import ModelProfile
+from repro.sim import network
 
 EDGE_CAP = 32
 CLOUD_CAP = 64
 SUBSTEPS = 6      # max edge executor actions (drops/starts) per tick
+CLOUD_SLOTS = 16  # default per-edge FaaS share (engine's cloud_concurrency)
 
 
 # Fleet-supported policy names; flag sets derive from the oracle's registry
@@ -135,6 +150,13 @@ class EdgeState(NamedTuple):
     cq: js.CloudQueue
     cq_model: jax.Array        # i32[Qc] model ids of cloud-queued tasks
     busy_rem: jax.Array        # f32[] remaining edge execution time
+    # finite FaaS pool: busy-until time per cloud slot (this edge's share
+    # of the bounded Lambda concurrency; slot free iff busy_until <= now)
+    cloud_busy_until: jax.Array  # f32[S]
+    # cloud-queue entries that have waited for a saturated pool at least
+    # once: when their slot finally frees they re-run the oracle's
+    # dispatch-time JIT check (never set in the elastic limit)
+    cq_blocked: jax.Array      # bool[Qc]
     seq: jax.Array             # i32[] insertion counter
     # stats
     n_success: jax.Array       # i32[M]
@@ -156,13 +178,17 @@ class EdgeState(NamedTuple):
     adapt: js.AdaptState
 
 
-def init_state(prof: Profiles, adapt_window: int = 10) -> EdgeState:
+def init_state(prof: Profiles, adapt_window: int = 10,
+               cloud_slots: int = CLOUD_SLOTS) -> EdgeState:
     m = prof.t_edge.shape[0]
     zi = jnp.zeros(m, jnp.int32)
     return EdgeState(
         eq=js.empty_edge_queue(EDGE_CAP), cq=js.empty_cloud_queue(CLOUD_CAP),
         cq_model=jnp.zeros(CLOUD_CAP, jnp.int32),
-        busy_rem=jnp.zeros(()), seq=jnp.zeros((), jnp.int32),
+        busy_rem=jnp.zeros(()),
+        cloud_busy_until=jnp.zeros(cloud_slots),
+        cq_blocked=jnp.zeros(CLOUD_CAP, bool),
+        seq=jnp.zeros((), jnp.int32),
         n_success=zi, n_miss=zi, n_drop=zi, n_stolen=zi, n_edge_exec=zi,
         qos_utility=jnp.zeros(()),
         lam=zi, lam_hat=zi, win_end=prof.qoe_window,
@@ -172,9 +198,53 @@ def init_state(prof: Profiles, adapt_window: int = 10) -> EdgeState:
         adapt=js.adapt_init(prof.t_cloud, adapt_window))
 
 
-def _t_cloud_cur(st: EdgeState, prof: Profiles, pol: FleetPolicy) -> jax.Array:
-    """Scheduler's current cloud-latency estimate t̂ per model (§5.4)."""
-    return st.adapt.current if pol.adaptive else prof.t_cloud
+def _pool_wait(st: EdgeState, now) -> jax.Array:
+    """Estimated queue-wait until a cloud slot frees; 0 when one is free."""
+    return jnp.maximum(st.cloud_busy_until.min() - now, 0.0)
+
+
+def _free_slot_gate(busy_until: jax.Array, now,
+                    want: jax.Array) -> jax.Array:
+    """Admit the first ``n_free`` wanting tasks, in slot order.
+
+    ``want`` marks queue entries that would each occupy one cloud slot;
+    the gate is True for those that find a free slot this tick (tasks
+    popped-and-dropped without dispatching never consume a slot, so they
+    are gated by the same dispatch count — as in the oracle's pop loop).
+    """
+    wi = want.astype(jnp.int32)
+    taken_before = jnp.cumsum(wi) - wi          # exclusive dispatch count
+    return taken_before < (busy_until <= now).sum()
+
+
+def _occupy_slots(busy_until: jax.Array, now, dispatch: jax.Array,
+                  end_time: jax.Array) -> jax.Array:
+    """Assign each dispatched task a distinct free slot, vectorized.
+
+    Dispatched task k (in queue order) fills the k-th free slot with its
+    completion time; ``dispatch`` must already be gated by
+    :func:`_free_slot_gate` so ranks never exceed the free count.
+    """
+    s = busy_until.shape[0]
+    di = dispatch.astype(jnp.int32)
+    drank = jnp.cumsum(di) - di
+    end_by_rank = jnp.zeros(s).at[
+        jnp.where(dispatch, drank, s)].set(end_time, mode="drop")
+    free = busy_until <= now
+    fi = free.astype(jnp.int32)
+    frank = jnp.cumsum(fi) - fi
+    fill = free & (frank < dispatch.sum())
+    return jnp.where(fill, end_by_rank[frank], busy_until)
+
+
+def _t_cloud_cur(st: EdgeState, prof: Profiles, pol: FleetPolicy,
+                 now) -> jax.Array:
+    """Scheduler's current cloud-latency estimate t̂ per model (§5.4),
+    plus the finite-pool queue-wait estimate (zero while slots are free),
+    so routing, migration, stealing triggers and GEMS feasibility all see
+    the congested cloud."""
+    base = st.adapt.current if pol.adaptive else prof.t_cloud
+    return base + _pool_wait(st, now)
 
 
 class FleetSignals(NamedTuple):
@@ -188,6 +258,7 @@ class FleetSignals(NamedTuple):
 
     times: jax.Array       # f32[T]    tick start times [ms]
     theta: jax.Array       # f32[T,E]  per-edge added WAN latency θ(t)
+    bw: jax.Array          # f32[T,E]  per-edge cellular bandwidth [Mbps]
     arrive: jax.Array      # bool[T,E,M] model m arrives at edge e this tick
     order: jax.Array       # i32[T,E,M] randomized insertion order (§3.3)
     load_mult: jax.Array   # f32[T,E]  edge execution-time multiplier
@@ -198,30 +269,47 @@ class FleetSignals(NamedTuple):
 # per-tick logic for one edge
 # ---------------------------------------------------------------------------
 
-def _resolve_cloud(st: EdgeState, prof: Profiles, now, theta,
+def _resolve_cloud(st: EdgeState, prof: Profiles, now, theta, bw_pen,
                    cloud_frac, pol: FleetPolicy, cloud_up) -> EdgeState:
-    """Dispatch all matured cloud tasks (elastic FaaS → resolve now).
+    """Dispatch matured cloud tasks into the finite FaaS pool.
 
     During a cloud outage (``cloud_up`` False) matured tasks stay parked
     on the trigger-time queue; the dispatch-time deadline check settles
     their fate once the cloud returns — mirroring the oracle's behavior.
+    Likewise, while the slot pool is saturated, matured tasks stay parked
+    (still stealable, like the oracle's ``cloud_pending``) and retry once
+    a slot frees; a dispatched task occupies its slot for the whole
+    actual duration ``cloud_frac·t̂ + θ(t) + bw-penalty``.
 
     With ``pol.adaptive`` (DEMS-A, §5.4) dispatch adds the oracle's JIT
     check against the *adapted* estimate t̂: tasks it predicts to miss are
-    skipped (dropped, feeding the cooling timer) instead of dispatched;
-    dispatched tasks fire ``on_sent`` and, since the elastic cloud
-    resolves them in the same tick, ``observe`` their actual duration.
+    skipped (dropped, feeding the cooling timer) instead of dispatched —
+    without consuming a slot; dispatched tasks fire ``on_sent`` and
+    ``observe`` their actual duration.
     """
     mature = st.cq.valid & (st.cq.trigger <= now) & cloud_up
     run = mature & ~st.cq.steal_only
     if pol.adaptive:
         est = st.adapt.current[st.cq_model]
-        dispatch = run & (now + est <= st.cq.deadline)
-        skipped = run & ~(now + est <= st.cq.deadline)
+        fits = now + est <= st.cq.deadline
     else:
-        dispatch = run
-        skipped = jnp.zeros_like(run)
-    act = cloud_frac * prof.t_cloud[st.cq_model] + theta
+        # the oracle JIT-checks every pop against the static estimate; in
+        # the fleet model tasks normally mature within one tick of their
+        # feasibility-checked trigger, so the check is redundant — except
+        # for tasks that sat out a saturated pool, which re-run it here
+        # (never taken in the elastic limit).  Outage-parked tasks keep
+        # the documented modeling simplification of settling via the
+        # dispatch-time deadline check instead (the oracle JIT-drops them
+        # at recovery without consuming a slot); under a small pool the
+        # difference is bounded to one pool-depth of doomed dispatches,
+        # since everything behind them fails the slot gate, turns
+        # cq_blocked, and does re-run this check.
+        fits = ~st.cq_blocked | (now + prof.t_cloud[st.cq_model]
+                                 <= st.cq.deadline)
+    avail = _free_slot_gate(st.cloud_busy_until, now, run & fits)
+    dispatch = run & fits & avail
+    skipped = run & ~fits & avail     # popped + JIT-dropped, slot stays free
+    act = cloud_frac * prof.t_cloud[st.cq_model] + theta + bw_pen
     success = dispatch & (now + act <= st.cq.deadline)
     util = jnp.where(success, prof.gamma_c[st.cq_model],
                      jnp.where(dispatch, -prof.cost_c[st.cq_model],
@@ -233,7 +321,12 @@ def _resolve_cloud(st: EdgeState, prof: Profiles, now, theta,
     dropped = mature & st.cq.steal_only      # not stolen in time (§5.3)
     n_drop = st.n_drop + add((dropped | skipped).astype(jnp.int32),
                              st.cq_model)
-    st = st._replace(cq=st.cq._replace(valid=st.cq.valid & ~mature),
+    settled = dispatch | skipped | dropped   # blocked tasks stay parked
+    new_valid = st.cq.valid & ~settled
+    st = st._replace(cq=st.cq._replace(valid=new_valid),
+                     cloud_busy_until=_occupy_slots(
+                         st.cloud_busy_until, now, dispatch, now + act),
+                     cq_blocked=(st.cq_blocked | (run & ~avail)) & new_valid,
                      n_success=n_success, n_miss=n_miss, n_drop=n_drop,
                      qos_utility=st.qos_utility + util)
     if pol.adaptive:
@@ -248,7 +341,8 @@ def _resolve_cloud(st: EdgeState, prof: Profiles, now, theta,
         st = st._replace(adapt=jax.lax.fori_loop(0, CLOUD_CAP, feed,
                                                  st.adapt))
     if pol.gems:
-        st = _gems_bulk(st, prof, now, success, run | dropped, st.cq_model)
+        st = _gems_bulk(st, prof, now, success, dispatch | skipped | dropped,
+                        st.cq_model)
     return st
 
 
@@ -262,29 +356,40 @@ def _gems_bulk(st: EdgeState, prof: Profiles, now, success_mask, done_mask,
     return st._replace(lam=lam, lam_hat=lam_hat)
 
 
-def _gems_act(st: EdgeState, prof: Profiles, now, theta, cloud_frac,
+def _gems_act(st: EdgeState, prof: Profiles, now, theta, bw_pen, cloud_frac,
               pol: FleetPolicy) -> EdgeState:
     """Alg. 1: reschedule lagging models, close expired windows.
 
-    GEMS-A: the reschedule feasibility gate uses the adapted t̂, the
-    elastic resolution runs at the same actual-duration model as
-    ``_resolve_cloud`` (``cloud_frac·t̂ + θ``), and completions feed the
-    estimator (mirroring the oracle, where rescheduled tasks go through
-    the instrumented cloud dispatch path).
+    Rescheduled tasks go through the same finite pool as the dispatch
+    path: the feasibility gate sees the queue-wait-folded t̂, moves are
+    capped by the free slots this tick (the rest stay on the edge queue
+    and may move next tick if still lagging), and each move occupies a
+    slot for the actual-duration model ``cloud_frac·t̂ + θ + bw-penalty``.
+
+    Plain GEMS keeps the legacy modeling simplification of resolving the
+    move's *outcome* at the deterministic estimate t̂ (no shaping) — the
+    elastic-limit behavior this refactor preserves bit-for-bit; only
+    GEMS-A resolves at the actual-duration model and feeds completions to
+    the estimator (mirroring the oracle, where rescheduled tasks go
+    through the instrumented cloud dispatch path).
     """
     m = prof.t_edge.shape[0]
     rate = st.lam_hat / jnp.maximum(st.lam, 1)
     lagging = (st.lam > 0) & (rate < prof.qoe_alpha)
 
-    # move pending edge tasks of lagging models to the cloud: with an
-    # elastic cloud and trigger=now, resolve immediately.
-    t_hat = _t_cloud_cur(st, prof, pol)
+    # move pending edge tasks of lagging models to the cloud (trigger=now,
+    # resolved immediately into the free slots of the finite pool).
+    t_hat = _t_cloud_cur(st, prof, pol, now)
     feas = now + t_hat[st.eq.model] <= st.eq.deadline
-    move = (st.eq.valid & lagging[st.eq.model]
+    want = (st.eq.valid & lagging[st.eq.model]
             & (prof.gamma_c[st.eq.model] > 0) & feas)
+    move = want & _free_slot_gate(st.cloud_busy_until, now, want)
+    # slots are *held* for the actual duration either way; only the
+    # outcome model differs between GEMS (estimate) and GEMS-A (actual)
+    hold = cloud_frac * prof.t_cloud[st.eq.model] + theta + bw_pen
     act = prof.t_cloud[st.eq.model]          # deterministic estimate
     if pol.adaptive:
-        act = cloud_frac * prof.t_cloud[st.eq.model] + theta
+        act = hold
     success = move & (now + act <= st.eq.deadline)
     add = functools.partial(jax.ops.segment_sum, num_segments=m)
     util = jnp.where(success, prof.gamma_c[st.eq.model],
@@ -300,6 +405,8 @@ def _gems_act(st: EdgeState, prof: Profiles, now, theta, cloud_frac,
                                                  st.adapt))
     st = st._replace(
         eq=js.edge_remove(st.eq, move),
+        cloud_busy_until=_occupy_slots(st.cloud_busy_until, now, move,
+                                       now + hold),
         n_success=st.n_success + add(success.astype(jnp.int32), st.eq.model),
         n_miss=st.n_miss + add((move & ~success).astype(jnp.int32),
                                st.eq.model),
@@ -327,12 +434,14 @@ def _offer_cloud(st: EdgeState, prof: Profiles, now, model, deadline, te,
     factor folded in), kept on the cloud queue for steal decisions.
 
     Feasibility and trigger times use the DEMS-A-adapted t̂ when the
-    policy is adaptive; a policy-level rejection then counts as a *skip*
-    for the estimator's cooling logic (oracle ``_offer_cloud``).
+    policy is adaptive — plus the finite-pool queue-wait estimate, so a
+    congested cloud pulls stealing triggers earlier and fails the
+    feasibility gate sooner; a policy-level rejection then counts as a
+    *skip* for the estimator's cooling logic (oracle ``_offer_cloud``).
     """
     if not pol.use_cloud:
         return st, jnp.asarray(False)
-    t_hat = _t_cloud_cur(st, prof, pol)[model]
+    t_hat = _t_cloud_cur(st, prof, pol, now)[model]
     feasible = now + t_hat <= deadline
     negative = prof.gamma_c[model] <= 0
     if pol.stealing:
@@ -352,7 +461,9 @@ def _offer_cloud(st: EdgeState, prof: Profiles, now, model, deadline, te,
     slot = jnp.argmax(~st.cq.valid)
     cq_model = jnp.where(pushed, st.cq_model.at[slot].set(model),
                          st.cq_model)
-    st = st._replace(cq=cq, cq_model=cq_model)
+    cq_blocked = jnp.where(pushed, st.cq_blocked.at[slot].set(False),
+                           st.cq_blocked)
+    st = st._replace(cq=cq, cq_model=cq_model, cq_blocked=cq_blocked)
     if pol.adaptive:
         skip = js.adapt_on_skip(st.adapt, model, now, prof.t_cloud,
                                 pol.adapt_cooling_ms)
@@ -378,7 +489,7 @@ def _route_arrival(st: EdgeState, prof: Profiles, now, model,
         victims = js.victim_mask(st.eq, now, st.busy_rem, deadline, te)
         migrate_ok = js.migration_decision(
             st.eq, victims, now, model, deadline, prof.gamma_e,
-            prof.gamma_c, _t_cloud_cur(st, prof, pol))
+            prof.gamma_c, _t_cloud_cur(st, prof, pol, now))
         has_victims = victims.any()
         insert_edge = arrive & feasible & (~has_victims | migrate_ok)
 
@@ -502,9 +613,13 @@ def make_step(prof: Profiles, pol: FleetPolicy, dt: float,
     m = prof.t_edge.shape[0]
 
     def step(st: EdgeState, inputs) -> tuple[EdgeState, None]:
-        # arrive: bool[M]; order: i32[M]; load_mult/theta per edge scalars
-        now, theta, arrive, order, load_mult, cloud_up = inputs
-        st = _resolve_cloud(st, prof, now, theta, cloud_frac, pol, cloud_up)
+        # arrive: bool[M]; order: i32[M]; theta/bw/load_mult per edge scalars
+        now, theta, bw, arrive, order, load_mult, cloud_up = inputs
+        # signed cellular transfer penalty (network.py convention); exactly
+        # 0.0 at the nominal benchmark bandwidth
+        bw_pen = network.bandwidth_penalty_ms(bw)
+        st = _resolve_cloud(st, prof, now, theta, bw_pen, cloud_frac, pol,
+                            cloud_up)
         # §3.3: tasks of a segment are inserted in randomized order
         def route_one(i, s):
             mdl = order[i]
@@ -513,7 +628,7 @@ def make_step(prof: Profiles, pol: FleetPolicy, dt: float,
         st = jax.lax.fori_loop(0, m, route_one, st)
         st = _edge_execute(st, prof, now, dt, edge_frac, pol, min_edge_t)
         if pol.gems:
-            st = _gems_act(st, prof, now, theta, cloud_frac, pol)
+            st = _gems_act(st, prof, now, theta, bw_pen, cloud_frac, pol)
         return st, None
 
     return step
@@ -592,8 +707,13 @@ def peer_offload(fs: EdgeState, now, slack_ms,
 
 def default_signals(n_models: int, *, n_edges: int, drones_per_edge: int = 3,
                     duration_ms: float = 300_000.0, dt: float = 25.0,
-                    theta_fn=None, seed: int = 0) -> FleetSignals:
-    """The paper's steady workload as dense tick signals (§8.1/§8.6)."""
+                    theta_fn=None, bw_fn=None, seed: int = 0) -> FleetSignals:
+    """The paper's steady workload as dense tick signals (§8.1/§8.6).
+
+    ``theta_fn`` / ``bw_fn`` shape the WAN latency and cellular bandwidth
+    (defaults: no added latency, nominal bandwidth → zero transfer
+    penalty).
+    """
     m = n_models
     n_ticks = int(duration_ms / dt)
     rng = np.random.default_rng(seed)
@@ -608,15 +728,19 @@ def default_signals(n_models: int, *, n_edges: int, drones_per_edge: int = 3,
             seg_t = np.arange(phase, duration_ms, 1000.0)
             ticks = np.minimum((seg_t / dt).astype(int), n_ticks - 1)
             arrive[ticks, e, :] = True
-    theta_t = np.array([theta_fn(t) if theta_fn else 0.0 for t in times],
-                       dtype=np.float32)
+    theta_t = network.sample_trace(theta_fn, times) if theta_fn \
+        else np.zeros(n_ticks, np.float32)
     theta = np.broadcast_to(theta_t[:, None], (n_ticks, n_edges))
+    bw_t = network.sample_trace(bw_fn, times) if bw_fn \
+        else np.full(n_ticks, network.NOMINAL_BW_MBPS, np.float32)
+    bw = np.broadcast_to(bw_t[:, None], (n_ticks, n_edges))
     order = np.stack([rng.permuted(np.tile(np.arange(m), (n_edges, 1)),
                                    axis=1) for _ in range(n_ticks)]
                      ).astype(np.int32)
     return FleetSignals(
         times=jnp.asarray(times), theta=jnp.asarray(theta),
-        arrive=jnp.asarray(arrive), order=jnp.asarray(order),
+        bw=jnp.asarray(bw), arrive=jnp.asarray(arrive),
+        order=jnp.asarray(order),
         load_mult=jnp.ones((n_ticks, n_edges), jnp.float32),
         cloud_up=jnp.ones(n_ticks, bool))
 
@@ -635,12 +759,14 @@ def _shard_leading(tree, mesh: jax.sharding.Mesh):
                 *([axis] + [None] * (a.ndim - 1))))), tree)
 
 
-def _fleet_setup(models, policy, dt, edge_frac, cloud_frac, n_edges):
+def _fleet_setup(models, policy, dt, edge_frac, cloud_frac, n_edges,
+                 cloud_slots):
     """Shared run_fleet / run_fleet_batch setup: program + initial state."""
     pol = _resolve_policy(policy)
     prof = Profiles.build(models)
     run = _fleet_program(prof, pol, dt, edge_frac, cloud_frac, n_edges)
-    state = jax.vmap(lambda _: init_state(prof, pol.adapt_window))(
+    state = jax.vmap(
+        lambda _: init_state(prof, pol.adapt_window, cloud_slots))(
         jnp.arange(n_edges))
     return run, state
 
@@ -649,12 +775,12 @@ def _fleet_program(prof: Profiles, pol: FleetPolicy, dt: float,
                    edge_frac: float, cloud_frac: float, n_edges: int):
     """Build ``run(state, xs) -> final`` — the whole mission as one scan."""
     step = make_step(prof, pol, dt, edge_frac, cloud_frac)
-    vstep = jax.vmap(step, in_axes=(0, (None, 0, 0, 0, 0, None)))
+    vstep = jax.vmap(step, in_axes=(0, (None, 0, 0, 0, 0, 0, None)))
     cooperate = pol.cooperation and n_edges > 1
 
     def scan_body(state, xs):
-        now, th, arr, ordr, lm, cup = xs
-        state, _ = vstep(state, (now, th, arr, ordr, lm, cup))
+        now, th, bw, arr, ordr, lm, cup = xs
+        state, _ = vstep(state, (now, th, bw, arr, ordr, lm, cup))
         if cooperate:
             state = peer_offload(state, now + dt, pol.coop_slack_ms,
                                  pol.coop_max_transfers)
@@ -669,17 +795,20 @@ def _fleet_program(prof: Profiles, pol: FleetPolicy, dt: float,
 
 def run_fleet(models: list[ModelProfile], policy, signals: FleetSignals, *,
               dt: float = 25.0, edge_frac: float = 0.62,
-              cloud_frac: float = 0.80,
+              cloud_frac: float = 0.80, cloud_slots: int = CLOUD_SLOTS,
               mesh: Optional[jax.sharding.Mesh] = None) -> EdgeState:
     """Run the fleet simulator over arbitrary scenario signals.
 
     ``policy`` is a :class:`FleetPolicy` or a name (``"DEMS"``,
-    ``"GEMS-A-COOP"``, …).  With ``mesh`` given, fleet state is sharded
-    over its first axis (pjit-style data parallelism over edges); the peer
-    offload exchange then runs as cross-device collectives.
+    ``"GEMS-A-COOP"``, …).  ``cloud_slots`` is each edge's share of the
+    bounded FaaS concurrency (the oracle's ``cloud_concurrency``); make it
+    large to recover the elastic-cloud limit.  With ``mesh`` given, fleet
+    state is sharded over its first axis (pjit-style data parallelism over
+    edges); the peer offload exchange then runs as cross-device
+    collectives.
     """
     run, state = _fleet_setup(models, policy, dt, edge_frac, cloud_frac,
-                              signals.arrive.shape[1])
+                              signals.arrive.shape[1], cloud_slots)
     xs = tuple(signals)
     if mesh is not None:
         state = _shard_leading(state, mesh)
@@ -699,6 +828,7 @@ def stack_signals(signals: list[FleetSignals]) -> FleetSignals:
 def run_fleet_batch(models: list[ModelProfile], policy,
                     signals: FleetSignals, *, dt: float = 25.0,
                     edge_frac: float = 0.62, cloud_frac: float = 0.80,
+                    cloud_slots: int = CLOUD_SLOTS,
                     mesh: Optional[jax.sharding.Mesh] = None) -> EdgeState:
     """One-jit sweep: ``signals`` carry a leading replica axis ``[R, …]``
     (from :func:`stack_signals`), and the whole sweep — every replica's
@@ -712,7 +842,7 @@ def run_fleet_batch(models: list[ModelProfile], policy,
     devices.
     """
     run, state = _fleet_setup(models, policy, dt, edge_frac, cloud_frac,
-                              signals.arrive.shape[2])
+                              signals.arrive.shape[2], cloud_slots)
     xs = tuple(signals)
     if mesh is not None:
         xs = _shard_leading(xs, mesh)
@@ -723,7 +853,8 @@ def simulate_fleet(models: list[ModelProfile], policy: str, *,
                    n_edges: int, drones_per_edge: int = 3,
                    duration_ms: float = 300_000.0, dt: float = 25.0,
                    edge_frac: float = 0.62, cloud_frac: float = 0.80,
-                   theta_fn=None, seed: int = 0,
+                   cloud_slots: int = CLOUD_SLOTS,
+                   theta_fn=None, bw_fn=None, seed: int = 0,
                    mesh: Optional[jax.sharding.Mesh] = None) -> EdgeState:
     """Simulate ``n_edges`` base stations under the paper's steady
     workload; returns stacked final states.  Scenario-driven runs (bursts,
@@ -732,6 +863,7 @@ def simulate_fleet(models: list[ModelProfile], policy: str, *,
     signals = default_signals(len(models), n_edges=n_edges,
                               drones_per_edge=drones_per_edge,
                               duration_ms=duration_ms, dt=dt,
-                              theta_fn=theta_fn, seed=seed)
+                              theta_fn=theta_fn, bw_fn=bw_fn, seed=seed)
     return run_fleet(models, policy, signals, dt=dt, edge_frac=edge_frac,
-                     cloud_frac=cloud_frac, mesh=mesh)
+                     cloud_frac=cloud_frac, cloud_slots=cloud_slots,
+                     mesh=mesh)

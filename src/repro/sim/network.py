@@ -11,6 +11,21 @@ the edge↔cloud link during experiments:
 
 All times ms, bandwidth Mbps, sizes kB.  Samplers draw from a
 ``numpy.random.Generator`` owned by the simulator so runs are reproducible.
+
+Trace functions (``constant``, ``trapezium``, ``cellular_bandwidth_trace``)
+are **array-native**: called with an ``np.ndarray`` of times they return an
+array of the same shape, so scenario compilation evaluates a whole mission's
+tick grid in one call instead of a Python loop per tick.  Scalar calls
+still return plain floats.
+
+Bandwidth-penalty convention (shared by the oracle's ``shaped_delta`` and
+the fleet simulator's dense ``bw`` signal): the penalty is the **signed**
+difference ``transfer_ms(SEGMENT_KB, bw(t)) − transfer_ms(SEGMENT_KB,
+NOMINAL_BW_MBPS)``.  Bandwidth below nominal slows the transfer down;
+bandwidth *above* nominal speeds it up, bounded below by
+``−transfer_ms(SEGMENT_KB, NOMINAL_BW_MBPS)`` (a transfer can at best
+become free — ``transfer_ms`` is never negative, so the floor is
+automatic).  At ``bw ≡ NOMINAL_BW_MBPS`` the penalty is exactly zero.
 """
 from __future__ import annotations
 
@@ -29,12 +44,47 @@ def transfer_ms(size_kb: float, bw_mbps: float) -> float:
     return size_kb * 8.0 / max(bw_mbps, 1e-3)
 
 
+def bandwidth_penalty_ms(bw_mbps, segment_kb: float = SEGMENT_KB):
+    """Signed shaping delta vs the nominal benchmark bandwidth.
+
+    Works on scalars and arrays (``np`` or ``jnp``); the two ``transfer``
+    terms use the identical expression so the penalty is exactly ``0.0``
+    at ``bw_mbps == NOMINAL_BW_MBPS``.
+    """
+    clipped = np.maximum(bw_mbps, 1e-3) if isinstance(
+        bw_mbps, (int, float, np.ndarray)) else bw_mbps.clip(1e-3)
+    return (segment_kb * 8.0 / clipped
+            - segment_kb * 8.0 / NOMINAL_BW_MBPS)
+
+
+def sample_trace(fn: Callable, times: np.ndarray) -> np.ndarray:
+    """Evaluate a trace over a time grid in one call.
+
+    Array-native trace functions (everything in this module) evaluate
+    vectorized; foreign scalar-only callables fall back to a Python loop.
+    """
+    times = np.asarray(times)
+    try:
+        out = np.asarray(fn(times), dtype=np.float32)
+        if out.shape == times.shape:
+            return out
+    except (TypeError, ValueError):
+        pass
+    return np.asarray([fn(float(t)) for t in times], dtype=np.float32)
+
+
 # ---------------------------------------------------------------------------
 # Latency / bandwidth shaping traces
 # ---------------------------------------------------------------------------
 
+def _scalarize(out: np.ndarray, t) -> np.ndarray | float:
+    return out if np.ndim(t) else float(out)
+
+
 def constant(value: float) -> Callable[[float], float]:
-    return lambda t: value
+    def trace(t):
+        return _scalarize(np.full(np.shape(t), value, dtype=float), t)
+    return trace
 
 
 def trapezium(low: float = 0.0, high: float = 400.0,
@@ -44,15 +94,20 @@ def trapezium(low: float = 0.0, high: float = 400.0,
     """§8.5 trapezium waveform for added one-way latency θ(t)."""
     u0, u1 = ramp_up
     d0, d1 = ramp_down
+    # degenerate (step) ramps select an empty branch below, but the ramp
+    # expressions are evaluated unconditionally — keep their denominators
+    # nonzero so a step ramp doesn't emit divide-by-zero warnings
+    du = max(u1 - u0, 1e-9)
+    dd = max(d1 - d0, 1e-9)
 
-    def theta(t: float) -> float:
-        if t < u0 or t >= d1:
-            return low
-        if t < u1:
-            return low + (high - low) * (t - u0) / (u1 - u0)
-        if t < d0:
-            return high
-        return high - (high - low) * (t - d0) / (d1 - d0)
+    def theta(t):
+        ta = np.asarray(t, dtype=float)
+        up = low + (high - low) * (ta - u0) / du
+        down = high - (high - low) * (ta - d0) / dd
+        out = np.where((ta < u0) | (ta >= d1), low,
+                       np.where(ta < u1, up,
+                                np.where(ta < d0, high, down)))
+        return _scalarize(out, t)
 
     return theta
 
@@ -64,21 +119,27 @@ def cellular_bandwidth_trace(seed: int = 7, duration_ms: float = 600_000.0,
     """Synthetic mobile 4G bandwidth trace (Fig 2c analogue).
 
     Bounded multiplicative random walk with occasional deep fades, matching
-    the high divergence across mobile devices the paper reports.
+    the high divergence across mobile devices the paper reports.  The walk
+    is seeded at its anchor: ``bw(0) == clip(start)`` exactly, and steps
+    perturb from there.  Queries beyond ``duration_ms`` wrap around
+    (periodic extension) — explicit and documented, instead of silently
+    pinning to the last sample.
     """
     rng = np.random.default_rng(seed)
-    n = int(duration_ms / step_ms) + 2
+    n = int(duration_ms / step_ms) + 1
     vals = np.empty(n)
-    v = start
-    for i in range(n):
+    vals[0] = min(max(start, lo), hi)
+    v = vals[0]
+    for i in range(1, n):
         v *= math.exp(rng.normal(0.0, 0.25))
         if rng.random() < 0.04:       # deep fade (underpass / handover)
             v *= 0.08
         v = min(max(v, lo), hi)
         vals[i] = v
 
-    def bw(t: float) -> float:
-        return float(vals[min(int(t / step_ms), n - 1)])
+    def bw(t):
+        idx = (np.asarray(t, dtype=float) / step_ms).astype(int) % n
+        return _scalarize(vals[idx], t)
 
     return bw
 
@@ -116,9 +177,11 @@ class CloudLatencyModel:
 
     ``t̂`` is the benchmarked p95 end-to-end estimate.  We decompose the
     sample into a lognormal body calibrated so ~5 % of unshaped samples
-    exceed t̂, plus shaped deltas: added latency θ(t) and the bandwidth
-    penalty relative to the nominal benchmark bandwidth.  Cold starts
-    appear as a small probability of a large multiplier (§4, [47]).
+    exceed t̂, plus shaped deltas: added latency θ(t) and the **signed**
+    bandwidth penalty relative to the nominal benchmark bandwidth (see
+    module docstring; the fleet simulator's ``bw`` signal applies the
+    identical convention).  Cold starts appear as a small probability of
+    a large multiplier (§4, [47]).
     """
 
     median_frac: float = 0.70
@@ -132,10 +195,14 @@ class CloudLatencyModel:
     segment_kb: float = SEGMENT_KB
 
     def shaped_delta(self, now: float) -> float:
-        """Deterministic extra latency from shaping at time ``now``."""
-        extra_bw = transfer_ms(self.segment_kb, self.bandwidth_at(now)) - \
-            transfer_ms(self.segment_kb, NOMINAL_BW_MBPS)
-        return self.latency_at(now) + max(0.0, extra_bw)
+        """Deterministic extra latency from shaping at time ``now``.
+
+        ``θ(now)`` plus the signed bandwidth penalty: below-nominal
+        bandwidth adds transfer time, above-nominal subtracts it (floored
+        at ``−transfer_ms(segment_kb, NOMINAL_BW_MBPS)`` by construction).
+        """
+        return self.latency_at(now) + bandwidth_penalty_ms(
+            self.bandwidth_at(now), self.segment_kb)
 
     def sample(self, rng: np.random.Generator, t_cloud: float,
                now: float) -> float:

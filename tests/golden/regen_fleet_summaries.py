@@ -1,19 +1,32 @@
 """Regenerate the fleet_summary golden file after an intentional change.
 
     PYTHONPATH=src python tests/golden/regen_fleet_summaries.py
+    PYTHONPATH=src python tests/golden/regen_fleet_summaries.py --check
+
+``--check`` recomputes every summary and fails (exit 1) if the checked-in
+golden file has drifted beyond a small tolerance, without rewriting it —
+the CI staleness gate.  The tolerance (rel 5e-3, abs 1.5) forgives
+last-ulp float32-reduction differences across JAX versions / BLAS /
+platforms (which can flip a borderline task, shifting a count by one)
+while still catching any real behavior change a contributor forgot to
+regenerate for; tests/test_fleet_batch.py compares at a looser 5 % for
+the same reason.
 
 Keep the duration / seed / policies in sync with tests/test_fleet_batch.py.
 """
 import json
 import pathlib
+import sys
 
 from repro.scenarios import fleet_summary, get, names, run_scenario_fleet
 
 GOLDEN_DURATION_MS = 45_000.0
 POLICIES = ("DEMS", "GEMS-COOP")
+REL_TOL = 5e-3
+ABS_TOL = 1.5
 
 
-def main() -> None:
+def _compute() -> dict:
     out = {}
     for sc in names():
         out[sc] = {}
@@ -22,8 +35,39 @@ def main() -> None:
             out[sc][pol] = fleet_summary(run_scenario_fleet(spec, pol,
                                                             dt=25.0))
             print(sc, pol, out[sc][pol]["completed"], flush=True)
+    return out
+
+
+def _drift(golden: dict, fresh: dict, path: str = "") -> list[str]:
+    bad = []
+    keys = sorted(set(golden) | set(fresh))
+    for k in keys:
+        at = f"{path}/{k}"
+        if k not in golden or k not in fresh:
+            bad.append(f"{at}: only in {'fresh' if k in fresh else 'golden'}")
+        elif isinstance(golden[k], dict):
+            bad.extend(_drift(golden[k], fresh[k], at))
+        else:
+            g, f = float(golden[k]), float(fresh[k])
+            if abs(g - f) > max(ABS_TOL, REL_TOL * abs(g)):
+                bad.append(f"{at}: golden {golden[k]} vs fresh {fresh[k]}")
+    return bad
+
+
+def main() -> None:
     path = pathlib.Path(__file__).parent / "fleet_summaries.json"
-    path.write_text(json.dumps(out, indent=1, sort_keys=True) + "\n")
+    fresh = _compute()
+    if "--check" in sys.argv[1:]:
+        golden = json.loads(path.read_text())
+        bad = _drift(golden, fresh)
+        if bad:
+            print(f"golden file is stale ({len(bad)} drifted values) — "
+                  "rerun this script without --check and commit:")
+            print("\n".join(bad))
+            sys.exit(1)
+        print("golden file is fresh:", path)
+        return
+    path.write_text(json.dumps(fresh, indent=1, sort_keys=True) + "\n")
     print("wrote", path)
 
 

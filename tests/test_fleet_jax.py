@@ -29,7 +29,7 @@ def test_fleet_matches_event_engine_approximately(policy):
     duration = 120_000.0
     oracle = _engine_result(policy, duration)
     final = simulate_fleet(MODELS, policy, n_edges=1, drones_per_edge=3,
-                           duration_ms=duration, dt=25.0,
+                           duration_ms=duration, dt=25.0, cloud_slots=512,
                            edge_frac=0.62, cloud_frac=0.80, seed=0)
     got = float(np.asarray(final.n_success).sum())
     want = oracle.completed
@@ -44,8 +44,9 @@ def test_fleet_dems_a_matches_oracle_under_trapezium():
     duration = 300_000.0
     oracle = _engine_result("DEMS-A", duration, theta_fn=trapezium())
     final = simulate_fleet(MODELS, "DEMS-A", n_edges=1, drones_per_edge=3,
-                           duration_ms=duration, dt=25.0, edge_frac=0.62,
-                           cloud_frac=0.80, theta_fn=trapezium(), seed=0)
+                           duration_ms=duration, dt=25.0, cloud_slots=512,
+                           edge_frac=0.62, cloud_frac=0.80,
+                           theta_fn=trapezium(), seed=0)
     got = float(np.asarray(final.n_success).sum())
     want = oracle.completed
     assert abs(got - want) / want < 0.10, (got, want)
@@ -55,6 +56,68 @@ def test_fleet_dems_a_matches_oracle_under_trapezium():
     cur = np.asarray(final.adapt.current)
     static = np.asarray([m.t_cloud for m in MODELS])
     assert (cur > static + 1.0).any(), cur
+
+
+def _scenario_agreement(scenario_name, policy="DEMS",
+                        duration_ms=120_000.0):
+    """Deterministic oracle vs fleet on a registry scenario; relative
+    errors on completed tasks and QoS utility."""
+    from repro.scenarios import (fleet_summary, get, run_scenario_fleet,
+                                 run_scenario_oracle)
+
+    spec = get(scenario_name, duration_ms=duration_ms)
+    em = EdgeLatencyModel(mean_frac=0.62, sd_frac=0.0, lo_frac=0.62,
+                          hi_frac=0.62)
+    oracle = run_scenario_oracle(
+        spec, policy, edge_model=em,
+        cloud_model_overrides=dict(median_frac=0.80, sigma=1e-6,
+                                   cold_start_p=0.0)).merged
+    fleet = fleet_summary(run_scenario_fleet(spec, policy))
+    d_done = abs(fleet["completed"] - oracle.completed) / oracle.completed
+    d_qos = abs(fleet["qos_utility"] - oracle.qos_utility) / \
+        abs(oracle.qos_utility)
+    return oracle, fleet, d_done, d_qos
+
+
+def test_fleet_matches_oracle_under_saturated_cloud_pool():
+    """cloud-crunch: 2 FaaS slots per edge + 4× burst — the fleet's
+    finite-pool queue-wait must track the oracle's slot contention, not
+    the old elastic cloud (which over-reported utility by >30 %)."""
+    oracle, fleet, d_done, d_qos = _scenario_agreement("cloud-crunch")
+    n_dropped = sum(s.dropped for s in oracle.per_model.values())
+    assert n_dropped > 0.2 * oracle.generated        # pool really saturates
+    assert d_done < 0.10, (fleet["completed"], oracle.completed)
+    assert d_qos < 0.10, (fleet["qos_utility"], oracle.qos_utility)
+
+
+def test_fleet_matches_oracle_under_bandwidth_fade():
+    """bw-fade: deep cellular fade — the dense ``bw`` signal must apply
+    the same signed transfer penalty as the oracle's shaped_delta."""
+    oracle, fleet, d_done, d_qos = _scenario_agreement("bw-fade")
+    assert d_done < 0.10, (fleet["completed"], oracle.completed)
+    assert d_qos < 0.10, (fleet["qos_utility"], oracle.qos_utility)
+
+
+def test_finite_pool_and_fade_degrade_fleet_utility():
+    """Small pools and fades must hurt: the congestion scenarios exist to
+    break the elastic-cloud optimism, so their fleet utility is strictly
+    below the same mission with an ample pool / nominal bandwidth."""
+    import dataclasses as dc
+
+    from repro.scenarios import fleet_summary, get, run_scenario_fleet
+
+    crunch = get("cloud-crunch", duration_ms=60_000.0)
+    ample = dc.replace(crunch, cloud_concurrency=512)
+    s_tight = fleet_summary(run_scenario_fleet(crunch, "DEMS"))
+    s_ample = fleet_summary(run_scenario_fleet(ample, "DEMS"))
+    assert s_tight["qos_utility"] < s_ample["qos_utility"]
+    assert s_tight["completed"] < s_ample["completed"]
+
+    fade = get("bw-fade", duration_ms=60_000.0)
+    clear = dc.replace(fade, bandwidth=None)
+    f_fade = fleet_summary(run_scenario_fleet(fade, "DEMS"))
+    f_clear = fleet_summary(run_scenario_fleet(clear, "DEMS"))
+    assert f_fade["qos_utility"] < f_clear["qos_utility"]
 
 
 def test_fleet_dems_a_beats_dems_under_variability():

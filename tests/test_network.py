@@ -51,12 +51,34 @@ def test_bandwidth_walk_stays_within_bounds():
     assert np.std(samples) > 0.0          # it actually moves
 
 
-def test_bandwidth_walk_reproducible_and_clamped_past_horizon():
+def test_bandwidth_walk_reproducible_and_seeded_at_start():
     a = cellular_bandwidth_trace(seed=3, duration_ms=10_000.0)
     b = cellular_bandwidth_trace(seed=3, duration_ms=10_000.0)
     assert [a(t) for t in range(0, 10_000, 500)] == \
         [b(t) for t in range(0, 10_000, 500)]
-    assert a(10 * 10_000.0) == a(1e12)    # beyond-horizon → last value
+    # the walk is anchored: bw(0) is exactly `start`, not a perturbed step
+    assert a(0.0) == 18.0
+    assert cellular_bandwidth_trace(seed=9, start=5.0)(0.0) == 5.0
+    # out-of-range start values are clipped to the walk's bounds
+    assert cellular_bandwidth_trace(seed=9, hi=40.0, start=99.0)(0.0) == 40.0
+
+
+def test_bandwidth_walk_wraps_past_horizon():
+    bw = cellular_bandwidth_trace(seed=3, duration_ms=10_000.0,
+                                  step_ms=1_000.0)
+    period = 11_000.0                      # n = duration/step + 1 samples
+    for t in (0.0, 1_500.0, 9_999.0):
+        assert bw(t + period) == bw(t)     # periodic extension, not a pin
+        assert bw(t + 5 * period) == bw(t)
+
+
+def test_traces_are_array_native():
+    ts = np.array([0.0, 75_000.0, 150_000.0, 500_000.0])
+    th = trapezium()
+    np.testing.assert_allclose(th(ts), [th(float(t)) for t in ts])
+    assert constant(7.0)(ts).shape == ts.shape
+    bw = cellular_bandwidth_trace(seed=3)
+    np.testing.assert_allclose(bw(ts), [bw(float(t)) for t in ts])
 
 
 # ---------------------------------------------------------------------------
@@ -77,13 +99,32 @@ def test_transfer_ms_degenerate_inputs():
     assert transfer_ms(38.0, 40.0) < transfer_ms(38.0, 20.0)
 
 
-def test_shaped_delta_combines_theta_and_bandwidth_penalty():
+def test_shaped_delta_combines_theta_and_signed_bandwidth_penalty():
     cm = CloudLatencyModel(latency_at=constant(100.0),
                            bandwidth_at=constant(NOMINAL_BW_MBPS / 2))
     want_bw = transfer_ms(SEGMENT_KB, NOMINAL_BW_MBPS / 2) - \
         transfer_ms(SEGMENT_KB, NOMINAL_BW_MBPS)
+    assert want_bw > 0
     assert cm.shaped_delta(0.0) == pytest.approx(100.0 + want_bw)
-    # bandwidth above nominal never *reduces* latency below θ
+    # signed convention: bandwidth above nominal *speeds transfers up*,
+    # floored at recovering the full nominal transfer cost
     cm2 = CloudLatencyModel(latency_at=constant(7.0),
                             bandwidth_at=constant(2 * NOMINAL_BW_MBPS))
-    assert cm2.shaped_delta(0.0) == pytest.approx(7.0)
+    gain = transfer_ms(SEGMENT_KB, 2 * NOMINAL_BW_MBPS) - \
+        transfer_ms(SEGMENT_KB, NOMINAL_BW_MBPS)
+    assert gain < 0
+    assert cm2.shaped_delta(0.0) == pytest.approx(7.0 + gain)
+    cm3 = CloudLatencyModel(bandwidth_at=constant(1e9))
+    assert cm3.shaped_delta(0.0) >= -transfer_ms(SEGMENT_KB, NOMINAL_BW_MBPS)
+    # nominal bandwidth ⇒ exactly zero penalty (the fleet's elastic limit)
+    assert CloudLatencyModel(bandwidth_at=constant(
+        NOMINAL_BW_MBPS)).shaped_delta(0.0) == 0.0
+
+
+def test_fleet_bandwidth_penalty_matches_oracle_convention():
+    from repro.sim.network import bandwidth_penalty_ms
+    for mbps in (0.3, 2.0, NOMINAL_BW_MBPS, 40.0):
+        want = CloudLatencyModel(
+            bandwidth_at=constant(mbps)).shaped_delta(0.0)
+        assert bandwidth_penalty_ms(mbps) == pytest.approx(want)
+    assert bandwidth_penalty_ms(NOMINAL_BW_MBPS) == 0.0

@@ -157,6 +157,29 @@ def test_cloud_outage_gates_fleet_dispatch():
     assert s_out["completed"] < s_base["completed"]
 
 
+def test_compile_fleet_preserves_task_count_under_bursts():
+    """Coincident arrivals must spill to neighboring ticks, not collapse:
+    the dense arrival mask carries exactly the oracle's task count (the
+    old boolean-collapse silently deflated burst load by ~50 %)."""
+    spec = get("cloud-crunch", duration_ms=120_000.0)
+    n_oracle = sum(len(a) for a in compile_oracle(spec).edge_arrivals)
+    n_fleet = int(np.asarray(compile_fleet(spec).arrive).sum())
+    assert abs(n_fleet - n_oracle) <= 0.01 * n_oracle, (n_fleet, n_oracle)
+
+
+def test_compile_fleet_bw_channel_matches_trace_and_defaults_nominal():
+    from repro.sim.network import NOMINAL_BW_MBPS
+
+    plain = compile_fleet(get("baseline", duration_ms=10_000.0))
+    assert np.allclose(np.asarray(plain.bw), NOMINAL_BW_MBPS)
+    fade = get("bw-fade", duration_ms=60_000.0)
+    sig = compile_fleet(fade)
+    bw = np.asarray(sig.bw)
+    assert bw.min() >= fade.bandwidth.lo and bw.max() <= fade.bandwidth.hi
+    assert bw.std() > 0.0                      # the walk actually moves
+    assert (bw < NOMINAL_BW_MBPS).mean() > 0.9  # it is a deep fade
+
+
 def test_hetero_edges_scale_oracle_latency_and_fleet_load_mult():
     spec = get("hetero-edges", duration_ms=30_000.0)
     fast, nominal, slow = (spec.edge_models(e) for e in range(3))
@@ -165,8 +188,9 @@ def test_hetero_edges_scale_oracle_latency_and_fleet_load_mult():
     assert np.allclose(lm[0], [0.7, 1.0, 1.6])
 
 
-def test_registry_has_six_compilable_scenarios():
-    assert len(names()) >= 6
+def test_registry_has_eight_compilable_scenarios():
+    assert len(names()) >= 8
+    assert {"cloud-crunch", "bw-fade"} <= set(names())
     for name in names():
         spec = get(name, duration_ms=10_000.0)
         compiled = compile_oracle(spec)
