@@ -1,0 +1,183 @@
+"""Fleet-simulator perf benchmark → ``BENCH_fleet.json`` (perf trajectory).
+
+    PYTHONPATH=src python benchmarks/bench_fleet.py            # full
+    PYTHONPATH=src python benchmarks/bench_fleet.py --quick    # CI smoke
+    PYTHONPATH=src python benchmarks/bench_fleet.py --quick \
+        --check BENCH_fleet.json                               # CI gate
+
+Two measurements:
+
+* **tick throughput** — the steady-workload fleet program's edge-ticks
+  per second, with compile time split out (first call − steady call);
+* **sweep wall-clock** — the registry × policies × seeds evaluation run
+  the old way (one ``run_fleet`` per scenario/policy/seed, compiles
+  amortized only across same-shape runs) vs the padded one-program batch
+  (``run_registry_sweep``: a single jit for the whole sweep).  The
+  reported ``speedup`` is the headline number of the one-program-sweeps
+  PR (target ≥2×); both phases start from cleared compilation caches so
+  each pays its honest compile bill.
+
+``BENCH_fleet.json`` keeps one section per mode (``quick`` / ``full``),
+so a committed quick-mode baseline gates CI runs apples-to-apples while
+the full section documents the real trajectory numbers.  ``--check``
+compares ``ticks_per_sec`` against the committed baseline's same-mode
+section and exits 1 on a >25 % regression (tune with ``--tolerance``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+import time
+
+# the one-program batch shards its replica axis over every available
+# core (the loop, running one mission at a time, cannot) — expose the
+# cores as host devices before jax initializes
+_CORES = os.cpu_count() or 1
+if _CORES > 1:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_CORES} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import jax  # noqa: E402
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_fleet.json"
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return time.perf_counter() - t0
+
+
+def _clear_caches() -> None:
+    from repro.sim import fleet_jax
+    fleet_jax._fleet_program.cache_clear()
+    jax.clear_caches()
+
+
+def bench_throughput(quick: bool) -> dict:
+    """Edge-ticks/sec of the steady paper workload (one compiled scan)."""
+    from repro.core.task import PASSIVE, TABLE1
+    from repro.sim.fleet_jax import default_signals, run_fleet
+
+    models = [TABLE1[n] for n in PASSIVE]
+    n_edges = 8 if quick else 16
+    duration = 30_000.0 if quick else 120_000.0
+    signals = default_signals(len(models), n_edges=n_edges,
+                              duration_ms=duration)
+    _clear_caches()
+    run = lambda: run_fleet(models, "DEMS-A", signals)  # noqa: E731
+    first = _timed(run)
+    steady = min(_timed(run) for _ in range(2 if quick else 3))
+    n_ticks = int(signals.times.shape[0])
+    return dict(
+        n_edges=n_edges, n_ticks=n_ticks, policy="DEMS-A",
+        compile_s=round(first - steady, 3), wall_s=round(steady, 3),
+        ticks_per_sec=round(n_ticks / steady, 1),
+        edge_ticks_per_sec=round(n_ticks * n_edges / steady, 1))
+
+
+def bench_sweep(quick: bool) -> dict:
+    """Registry sweep: per-scenario loop vs the padded one-program batch."""
+    from repro.scenarios import (fleet_summary, get, names,
+                                 run_registry_sweep, run_scenario_fleet)
+
+    duration = 10_000.0 if quick else 45_000.0
+    policies = ("EDF-E+C", "DEMS", "DEMS-A") if quick else \
+        ("EDF-E+C", "DEMS", "DEMS-A", "GEMS", "GEMS-COOP")
+    seeds = (0, 1) if quick else (0, 1, 2)
+    scenarios = names()
+
+    _clear_caches()
+    t0 = time.perf_counter()
+    loop_rows = []
+    for sc in scenarios:
+        for pol in policies:
+            for seed in seeds:
+                spec = get(sc, duration_ms=duration, seed=seed)
+                loop_rows.append(fleet_summary(
+                    run_scenario_fleet(spec, pol)))
+    loop_s = time.perf_counter() - t0
+
+    _clear_caches()
+    t0 = time.perf_counter()
+    batch_rows = run_registry_sweep(scenarios, policies, seeds,
+                                    duration_ms=duration, mesh="auto")
+    batch_s = time.perf_counter() - t0
+
+    mismatches = sum(
+        any(row[k] != batch[k] for k in row)
+        for row, batch in zip(loop_rows, batch_rows))
+    return dict(
+        n_runs=len(batch_rows), n_scenarios=len(scenarios),
+        policies=list(policies), seeds=list(seeds),
+        duration_ms=duration, batch_devices=jax.device_count(),
+        loop_wall_s=round(loop_s, 2), batch_wall_s=round(batch_s, 2),
+        speedup=round(loop_s / batch_s, 2), loop_vs_batch_mismatches=
+        mismatches)
+
+
+def check(report: dict, baseline_path: pathlib.Path,
+          tolerance: float) -> int:
+    mode = "quick" if report["quick"] else "full"
+    baseline = json.loads(baseline_path.read_text()).get(mode)
+    if baseline is None:
+        print(f"FAIL: baseline {baseline_path} has no {mode!r} section")
+        return 1
+    want = baseline["throughput"]["ticks_per_sec"]
+    got = report["throughput"]["ticks_per_sec"]
+    floor = (1.0 - tolerance) * want
+    print(f"ticks/sec: current {got}, baseline {want} "
+          f"(floor {floor:.1f} at {tolerance:.0%} tolerance)")
+    if got < floor:
+        print("FAIL: per-tick throughput regressed beyond tolerance — "
+              "if intentional, regenerate BENCH_fleet.json")
+        return 1
+    if report["sweep"]["loop_vs_batch_mismatches"]:
+        print("FAIL: one-program sweep summaries diverge from the "
+              "per-scenario loop")
+        return 1
+    print("OK")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="short missions / fewer reps (CI smoke)")
+    ap.add_argument("--out", type=pathlib.Path, default=DEFAULT_OUT)
+    ap.add_argument("--check", type=pathlib.Path, default=None,
+                    help="baseline BENCH_fleet.json to gate against")
+    ap.add_argument("--report", type=pathlib.Path, default=None,
+                    help="with --check: gate a previously written report "
+                    "file instead of re-measuring")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional ticks/sec regression")
+    args = ap.parse_args()
+
+    if args.check is not None and args.report is not None:
+        mode = "quick" if args.quick else "full"
+        report = json.loads(args.report.read_text())[mode]
+        sys.exit(check(report, args.check, args.tolerance))
+
+    report = dict(
+        quick=args.quick,
+        jax=jax.__version__, backend=jax.default_backend(),
+        devices=jax.device_count(), cpus=os.cpu_count(),
+        throughput=bench_throughput(args.quick),
+        sweep=bench_sweep(args.quick))
+    print(json.dumps(report, indent=1))
+    if args.check is not None:
+        sys.exit(check(report, args.check, args.tolerance))
+    merged = json.loads(args.out.read_text()) if args.out.exists() else {}
+    merged["quick" if args.quick else "full"] = report
+    args.out.write_text(json.dumps(merged, indent=1, sort_keys=True) + "\n")
+    print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

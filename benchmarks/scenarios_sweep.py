@@ -8,17 +8,19 @@
 
 Oracle rows carry the full event-driven metric set (windows, stealing,
 migration); fleet rows add the cross-edge peer-offload count.  The fleet
-backend runs each (scenario, policy) seed sweep as *one* compiled program
-(`run_fleet_batch`), so N seeds cost one jit, not N.  Output is CSV on
-stdout, one row per (scenario, policy, seed).  ``--quick`` is the CI
-smoke path: one calm and one congested short scenario on both backends.
+backend runs the **whole sweep as one compiled program**: scenarios are
+padded to a common shape and policies are runtime parameters
+(`run_registry_sweep`), so scenarios × policies × seeds cost a single
+jit, not one per (scenario, policy).  Output is CSV on stdout, one row
+per (scenario, policy, seed).  ``--quick`` is the CI smoke path: one
+calm and one congested short scenario on both backends.
 """
 from __future__ import annotations
 
 import argparse
 
-from repro.scenarios import (fleet_summary_batch, get, names,
-                             run_scenario_fleet_batch, run_scenario_oracle)
+from repro.scenarios import get, names, run_registry_sweep, \
+    run_scenario_oracle
 
 ORACLE_POLICIES = ("EDF-E+C", "DEMS", "GEMS")
 FLEET_POLICIES = ("EDF-E+C", "DEMS", "DEMS-A", "DEMS-COOP", "GEMS",
@@ -41,15 +43,13 @@ def sweep_oracle(scenarios, policies, duration_ms) -> None:
 def sweep_fleet(scenarios, policies, duration_ms, dt, seeds) -> None:
     print("scenario,policy,seed,completed,completion_rate,qos_utility,"
           "qoe_utility,stolen,peer_offloaded")
-    for sc in scenarios:
-        spec = get(sc, duration_ms=duration_ms) if duration_ms else get(sc)
-        for pol in policies:
-            final = run_scenario_fleet_batch(spec, pol, tuple(seeds), dt=dt)
-            for seed, s in zip(seeds, fleet_summary_batch(final)):
-                print(f"{sc},{pol},{seed},{s['completed']},"
-                      f"{s['completion_rate']:.4f},{s['qos_utility']:.0f},"
-                      f"{s['qoe_utility']:.0f},{s['stolen']},"
-                      f"{s['peer_offloaded']}")
+    rows = run_registry_sweep(tuple(scenarios), tuple(policies),
+                              tuple(seeds), dt=dt, duration_ms=duration_ms)
+    for s in rows:
+        print(f"{s['scenario']},{s['policy']},{s['seed']},{s['completed']},"
+              f"{s['completion_rate']:.4f},{s['qos_utility']:.0f},"
+              f"{s['qoe_utility']:.0f},{s['stolen']},"
+              f"{s['peer_offloaded']}")
 
 
 def main() -> None:

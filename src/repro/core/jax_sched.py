@@ -27,6 +27,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import sched_ops
+
 NEG = -1e30
 POS = 1e30
 
@@ -187,9 +189,8 @@ def steal_select(cq: CloudQueue, q: EdgeQueue, now, busy_rem,
                 & gate)
     # lexicographic (steal_only desc, rank desc) via a scalar score
     score = jnp.where(cq.steal_only, 1e12, 0.0) + cq.rank
-    score = jnp.where(eligible, score, NEG)
-    idx = jnp.argmax(score)
-    return jnp.where(eligible.any(), idx, -1)
+    idx, _ = sched_ops.masked_argmax(score, eligible)
+    return idx
 
 
 # ---------------------------------------------------------------------------
@@ -220,8 +221,8 @@ def export_select(q: EdgeQueue, now, busy_rem, dst_load,
     slacks = queue_slacks(q, now, busy_rem)
     feasible_dst = now + dst_load + q.t_edge <= q.deadline
     cand = q.valid & feasible_dst & (slacks < slack_thresh)
-    idx = jnp.argmin(jnp.where(cand, slacks, POS))
-    return jnp.where(cand.any(), idx, -1)
+    idx, _ = sched_ops.masked_argmin(slacks, cand)
+    return idx
 
 
 # ---------------------------------------------------------------------------
@@ -303,6 +304,87 @@ def adapt_on_skip(st: AdaptState, model, now, static, t_cp) -> AdaptState:
     return AdaptState(st.buf, st.count, st.idx,
                       st.current.at[model].set(new_cur),
                       st.cooling_start.at[model].set(new_cs))
+
+
+def adapt_feed_batch(st: AdaptState, model_ids, sent, obs, obs_val, skip,
+                     now, static, eps, t_cp, *, with_obs: bool = True,
+                     max_obs: int | None = None) -> AdaptState:
+    """One batched estimator update for a whole tick's worth of events.
+
+    Replaces the per-queue-slot ``fori_loop`` of
+    ``on_sent``/``observe``/``on_skip`` calls with masked array updates:
+    per model, every ``sent`` cooling reset applies, then all ``obs``
+    observations land in slot order (their values must be equal within
+    one call — true in the fleet tick, where a model's actual duration is
+    a function of (model, tick) only), then at most one ``skip``
+    (same-instant repeated skips are idempotent).  The only divergence
+    from the sequential slot loop is a model that both dispatches *and*
+    skips in one tick: the loop interleaves by slot, here sends precede
+    skips — the same batched-per-tick simplification
+    :mod:`repro.sim.fleet_jax` already documents for DEMS-A.
+
+    With all masks False the state is returned bit-identical, so callers
+    gate adaptivity by AND-ing a runtime policy flag into the masks.
+    ``with_obs=False`` skips building the observation tensors for
+    skip-only call sites (rejected cloud offers).  ``max_obs`` promises
+    that no model observes more than that many times in this call (e.g.
+    the finite pool depth — one tick cannot dispatch more tasks than it
+    has free slots); it bounds the ``[M, j, w]`` replay tensors and the
+    ratchet, the hottest per-tick allocation.
+    """
+    m, w = st.buf.shape
+    k = model_ids.shape[0]
+    cnt = jax.ops.segment_sum(obs.astype(jnp.int32), model_ids,
+                              num_segments=m)                     # i32[M]
+    cs = jnp.where(
+        jax.ops.segment_sum(sent.astype(jnp.int32), model_ids,
+                            num_segments=m) > 0,
+        -1.0, st.cooling_start)
+    cur, buf, count, idx = st.current, st.buf, st.count, st.idx
+    if with_obs:
+        jmax = k if max_obs is None else min(k, max_obs)
+        v = jax.ops.segment_max(jnp.where(obs, obs_val, NEG), model_ids,
+                                num_segments=m)                   # f32[M]
+        j = jnp.arange(jmax)[None, :]                             # [1,J]
+        fill = jnp.clip(w - count, 0, None)[:, None]              # [M,1]
+        # the j-th observation of model m writes slot: fill positions
+        # count..w-1 first, then wrap circularly from idx (the exact
+        # write path of adapt_observe, iterated)
+        pos = jnp.where(j < fill, count[:, None] + j,
+                        (idx[:, None] + j - fill) % w)            # [M,J]
+        active = j < cnt[:, None]
+        onehot = active[:, :, None] & (
+            pos[:, :, None] == jnp.arange(w)[None, None, :])      # [M,J,w]
+        written_upto = jnp.cumsum(onehot, axis=1) > 0
+        buf = jnp.where(written_upto[:, -1, :], v[:, None], buf)
+        # the current-estimate ratchet is path-dependent (an average only
+        # sticks when it clears cur+eps), so replay the per-observation
+        # averages — but as J tiny [M]-wide steps, not K full-state scans
+        sums = st.buf.sum(-1)[:, None] + jnp.where(
+            written_upto, v[:, None, None] - st.buf[:, None, :],
+            0.0).sum(-1)                                          # [M,J]
+        nobs = jnp.minimum(count[:, None] + 1 + jnp.arange(jmax)[None, :],
+                           w)
+        avgs = sums / nobs
+
+        def ratchet(jj, c):
+            a = avgs[:, jj]
+            return jnp.where((jj < cnt) & (a - c > eps), a, c)
+
+        cur = jax.lax.fori_loop(0, jmax, ratchet, cur)
+        count = jnp.minimum(st.count + cnt, w)
+        idx = (st.idx + (cnt - jnp.clip(w - st.count, 0, cnt))) % w
+    any_skip = jax.ops.segment_sum(skip.astype(jnp.int32), model_ids,
+                                   num_segments=m) > 0
+    inflated = cur > static
+    expired = (cs >= 0) & (now - cs >= t_cp)
+    new_cur = jnp.where(any_skip & inflated & expired, static, cur)
+    new_cs = jnp.where(
+        any_skip,
+        jnp.where(~inflated, cs,
+                  jnp.where(expired, -1.0, jnp.where(cs < 0, now, cs))),
+        cs)
+    return AdaptState(buf, count, idx, new_cur, new_cs)
 
 
 # ---------------------------------------------------------------------------

@@ -87,6 +87,24 @@ def ref_moe_gemm(x_sorted: jax.Array, w: jax.Array,
     return jnp.einsum("td,tdf->tf", x_sorted, w[expert_of])
 
 
+def ref_masked_argext(scores: jax.Array, mask: jax.Array, *,
+                      is_max: bool) -> tuple[jax.Array, jax.Array]:
+    """Masked first-occurrence arg-extremum over the last axis.
+
+    The scheduler-selection contract of ``kernels.sched_ops``: disabled
+    entries are filled with ∓1e30, ``idx`` is the first index attaining
+    the extremum (``jnp.argmax``/``argmin`` tie-breaking), and a row with
+    no enabled entry yields ``idx == -1`` with the fill value.
+    """
+    fill = -1e30 if is_max else 1e30
+    v = jnp.where(mask, scores.astype(jnp.float32), fill)
+    idx = (jnp.argmax(v, -1) if is_max else jnp.argmin(v, -1)).astype(
+        jnp.int32)
+    some = jnp.broadcast_to(mask, v.shape).any(-1)
+    val = v.max(-1) if is_max else v.min(-1)
+    return jnp.where(some, idx, -1), val
+
+
 def ref_rmsnorm(x: jax.Array, scale: jax.Array,
                 eps: float = 1e-5) -> jax.Array:
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,

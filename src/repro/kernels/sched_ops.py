@@ -1,0 +1,111 @@
+"""Masked segmented argmin/argmax scoring as a Pallas TPU kernel.
+
+Every selection the fleet scheduler makes per tick is the same reduction:
+score a masked set of candidates and take the first extremum — stealing a
+cloud-queued task (§5.3), picking a peer-offload export victim, choosing
+the overloaded source edge and least-loaded destination edge.  On TPU the
+whole fleet's selections run as one VPU pass over a ``(batch, N)`` score
+tile; each row yields the first-occurrence arg-extremum and its value.
+
+Semantics (shared bit-for-bit with :func:`repro.kernels.ref.
+ref_masked_argext`, the jnp oracle):
+
+* masked-out entries count as ``NEG`` (max mode) / ``POS`` (min mode);
+* ``idx`` is the *first* index attaining the extremum (ties break low,
+  matching ``jnp.argmax``/``jnp.argmin`` on the filled array);
+* a row with no enabled entry returns ``idx == -1`` and the fill value.
+
+On CPU (this container) the public wrappers trace the jnp reference —
+identical semantics, no interpret-mode overhead in the per-tick hot path;
+``interpret=True`` forces the actual kernel body through the Pallas
+interpreter for equivalence tests.  On TPU they compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+NEG = -1e30
+POS = 1e30
+
+DEFAULT_BLOCK_B = 8
+_LANES = 128
+
+
+def _argext_kernel(s_ref, m_ref, idx_ref, val_ref, *, is_max: bool,
+                   n: int):
+    """One (block_b, Np) tile → per-row (first arg-extremum, value)."""
+    fill = NEG if is_max else POS
+    s = s_ref[...].astype(jnp.float32)                       # (bb, Np)
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    enabled = m_ref[...] & (cols < n)                        # lane padding
+    v = jnp.where(enabled, s, fill)
+    best = v.max(axis=-1) if is_max else v.min(axis=-1)
+    hit = v == best[:, None]
+    first = jnp.where(hit, cols, n).min(axis=-1)
+    idx_ref[...] = jnp.where(enabled.any(axis=-1), first, -1)
+    val_ref[...] = best
+
+
+def _pallas_argext(scores: jax.Array, mask: jax.Array, *, is_max: bool,
+                   block_b: int, interpret: bool):
+    b, n = scores.shape
+    block_b = min(block_b, b)
+    pad_b = (-b) % block_b
+    pad_n = (-n) % _LANES
+    s = jnp.pad(scores.astype(jnp.float32), ((0, pad_b), (0, pad_n)))
+    m = jnp.pad(mask, ((0, pad_b), (0, pad_n)))
+    np_ = n + pad_n
+    grid = (s.shape[0] // block_b,)
+    idx, val = pl.pallas_call(
+        functools.partial(_argext_kernel, is_max=is_max, n=n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, np_), lambda i: (i, 0)),
+                  pl.BlockSpec((block_b, np_), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_b,), lambda i: (i,)),
+                   pl.BlockSpec((block_b,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((s.shape[0],), jnp.int32),
+                   jax.ShapeDtypeStruct((s.shape[0],), jnp.float32)],
+        interpret=interpret,
+    )(s, m)
+    return idx[:b], val[:b]
+
+
+def masked_argext(scores: jax.Array, mask: jax.Array, *, is_max: bool,
+                  block_b: int = DEFAULT_BLOCK_B,
+                  interpret: Optional[bool] = None):
+    """``scores, mask: (..., N)`` → ``(idx (...,), val (...,))``.
+
+    ``interpret=None`` resolves the backend once: the Pallas kernel on
+    TPU, the jnp reference on anything else (so vmapped/scanned hot-path
+    callers never hit the Python interpreter).  ``interpret=True`` runs
+    the kernel body through the Pallas interpreter regardless — the
+    kernel-vs-reference test path.
+    """
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            return ref.ref_masked_argext(scores, mask, is_max=is_max)
+        interpret = False
+    lead = scores.shape[:-1]
+    n = scores.shape[-1]
+    s2 = scores.reshape(-1, n)
+    m2 = jnp.broadcast_to(mask, scores.shape).reshape(-1, n)
+    idx, val = _pallas_argext(s2, m2, is_max=is_max, block_b=block_b,
+                              interpret=interpret)
+    return idx.reshape(lead), val.reshape(lead)
+
+
+def masked_argmax(scores, mask, **kw):
+    """First argmax over enabled entries; (-1, NEG) when none enabled."""
+    return masked_argext(scores, mask, is_max=True, **kw)
+
+
+def masked_argmin(scores, mask, **kw):
+    """First argmin over enabled entries; (-1, POS) when none enabled."""
+    return masked_argext(scores, mask, is_max=False, **kw)

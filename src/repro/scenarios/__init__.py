@@ -5,11 +5,13 @@ See :mod:`repro.scenarios.spec` for the vocabulary,
 :mod:`repro.scenarios.runner` for one-call execution on the discrete-event
 oracle or the JAX fleet simulator.
 """
-from repro.scenarios.compile import (OracleInputs, compile_fleet,
-                                     compile_fleet_batch, compile_oracle)
+from repro.scenarios.compile import (OracleInputs, SweepRun, compile_fleet,
+                                     compile_fleet_batch, compile_oracle,
+                                     compile_registry_batch)
 from repro.scenarios.registry import SCENARIOS, get, names
 from repro.scenarios.runner import (fleet_summary, fleet_summary_batch,
-                                    merge_results, run_scenario_fleet,
+                                    merge_results, run_registry_sweep,
+                                    run_scenario_fleet,
                                     run_scenario_fleet_batch,
                                     run_scenario_oracle)
 from repro.scenarios.spec import (BandwidthTrace, Burst, CloudOutage,
@@ -19,8 +21,9 @@ from repro.scenarios.spec import (BandwidthTrace, Burst, CloudOutage,
 __all__ = [
     "BandwidthTrace", "Burst", "CloudOutage", "DroneSpec", "EdgeSite",
     "OracleInputs",
-    "SCENARIOS", "ScenarioSpec", "ThetaTrapezium", "compile_fleet",
-    "compile_fleet_batch", "compile_oracle", "fleet_summary",
-    "fleet_summary_batch", "get", "merge_results", "names",
+    "SCENARIOS", "ScenarioSpec", "SweepRun", "ThetaTrapezium",
+    "compile_fleet", "compile_fleet_batch", "compile_oracle",
+    "compile_registry_batch", "fleet_summary", "fleet_summary_batch",
+    "get", "merge_results", "names", "run_registry_sweep",
     "run_scenario_fleet", "run_scenario_fleet_batch", "run_scenario_oracle",
 ]

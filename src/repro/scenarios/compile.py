@@ -29,7 +29,8 @@ from repro.scenarios.mobility import assignment
 from repro.scenarios.spec import ScenarioSpec
 from repro.sim import network
 from repro.sim.engine import Arrival
-from repro.sim.fleet_jax import FleetSignals, stack_signals
+from repro.sim.fleet_jax import (FleetBatch, FleetSignals,
+                                 build_fleet_batch, stack_signals)
 
 
 @dataclasses.dataclass
@@ -188,15 +189,15 @@ def compile_fleet(spec: ScenarioSpec, dt: float = 25.0) -> FleetSignals:
         (n_ticks, n_edges)).copy()
 
     rng = np.random.default_rng([spec.seed, 0x0dde])
-    order = np.stack([rng.permuted(np.tile(np.arange(m), (n_edges, 1)),
-                                   axis=1) for _ in range(n_ticks)]
-                     ).astype(np.int32)
+    order = rng.permuted(np.tile(np.arange(m), (n_ticks, n_edges, 1)),
+                         axis=2).astype(np.int32)
 
     return FleetSignals(
         times=jnp.asarray(times), theta=jnp.asarray(theta),
         bw=jnp.asarray(bw), arrive=jnp.asarray(arrive),
         order=jnp.asarray(order),
-        load_mult=jnp.asarray(load_mult), cloud_up=jnp.asarray(cloud_up))
+        load_mult=jnp.asarray(load_mult), cloud_up=jnp.asarray(cloud_up),
+        valid=jnp.ones((n_ticks, n_edges), bool))
 
 
 def compile_fleet_batch(spec: ScenarioSpec, seeds: tuple[int, ...],
@@ -206,3 +207,74 @@ def compile_fleet_batch(spec: ScenarioSpec, seeds: tuple[int, ...],
     whole seed sweep as a single compiled program."""
     return stack_signals([compile_fleet(sp, dt)
                           for sp in spec.reseeded(tuple(seeds))])
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepRun:
+    """Index row of one run in a registry batch.
+
+    ``lanes`` are the run's replica indices in the batch: a single lane
+    normally, one lane per edge under the edge-flattened lowering (see
+    :func:`compile_registry_batch`).
+    """
+
+    scenario: str
+    policy: str
+    seed: int
+    lanes: tuple[int, ...] = (0,)
+
+
+def _slice_edge(sig: FleetSignals, e: int) -> FleetSignals:
+    """One edge's signals as a 1-edge mission (edge axis kept, length 1)."""
+    return FleetSignals(
+        times=sig.times, theta=sig.theta[:, e:e + 1],
+        bw=sig.bw[:, e:e + 1], arrive=sig.arrive[:, e:e + 1],
+        order=sig.order[:, e:e + 1], load_mult=sig.load_mult[:, e:e + 1],
+        cloud_up=sig.cloud_up, valid=sig.valid[:, e:e + 1])
+
+
+def compile_registry_batch(scenarios=None, policies=("DEMS",),
+                           seeds=(0,), *, dt: float = 25.0,
+                           duration_ms: float | None = None
+                           ) -> tuple[FleetBatch, list[SweepRun]]:
+    """Lower scenarios × policies × seeds to **one** compiled program.
+
+    Every named registry scenario (all of them by default) is compiled
+    per seed, padded to the batch's max (ticks, edges, models) shape with
+    validity masks, and paired with its policy's runtime
+    :class:`~repro.sim.fleet_jax.PolicyParams` and its own
+    ``cloud_concurrency`` pool — so the whole sweep executes as a single
+    jitted :func:`repro.sim.fleet_jax.run_batch` call instead of one
+    compile per (scenario, policy).
+
+    When no requested policy is cooperative, edges never interact, so the
+    batch is **edge-flattened**: each (run, edge) becomes its own 1-edge
+    replica — zero edge padding, per-edge results bitwise identical to
+    the multi-edge vmap — and each :class:`SweepRun` row carries its
+    ``lanes``.  Returns the batch plus the run index, in replica order.
+    """
+    from repro.scenarios.registry import get, names
+    from repro.sim.fleet_jax import _resolve_policy
+
+    flatten = not any(_resolve_policy(p).cooperation for p in policies)
+    runs, rows, lane = [], [], 0
+    sig_cache: dict = {}    # policies share a (scenario, seed)'s signals
+    for sc in (tuple(scenarios) if scenarios else names()):
+        spec = get(sc) if duration_ms is None else get(
+            sc, duration_ms=duration_ms)
+        for pol in policies:
+            for seed in seeds:
+                sp = dataclasses.replace(spec, seed=seed)
+                if (sc, seed) not in sig_cache:
+                    sig = compile_fleet(sp, dt)
+                    sig_cache[sc, seed] = [
+                        _slice_edge(sig, e) for e in range(sp.n_edges)
+                    ] if flatten else [sig]
+                sigs = sig_cache[sc, seed]
+                runs.extend((sp.models, pol, s, sp.cloud_concurrency)
+                            for s in sigs)
+                lanes = tuple(range(lane, lane + len(sigs)))
+                lane += len(sigs)
+                rows.append(SweepRun(scenario=sc, policy=pol, seed=seed,
+                                     lanes=lanes))
+    return build_fleet_batch(runs, dt=dt), rows

@@ -82,24 +82,28 @@ def run_scenario_oracle(spec: ScenarioSpec, policy: str, *,
 
 def run_scenario_fleet(spec: ScenarioSpec, policy, *, dt: float = 25.0,
                        edge_frac: float = 0.62, cloud_frac: float = 0.80,
-                       mesh=None):
+                       mesh=None, record_trace: bool = False):
     """The scenario through the JAX fleet simulator (stacked EdgeState).
 
     The spec's ``cloud_concurrency`` becomes each edge's finite
     ``cloud_slots`` pool, matching the oracle path slot for slot.
+    ``record_trace`` returns a ``FleetResult`` carrying the per-tick
+    adapted-t̂ trace (Fig. 12-style adaptation dynamics).
     """
     from repro.sim.fleet_jax import run_fleet
 
     signals = compile_fleet(spec, dt)
     return run_fleet(spec.models, policy, signals, dt=dt,
                      edge_frac=edge_frac, cloud_frac=cloud_frac,
-                     cloud_slots=spec.cloud_concurrency, mesh=mesh)
+                     cloud_slots=spec.cloud_concurrency, mesh=mesh,
+                     record_trace=record_trace)
 
 
 def run_scenario_fleet_batch(spec: ScenarioSpec, policy,
                              seeds: tuple[int, ...], *, dt: float = 25.0,
                              edge_frac: float = 0.62,
-                             cloud_frac: float = 0.80, mesh=None):
+                             cloud_frac: float = 0.80, mesh=None,
+                             record_trace: bool = False):
     """One scenario × many seeds as one compiled fleet program.
 
     Returns a stacked final EdgeState with leading ``[R, E]`` axes;
@@ -110,7 +114,50 @@ def run_scenario_fleet_batch(spec: ScenarioSpec, policy,
     signals = compile_fleet_batch(spec, tuple(seeds), dt)
     return run_fleet_batch(spec.models, policy, signals, dt=dt,
                            edge_frac=edge_frac, cloud_frac=cloud_frac,
-                           cloud_slots=spec.cloud_concurrency, mesh=mesh)
+                           cloud_slots=spec.cloud_concurrency, mesh=mesh,
+                           record_trace=record_trace)
+
+
+def run_registry_sweep(scenarios=None, policies=("DEMS",), seeds=(0,), *,
+                       dt: float = 25.0, duration_ms: float | None = None,
+                       mesh=None) -> list[dict]:
+    """Scenarios × policies × seeds as **one** compiled, padded program.
+
+    The whole sweep — by default the entire registry — is lowered through
+    :func:`repro.scenarios.compile.compile_registry_batch` and executed
+    with a single ``jit`` (:func:`repro.sim.fleet_jax.run_batch`); with a
+    2-D ``mesh`` the (replica, edge) grid shards across devices, and
+    ``mesh="auto"`` fans the replica axis over every available device
+    (the largest device count dividing it).  Returns one summary dict per
+    run, tagged with its (scenario, policy, seed).
+    """
+    from repro.scenarios.compile import compile_registry_batch
+    from repro.sim.fleet_jax import run_batch
+
+    batch, rows = compile_registry_batch(scenarios, policies, seeds,
+                                         dt=dt, duration_ms=duration_ms)
+    if isinstance(mesh, str) and mesh == "auto":
+        r = int(batch.signals.arrive.shape[0])
+        n = max(d for d in range(1, jax.device_count() + 1) if r % d == 0)
+        mesh = jax.make_mesh((n,), ("replica",)) if n > 1 else None
+    # one host transfer up front: the per-row lane slicing below would
+    # otherwise issue a device gather per leaf per run (slow when the
+    # replica axis is sharded)
+    final = jax.device_get(run_batch(batch, dt=dt, mesh=mesh))
+    out = []
+    for row in rows:
+        # a run's lanes are its replicas: one for a padded multi-edge
+        # batch, one per edge under the edge-flattened lowering — re-stack
+        # them into the run's [E, …] state so fleet_summary reduces the
+        # per-edge values exactly as the run_fleet path would
+        parts = [jax.tree.map(lambda a, i=i: a[i], final)
+                 for i in row.lanes]
+        state = parts[0] if len(parts) == 1 else jax.tree.map(
+            lambda *xs: np.concatenate([np.asarray(x) for x in xs]),
+            *parts)
+        out.append(dict(scenario=row.scenario, policy=row.policy,
+                        seed=row.seed, **fleet_summary(state)))
+    return out
 
 
 def fleet_summary(final) -> dict[str, float]:

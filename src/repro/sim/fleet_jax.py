@@ -20,15 +20,22 @@ Modeling simplifications vs the event-driven oracle (documented per §Design):
   the oracle's per-edge ``cloud_concurrency``).  A matured task only
   dispatches when a slot is free; while the pool is saturated it stays
   parked on the trigger-time queue (still stealable) and the estimated
-  queue-wait ``max(0, min(busy_until) − now)`` is folded into the t̂ used
-  by routing, migration, stealing triggers and GEMS feasibility.  With a
-  large pool the wait is identically zero and the elastic model is
-  recovered exactly;
+  queue-wait — the *depth-aware* k-th order statistic of the slot
+  busy-until times, k being the task's cloud-queue position — is folded
+  into the t̂ used by routing, migration, stealing triggers and GEMS
+  feasibility.  With a large pool the wait is identically zero and the
+  elastic model is recovered exactly (bit-identical to the old
+  ``min(busy_until) − now`` estimate, which is the k=0 special case);
 * tasks matured in the same tick dispatch in queue-slot order (the oracle
   pops in trigger order) — indistinguishable in the elastic limit, an
   approximation under saturation;
-* DEMS-A observations are batched per tick (the oracle interleaves
-  estimator updates in event order within one instant).
+* estimator/offer events are batched per tick against the tick's
+  pre-state (the oracle interleaves them in event order within one
+  instant): DEMS-A observations apply as one masked window update
+  (:func:`repro.core.jax_sched.adapt_feed_batch`), and a tick's cloud
+  offers (migration victims + the arrival) are admitted in one
+  vectorized pass that fills free queue slots in the exact order a
+  sequential push loop would.
 
 Supported policy flags: EDF-E+C routing, DEM migration, DEMS work stealing
 with trigger-time cloud queue and steal-only parking, DEMS-A sliding-window
@@ -36,10 +43,15 @@ cloud-latency adaptation (§5.4), GEMS window rescheduling.
 ``tests/test_fleet_jax.py`` checks single-edge agreement with the
 discrete-event engine.
 
-Sweeps (seeds × scenario variants) run as *one* compiled program through
-:func:`run_fleet_batch`: stack per-run :class:`FleetSignals` with
-:func:`stack_signals` and the whole sweep becomes a single
-``vmap``-over-replicas jitted scan, optionally sharded over a mesh.
+Policy flags are **runtime values** (:class:`PolicyParams`): the compiled
+tick program is policy-generic, so a whole scenario × policy × seed sweep
+shares one executable.  Sweeps run as *one* compiled program through
+:func:`run_fleet_batch` (same-shape replicas, :func:`stack_signals`) or —
+across *heterogeneous* scenarios — through :func:`run_batch` on a
+:func:`build_fleet_batch` batch, whose :func:`pad_signals` masks every
+replica to the max (ticks, edges, models) shape with per-(tick, edge)
+validity; padded cells are exact no-ops.  With a 2-D device mesh the
+batch shards over a (replica, edge) grid.
 """
 from __future__ import annotations
 
@@ -54,6 +66,7 @@ import numpy as np
 from repro.core import jax_sched as js
 from repro.core import schedulers as _sched
 from repro.core.task import ModelProfile
+from repro.kernels import sched_ops
 from repro.sim import network
 
 EDGE_CAP = 32
@@ -74,9 +87,36 @@ _FLEET_POLICIES = {
 }
 
 
+class PolicyParams(NamedTuple):
+    """Policy flags as traced scalars (leading replica axis in batches).
+
+    Making the flags runtime values keeps the compiled tick program
+    policy-generic: one executable serves every policy (and, stacked, a
+    whole registry × policy × seed sweep), at the price of computing each
+    feature's masked no-op when its flag is off.
+    """
+
+    migration: jax.Array        # bool[]
+    stealing: jax.Array         # bool[]
+    gems: jax.Array             # bool[]
+    use_cloud: jax.Array        # bool[]
+    adaptive: jax.Array         # bool[]
+    cooperation: jax.Array      # bool[]
+    cloud_margin: jax.Array     # f32[]
+    adapt_eps: jax.Array        # f32[]
+    adapt_cooling_ms: jax.Array  # f32[]
+    coop_slack_ms: jax.Array    # f32[]
+    coop_transfer_cap: jax.Array  # i32[] (≤ the program's static rounds)
+
+
 @dataclasses.dataclass(frozen=True)
 class FleetPolicy:
-    """Trace-time policy flags (subset of core.schedulers.Policy)."""
+    """Policy flags (subset of core.schedulers.Policy).
+
+    Lowered to runtime :class:`PolicyParams` by :meth:`params`; only
+    ``adapt_window`` (a buffer *shape*) and ``coop_max_transfers`` (a
+    loop bound) stay trace-time static.
+    """
 
     migration: bool = False
     stealing: bool = False
@@ -109,6 +149,22 @@ class FleetPolicy:
         base = cls(**_FLEET_POLICIES[base_name])
         return dataclasses.replace(base, cooperation=True) if coop else base
 
+    def params(self) -> PolicyParams:
+        f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+        return PolicyParams(
+            migration=jnp.asarray(self.migration),
+            stealing=jnp.asarray(self.stealing),
+            gems=jnp.asarray(self.gems),
+            use_cloud=jnp.asarray(self.use_cloud),
+            adaptive=jnp.asarray(self.adaptive),
+            cooperation=jnp.asarray(self.cooperation),
+            cloud_margin=f32(self.cloud_margin),
+            adapt_eps=f32(self.adapt_eps),
+            adapt_cooling_ms=f32(self.adapt_cooling_ms),
+            coop_slack_ms=f32(self.coop_slack_ms),
+            coop_transfer_cap=jnp.asarray(self.coop_max_transfers,
+                                          jnp.int32))
+
 
 class Profiles(NamedTuple):
     """Array-of-struct model table (M models)."""
@@ -126,9 +182,15 @@ class Profiles(NamedTuple):
     qoe_window: jax.Array
 
     @classmethod
-    def build(cls, models: list[ModelProfile]) -> "Profiles":
+    def build(cls, models: list[ModelProfile],
+              pad_to: Optional[int] = None) -> "Profiles":
+        """Build the table; ``pad_to`` appends inert models for padded
+        cross-scenario batching.  Pad values are chosen so no reduction
+        over the model axis can see them: huge latencies keep
+        ``min(t_edge)`` (the stealing gate) and window expiry untouched,
+        zero utilities keep every masked sum exact."""
         f = jnp.asarray
-        return cls(
+        prof = cls(
             t_edge=f([m.t_edge for m in models], jnp.float32),
             t_cloud=f([m.t_cloud for m in models], jnp.float32),
             deadline=f([m.deadline for m in models], jnp.float32),
@@ -141,6 +203,15 @@ class Profiles(NamedTuple):
             qoe_beta=f([m.qoe_beta for m in models], jnp.float32),
             qoe_window=f([m.qoe_window for m in models], jnp.float32),
         )
+        if pad_to is None or pad_to <= len(models):
+            return prof
+        pad_val = dict(t_edge=js.POS, t_cloud=js.POS, deadline=js.POS,
+                       qoe_window=js.POS)
+        width = pad_to - len(models)
+        return cls(**{
+            name: jnp.concatenate([getattr(prof, name), jnp.full(
+                width, pad_val.get(name, 0.0), jnp.float32)])
+            for name in cls._fields})
 
 
 class EdgeState(NamedTuple):
@@ -151,8 +222,11 @@ class EdgeState(NamedTuple):
     cq_model: jax.Array        # i32[Qc] model ids of cloud-queued tasks
     busy_rem: jax.Array        # f32[] remaining edge execution time
     # finite FaaS pool: busy-until time per cloud slot (this edge's share
-    # of the bounded Lambda concurrency; slot free iff busy_until <= now)
+    # of the bounded Lambda concurrency; slot free iff busy_until <= now).
+    # In padded batches the array is oversized and slots ≥ n_slots are
+    # parked at +inf — never free, invisible to the k-th order statistic.
     cloud_busy_until: jax.Array  # f32[S]
+    n_slots: jax.Array         # i32[] this edge's real pool depth
     # cloud-queue entries that have waited for a saturated pool at least
     # once: when their slot finally frees they re-run the oracle's
     # dispatch-time JIT check (never set in the elastic limit)
@@ -178,15 +252,34 @@ class EdgeState(NamedTuple):
     adapt: js.AdaptState
 
 
+class FleetResult(NamedTuple):
+    """A fleet run with estimator telemetry (``record_trace=True``).
+
+    ``t_hat`` carries ``adapt.current`` out of the tick scan: the
+    scheduler's per-tick adapted cloud-latency estimate, enabling
+    Fig. 12-style adaptation-dynamics plots.
+    """
+
+    final: EdgeState
+    t_hat: jax.Array     # f32[T, E, M] ([R, T, E, M] from a batch)
+
+
 def init_state(prof: Profiles, adapt_window: int = 10,
-               cloud_slots: int = CLOUD_SLOTS) -> EdgeState:
+               cloud_slots: int = CLOUD_SLOTS,
+               total_slots: Optional[int] = None) -> EdgeState:
+    """Fresh per-edge state.  ``total_slots`` oversizes the busy-until
+    array for padded batches; slots beyond ``cloud_slots`` start (and
+    stay) at +inf so they are never free."""
     m = prof.t_edge.shape[0]
+    total = cloud_slots if total_slots is None else total_slots
     zi = jnp.zeros(m, jnp.int32)
     return EdgeState(
         eq=js.empty_edge_queue(EDGE_CAP), cq=js.empty_cloud_queue(CLOUD_CAP),
         cq_model=jnp.zeros(CLOUD_CAP, jnp.int32),
         busy_rem=jnp.zeros(()),
-        cloud_busy_until=jnp.zeros(cloud_slots),
+        cloud_busy_until=jnp.where(jnp.arange(total) < cloud_slots,
+                                   0.0, js.POS),
+        n_slots=jnp.asarray(cloud_slots, jnp.int32),
         cq_blocked=jnp.zeros(CLOUD_CAP, bool),
         seq=jnp.zeros((), jnp.int32),
         n_success=zi, n_miss=zi, n_drop=zi, n_stolen=zi, n_edge_exec=zi,
@@ -199,8 +292,17 @@ def init_state(prof: Profiles, adapt_window: int = 10,
 
 
 def _pool_wait(st: EdgeState, now) -> jax.Array:
-    """Estimated queue-wait until a cloud slot frees; 0 when one is free."""
-    return jnp.maximum(st.cloud_busy_until.min() - now, 0.0)
+    """Depth-aware queue-wait estimate for the next dispatch-bound task.
+
+    The task joining the cloud queue sits behind ``pending`` entries that
+    will each grab a slot, so it waits for the k-th slot to free — the
+    k-th order statistic of the busy-until times (ROADMAP item), not the
+    time until *one* slot frees.  With an empty queue this reduces to the
+    old ``min(busy_until) − now``; in the elastic limit (ample pool) it
+    is identically zero, bit-for-bit."""
+    pending = (st.cq.valid & ~st.cq.steal_only).sum()
+    k = jnp.clip(pending, 0, st.n_slots - 1)
+    return jnp.maximum(jnp.sort(st.cloud_busy_until)[k] - now, 0.0)
 
 
 def _free_slot_gate(busy_until: jax.Array, now,
@@ -237,13 +339,13 @@ def _occupy_slots(busy_until: jax.Array, now, dispatch: jax.Array,
     return jnp.where(fill, end_by_rank[frank], busy_until)
 
 
-def _t_cloud_cur(st: EdgeState, prof: Profiles, pol: FleetPolicy,
+def _t_cloud_cur(st: EdgeState, prof: Profiles, pp: PolicyParams,
                  now) -> jax.Array:
     """Scheduler's current cloud-latency estimate t̂ per model (§5.4),
-    plus the finite-pool queue-wait estimate (zero while slots are free),
-    so routing, migration, stealing triggers and GEMS feasibility all see
-    the congested cloud."""
-    base = st.adapt.current if pol.adaptive else prof.t_cloud
+    plus the depth-aware finite-pool queue-wait estimate (zero while the
+    pool has headroom), so routing, migration, stealing triggers and GEMS
+    feasibility all see the congested cloud."""
+    base = jnp.where(pp.adaptive, st.adapt.current, prof.t_cloud)
     return base + _pool_wait(st, now)
 
 
@@ -253,7 +355,10 @@ class FleetSignals(NamedTuple):
     Produced either by :func:`default_signals` (the paper's steady
     3-drones-per-edge workload) or by
     :func:`repro.scenarios.compile.compile_fleet` (mobility, handover,
-    bursts, churn, outages, heterogeneous edges).
+    bursts, churn, outages, heterogeneous edges).  ``valid`` marks the
+    live (tick, edge) cells: all-True for a plain run, the real-region
+    mask after :func:`pad_signals`; the tick function reverts every
+    invalid cell to its pre-tick state, making padding exact.
     """
 
     times: jax.Array       # f32[T]    tick start times [ms]
@@ -263,14 +368,15 @@ class FleetSignals(NamedTuple):
     order: jax.Array       # i32[T,E,M] randomized insertion order (§3.3)
     load_mult: jax.Array   # f32[T,E]  edge execution-time multiplier
     cloud_up: jax.Array    # bool[T]   cloud FaaS availability
+    valid: jax.Array       # bool[T,E] live cells (False ⇒ padded no-op)
 
 
 # ---------------------------------------------------------------------------
 # per-tick logic for one edge
 # ---------------------------------------------------------------------------
 
-def _resolve_cloud(st: EdgeState, prof: Profiles, now, theta, bw_pen,
-                   cloud_frac, pol: FleetPolicy, cloud_up) -> EdgeState:
+def _resolve_cloud(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
+                   theta, bw_pen, cloud_frac, cloud_up) -> EdgeState:
     """Dispatch matured cloud tasks into the finite FaaS pool.
 
     During a cloud outage (``cloud_up`` False) matured tasks stay parked
@@ -281,31 +387,30 @@ def _resolve_cloud(st: EdgeState, prof: Profiles, now, theta, bw_pen,
     a slot frees; a dispatched task occupies its slot for the whole
     actual duration ``cloud_frac·t̂ + θ(t) + bw-penalty``.
 
-    With ``pol.adaptive`` (DEMS-A, §5.4) dispatch adds the oracle's JIT
+    With ``pp.adaptive`` (DEMS-A, §5.4) dispatch adds the oracle's JIT
     check against the *adapted* estimate t̂: tasks it predicts to miss are
     skipped (dropped, feeding the cooling timer) instead of dispatched —
     without consuming a slot; dispatched tasks fire ``on_sent`` and
-    ``observe`` their actual duration.
+    ``observe`` their actual duration, applied as one batched masked
+    window update (:func:`repro.core.jax_sched.adapt_feed_batch`).
     """
     mature = st.cq.valid & (st.cq.trigger <= now) & cloud_up
     run = mature & ~st.cq.steal_only
-    if pol.adaptive:
-        est = st.adapt.current[st.cq_model]
-        fits = now + est <= st.cq.deadline
-    else:
-        # the oracle JIT-checks every pop against the static estimate; in
-        # the fleet model tasks normally mature within one tick of their
-        # feasibility-checked trigger, so the check is redundant — except
-        # for tasks that sat out a saturated pool, which re-run it here
-        # (never taken in the elastic limit).  Outage-parked tasks keep
-        # the documented modeling simplification of settling via the
-        # dispatch-time deadline check instead (the oracle JIT-drops them
-        # at recovery without consuming a slot); under a small pool the
-        # difference is bounded to one pool-depth of doomed dispatches,
-        # since everything behind them fails the slot gate, turns
-        # cq_blocked, and does re-run this check.
-        fits = ~st.cq_blocked | (now + prof.t_cloud[st.cq_model]
-                                 <= st.cq.deadline)
+    fits_a = now + st.adapt.current[st.cq_model] <= st.cq.deadline
+    # the oracle JIT-checks every pop against the static estimate; in
+    # the fleet model tasks normally mature within one tick of their
+    # feasibility-checked trigger, so the check is redundant — except
+    # for tasks that sat out a saturated pool, which re-run it here
+    # (never taken in the elastic limit).  Outage-parked tasks keep
+    # the documented modeling simplification of settling via the
+    # dispatch-time deadline check instead (the oracle JIT-drops them
+    # at recovery without consuming a slot); under a small pool the
+    # difference is bounded to one pool-depth of doomed dispatches,
+    # since everything behind them fails the slot gate, turns
+    # cq_blocked, and does re-run this check.
+    fits_s = ~st.cq_blocked | (now + prof.t_cloud[st.cq_model]
+                               <= st.cq.deadline)
+    fits = jnp.where(pp.adaptive, fits_a, fits_s)
     avail = _free_slot_gate(st.cloud_busy_until, now, run & fits)
     dispatch = run & fits & avail
     skipped = run & ~fits & avail     # popped + JIT-dropped, slot stays free
@@ -314,7 +419,8 @@ def _resolve_cloud(st: EdgeState, prof: Profiles, now, theta, bw_pen,
     util = jnp.where(success, prof.gamma_c[st.cq_model],
                      jnp.where(dispatch, -prof.cost_c[st.cq_model],
                                0.0)).sum()
-    add = functools.partial(jax.ops.segment_sum, num_segments=prof.t_edge.shape[0])
+    add = functools.partial(jax.ops.segment_sum,
+                            num_segments=prof.t_edge.shape[0])
     n_success = st.n_success + add(success.astype(jnp.int32), st.cq_model)
     n_miss = st.n_miss + add((dispatch & ~success).astype(jnp.int32),
                              st.cq_model)
@@ -329,24 +435,16 @@ def _resolve_cloud(st: EdgeState, prof: Profiles, now, theta, bw_pen,
                      cq_blocked=(st.cq_blocked | (run & ~avail)) & new_valid,
                      n_success=n_success, n_miss=n_miss, n_drop=n_drop,
                      qos_utility=st.qos_utility + util)
-    if pol.adaptive:
-        def feed(i, ad):
-            m = st.cq_model[i]
-            sent = js.adapt_observe(js.adapt_on_sent(ad, m), m, act[i],
-                                    pol.adapt_eps)
-            ad = js.adapt_select(dispatch[i], sent, ad)
-            skip = js.adapt_on_skip(ad, m, now, prof.t_cloud,
-                                    pol.adapt_cooling_ms)
-            return js.adapt_select(skipped[i], skip, ad)
-        st = st._replace(adapt=jax.lax.fori_loop(0, CLOUD_CAP, feed,
-                                                 st.adapt))
-    if pol.gems:
-        st = _gems_bulk(st, prof, now, success, dispatch | skipped | dropped,
-                        st.cq_model)
-    return st
+    sent = dispatch & pp.adaptive
+    st = st._replace(adapt=js.adapt_feed_batch(
+        st.adapt, st.cq_model, sent, sent, act, skipped & pp.adaptive,
+        now, prof.t_cloud, pp.adapt_eps, pp.adapt_cooling_ms,
+        max_obs=st.cloud_busy_until.shape[0]))
+    return _gems_bulk(st, prof, success & pp.gems,
+                      (dispatch | skipped | dropped) & pp.gems, st.cq_model)
 
 
-def _gems_bulk(st: EdgeState, prof: Profiles, now, success_mask, done_mask,
+def _gems_bulk(st: EdgeState, prof: Profiles, success_mask, done_mask,
                model_ids) -> EdgeState:
     """Window counters for a batch of task completions/drops."""
     m = prof.t_edge.shape[0]
@@ -356,8 +454,8 @@ def _gems_bulk(st: EdgeState, prof: Profiles, now, success_mask, done_mask,
     return st._replace(lam=lam, lam_hat=lam_hat)
 
 
-def _gems_act(st: EdgeState, prof: Profiles, now, theta, bw_pen, cloud_frac,
-              pol: FleetPolicy) -> EdgeState:
+def _gems_act(st: EdgeState, prof: Profiles, pp: PolicyParams, now, theta,
+              bw_pen, cloud_frac) -> EdgeState:
     """Alg. 1: reschedule lagging models, close expired windows.
 
     Rescheduled tasks go through the same finite pool as the dispatch
@@ -379,30 +477,24 @@ def _gems_act(st: EdgeState, prof: Profiles, now, theta, bw_pen, cloud_frac,
 
     # move pending edge tasks of lagging models to the cloud (trigger=now,
     # resolved immediately into the free slots of the finite pool).
-    t_hat = _t_cloud_cur(st, prof, pol, now)
+    t_hat = _t_cloud_cur(st, prof, pp, now)
     feas = now + t_hat[st.eq.model] <= st.eq.deadline
     want = (st.eq.valid & lagging[st.eq.model]
-            & (prof.gamma_c[st.eq.model] > 0) & feas)
+            & (prof.gamma_c[st.eq.model] > 0) & feas) & pp.gems
     move = want & _free_slot_gate(st.cloud_busy_until, now, want)
     # slots are *held* for the actual duration either way; only the
     # outcome model differs between GEMS (estimate) and GEMS-A (actual)
     hold = cloud_frac * prof.t_cloud[st.eq.model] + theta + bw_pen
-    act = prof.t_cloud[st.eq.model]          # deterministic estimate
-    if pol.adaptive:
-        act = hold
+    act = jnp.where(pp.adaptive, hold, prof.t_cloud[st.eq.model])
     success = move & (now + act <= st.eq.deadline)
     add = functools.partial(jax.ops.segment_sum, num_segments=m)
     util = jnp.where(success, prof.gamma_c[st.eq.model],
                      jnp.where(move, -prof.cost_c[st.eq.model], 0.0)).sum()
-    if pol.adaptive:
-        eq_model = st.eq.model
-        def feed(i, ad):
-            mi = eq_model[i]
-            sent = js.adapt_observe(js.adapt_on_sent(ad, mi), mi, act[i],
-                                    pol.adapt_eps)
-            return js.adapt_select(move[i], sent, ad)
-        st = st._replace(adapt=jax.lax.fori_loop(0, EDGE_CAP, feed,
-                                                 st.adapt))
+    fed = move & pp.adaptive
+    st = st._replace(adapt=js.adapt_feed_batch(
+        st.adapt, st.eq.model, fed, fed, act,
+        jnp.zeros_like(fed), now, prof.t_cloud, pp.adapt_eps,
+        pp.adapt_cooling_ms, max_obs=st.cloud_busy_until.shape[0]))
     st = st._replace(
         eq=js.edge_remove(st.eq, move),
         cloud_busy_until=_occupy_slots(st.cloud_busy_until, now, move,
@@ -411,10 +503,10 @@ def _gems_act(st: EdgeState, prof: Profiles, now, theta, bw_pen, cloud_frac,
         n_miss=st.n_miss + add((move & ~success).astype(jnp.int32),
                                st.eq.model),
         qos_utility=st.qos_utility + util)
-    st = _gems_bulk(st, prof, now, success, move, st.eq.model)
+    st = _gems_bulk(st, prof, success, move, st.eq.model)
 
     # tumbling-window close (Eqn 2)
-    expired = now > st.win_end
+    expired = (now > st.win_end) & pp.gems
     met = expired & (st.lam > 0) & (st.lam_hat / jnp.maximum(st.lam, 1)
                                     >= prof.qoe_alpha)
     qoe = jnp.where(met, prof.qoe_beta, 0.0).sum()
@@ -426,108 +518,133 @@ def _gems_act(st: EdgeState, prof: Profiles, now, theta, bw_pen, cloud_frac,
         windows_met=st.windows_met + met.astype(jnp.int32))
 
 
-def _offer_cloud(st: EdgeState, prof: Profiles, now, model, deadline, te,
-                 pol: FleetPolicy, enable) -> tuple[EdgeState, jax.Array]:
-    """Cloud admission (Policy.offer_cloud) — returns (state, accepted).
+def _offer_cloud_many(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
+                      models, deadlines, t_edges, enable,
+                      t_cur=None) -> tuple[EdgeState, jax.Array]:
+    """Vectorized cloud admission (Policy.offer_cloud) for a task batch.
 
-    ``te`` is the task's *effective* edge latency on this edge (speed
-    factor folded in), kept on the cloud queue for steal decisions.
+    ``enable`` marks offered candidates in slot order; accepted ones fill
+    the cloud queue's free slots in ascending order — exactly the slots a
+    sequential ``cloud_push`` loop would pick.  Every policy check reads
+    the tick's pre-offer state (batched-per-tick: an earlier offer in the
+    same batch does not shift a later one's queue-depth estimate — the
+    module-header simplification).  ``t_edges`` are the tasks' *effective*
+    edge latencies (speed factor folded in), kept on the cloud queue for
+    steal decisions.
 
     Feasibility and trigger times use the DEMS-A-adapted t̂ when the
     policy is adaptive — plus the finite-pool queue-wait estimate, so a
     congested cloud pulls stealing triggers earlier and fails the
     feasibility gate sooner; a policy-level rejection then counts as a
     *skip* for the estimator's cooling logic (oracle ``_offer_cloud``).
+    Returns ``(state, pushed)``; ``t_cur`` lets the caller reuse an
+    already-computed :func:`_t_cloud_cur` vector for the same state.
     """
-    if not pol.use_cloud:
-        return st, jnp.asarray(False)
-    t_hat = _t_cloud_cur(st, prof, pol, now)[model]
-    feasible = now + t_hat <= deadline
-    negative = prof.gamma_c[model] <= 0
-    if pol.stealing:
-        trigger = jnp.where(negative, deadline - te,
-                            jnp.maximum(now, deadline - t_hat
-                                        - pol.cloud_margin))
-        ok_neg = trigger >= now
-        accept = enable & feasible & jnp.where(negative, ok_neg, True)
-        steal_only = negative
-    else:
-        trigger = now
-        accept = enable & feasible & ~negative
-        steal_only = jnp.asarray(False)
-    cq, pushed = js.cloud_push(st.cq, trigger, te, deadline,
-                               steal_only, prof.steal_rank[model],
-                               enable=accept)
-    slot = jnp.argmax(~st.cq.valid)
-    cq_model = jnp.where(pushed, st.cq_model.at[slot].set(model),
-                         st.cq_model)
-    cq_blocked = jnp.where(pushed, st.cq_blocked.at[slot].set(False),
-                           st.cq_blocked)
-    st = st._replace(cq=cq, cq_model=cq_model, cq_blocked=cq_blocked)
-    if pol.adaptive:
-        skip = js.adapt_on_skip(st.adapt, model, now, prof.t_cloud,
-                                pol.adapt_cooling_ms)
-        st = st._replace(adapt=js.adapt_select(enable & ~accept, skip,
-                                               st.adapt))
+    if t_cur is None:
+        t_cur = _t_cloud_cur(st, prof, pp, now)
+    t_hat = t_cur[models]
+    feasible = now + t_hat <= deadlines
+    negative = prof.gamma_c[models] <= 0
+    trig_steal = jnp.where(negative, deadlines - t_edges,
+                           jnp.maximum(now, deadlines - t_hat
+                                       - pp.cloud_margin))
+    accept_steal = enable & feasible & jnp.where(negative,
+                                                 trig_steal >= now, True)
+    accept_plain = enable & feasible & ~negative
+    accept = pp.use_cloud & jnp.where(pp.stealing, accept_steal,
+                                      accept_plain)
+    trigger = jnp.where(pp.stealing, trig_steal, now)
+    steal_only = jnp.where(pp.stealing, negative, False)
+
+    free = ~st.cq.valid
+    qc = free.shape[0]
+    ai = accept.astype(jnp.int32)
+    arank = jnp.cumsum(ai) - ai
+    pushed = accept & (arank < free.sum())
+    tgt = jnp.where(pushed, arank, qc)
+
+    def by_rank(vals):
+        return jnp.zeros(qc, vals.dtype).at[tgt].set(vals, mode="drop")
+
+    fi = free.astype(jnp.int32)
+    frank = jnp.cumsum(fi) - fi
+    fill = free & (frank < pushed.sum())
+
+    def put(old, vals):
+        return jnp.where(fill, by_rank(vals)[frank], old)
+
+    st = st._replace(
+        cq=js.CloudQueue(
+            valid=st.cq.valid | fill,
+            trigger=put(st.cq.trigger, trigger),
+            t_edge=put(st.cq.t_edge, t_edges),
+            deadline=put(st.cq.deadline, deadlines),
+            steal_only=put(st.cq.steal_only, steal_only),
+            rank=put(st.cq.rank, prof.steal_rank[models])),
+        cq_model=put(st.cq_model, models),
+        cq_blocked=st.cq_blocked & ~fill)
+    skip = enable & ~accept & pp.use_cloud & pp.adaptive
+    st = st._replace(adapt=js.adapt_feed_batch(
+        st.adapt, models, jnp.zeros_like(skip), jnp.zeros_like(skip),
+        jnp.zeros_like(t_hat), skip, now, prof.t_cloud, pp.adapt_eps,
+        pp.adapt_cooling_ms, with_obs=False))
     return st, pushed
 
 
-def _route_arrival(st: EdgeState, prof: Profiles, now, model,
-                   pol: FleetPolicy, arrive, load_mult) -> EdgeState:
+def _route_arrival(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
+                   model, arrive, load_mult) -> EdgeState:
     """Task-scheduler routing for one arriving task (§5.1–5.2).
 
     ``load_mult`` is the edge's speed factor: the effective edge latency
     ``load_mult·t_edge`` is stored on the queues, so feasibility, JIT
     checks, stealing and execution all see the heterogeneous speed —
     matching the oracle compiler, which folds it into the model table.
+
+    Migration victims and the redirected arrival go to the cloud through
+    *one* vectorized :func:`_offer_cloud_many` call (victims in queue-slot
+    order, then the arrival — the same admission order as the old
+    sequential offer loop).
     """
     deadline = now + prof.deadline[model]
     te = prof.t_edge[model] * load_mult
     feasible = js.insert_feasible(st.eq, now, st.busy_rem, deadline, te,
                                   deadline)
-    if pol.migration:
-        victims = js.victim_mask(st.eq, now, st.busy_rem, deadline, te)
-        migrate_ok = js.migration_decision(
-            st.eq, victims, now, model, deadline, prof.gamma_e,
-            prof.gamma_c, _t_cloud_cur(st, prof, pol, now))
-        has_victims = victims.any()
-        insert_edge = arrive & feasible & (~has_victims | migrate_ok)
-
-        # migrate victims: offer each to the cloud, then drop the rejects.
-        # (victims / model / deadline read from the pre-loop queue; the loop
-        # only mutates the cloud queue and drop counters)
-        def offer_victim(i, s):
-            is_v = victims[i] & insert_edge
-            s2, pushed = _offer_cloud(s, prof, now, st.eq.model[i],
-                                      st.eq.deadline[i], st.eq.t_edge[i],
-                                      pol, is_v)
-            rejected = is_v & ~pushed
-            return s2._replace(n_drop=s2.n_drop.at[st.eq.model[i]].add(
-                rejected.astype(jnp.int32)))
-        st = jax.lax.fori_loop(0, EDGE_CAP, offer_victim, st)
-        st = st._replace(eq=js.edge_remove(st.eq, victims & insert_edge))
-    else:
-        insert_edge = arrive & feasible
-
-    eq, _ = js.edge_push(st.eq, deadline, st.seq, te, deadline, model,
-                         enable=insert_edge)
-    st = st._replace(eq=eq, seq=st.seq + arrive.astype(jnp.int32))
+    victims = js.victim_mask(st.eq, now, st.busy_rem, deadline, te)
+    t_cur = _t_cloud_cur(st, prof, pp, now)
+    migrate_ok = js.migration_decision(
+        st.eq, victims, now, model, deadline, prof.gamma_e,
+        prof.gamma_c, t_cur)
+    insert_edge = arrive & feasible & jnp.where(
+        pp.migration, ~victims.any() | migrate_ok, True)
+    vic = victims & insert_edge & pp.migration
     to_cloud = arrive & ~insert_edge
-    st, pushed = _offer_cloud(st, prof, now, model, deadline, te, pol,
-                              to_cloud)
-    st = st._replace(n_drop=st.n_drop.at[model].add(
-        (to_cloud & ~pushed).astype(jnp.int32)))
-    return st
+
+    models = jnp.concatenate([st.eq.model, jnp.asarray(model)[None]])
+    dls = jnp.concatenate([st.eq.deadline, jnp.asarray(deadline)[None]])
+    tes = jnp.concatenate([st.eq.t_edge, jnp.asarray(te)[None]])
+    offer = jnp.concatenate([vic, jnp.asarray(to_cloud)[None]])
+    st, pushed = _offer_cloud_many(st, prof, pp, now, models, dls, tes,
+                                   offer, t_cur=t_cur)
+    add = functools.partial(jax.ops.segment_sum,
+                            num_segments=prof.t_edge.shape[0])
+    eq = js.edge_remove(st.eq, vic)
+    eq, _ = js.edge_push(eq, deadline, st.seq, te, deadline, model,
+                         enable=insert_edge)
+    return st._replace(
+        eq=eq, seq=st.seq + arrive.astype(jnp.int32),
+        n_drop=st.n_drop + add((offer & ~pushed).astype(jnp.int32), models))
 
 
-def _edge_execute(st: EdgeState, prof: Profiles, now, dt, edge_frac,
-                  pol: FleetPolicy, min_edge_t) -> EdgeState:
+def _edge_execute(st: EdgeState, prof: Profiles, pp: PolicyParams, now, dt,
+                  edge_frac, min_edge_t) -> EdgeState:
     """Edge executor: JIT drops, stealing, starting the next task.
 
     Queue entries carry the *effective* edge latency (speed factor folded
     in at insert time), so every check and the executed duration reflect
     heterogeneous edge speeds consistently.
     """
+    m_ids = jnp.arange(prof.t_edge.shape[0], dtype=jnp.int32)
+
     def body(_, s: EdgeState) -> EdgeState:
         idle = s.busy_rem <= 0.0
 
@@ -542,32 +659,23 @@ def _edge_execute(st: EdgeState, prof: Profiles, now, dt, edge_frac,
             eq=jax.tree.map(lambda a, b: jnp.where(do_drop, a, b),
                             eq_after, s.eq),
             n_drop=s.n_drop.at[head_model].add(do_drop.astype(jnp.int32)))
-        if pol.gems:
-            m_ids = jnp.arange(prof.t_edge.shape[0], dtype=jnp.int32)
-            s = _gems_bulk(s, prof, now, jnp.zeros_like(m_ids, bool),
-                           (m_ids == head_model) & do_drop, m_ids)
+        s = _gems_bulk(s, prof, jnp.zeros_like(m_ids, bool),
+                       (m_ids == head_model) & do_drop & pp.gems, m_ids)
 
         idle = idle & ~head_infeasible
         # stealing (§5.3)
-        if pol.stealing:
-            sidx = js.steal_select(s.cq, s.eq, now, jnp.maximum(s.busy_rem,
-                                                                0.0),
-                                   min_edge_t)
-            can_steal = idle & (sidx >= 0)
-            smodel = s.cq_model[jnp.maximum(sidx, 0)]
-            sdl = s.cq.deadline[jnp.maximum(sidx, 0)]
-            ste = s.cq.t_edge[jnp.maximum(sidx, 0)]
-            s = s._replace(cq=s.cq._replace(
-                valid=jnp.where(can_steal,
-                                s.cq.valid.at[jnp.maximum(sidx, 0)].set(
-                                    False), s.cq.valid)),
-                n_stolen=s.n_stolen.at[smodel].add(
-                    can_steal.astype(jnp.int32)))
-        else:
-            can_steal = jnp.asarray(False)
-            smodel = jnp.zeros((), jnp.int32)
-            sdl = jnp.zeros(())
-            ste = jnp.zeros(())
+        sidx = js.steal_select(s.cq, s.eq, now,
+                               jnp.maximum(s.busy_rem, 0.0), min_edge_t)
+        can_steal = idle & (sidx >= 0) & pp.stealing
+        smodel = s.cq_model[jnp.maximum(sidx, 0)]
+        sdl = s.cq.deadline[jnp.maximum(sidx, 0)]
+        ste = s.cq.t_edge[jnp.maximum(sidx, 0)]
+        s = s._replace(cq=s.cq._replace(
+            valid=jnp.where(can_steal,
+                            s.cq.valid.at[jnp.maximum(sidx, 0)].set(
+                                False), s.cq.valid)),
+            n_stolen=s.n_stolen.at[smodel].add(
+                can_steal.astype(jnp.int32)))
 
         # start next task: stolen task first, else the queue head
         eq_after, head_idx, found = js.edge_pop_head(s.eq)
@@ -594,42 +702,44 @@ def _edge_execute(st: EdgeState, prof: Profiles, now, dt, edge_frac,
             n_miss=s.n_miss.at[run_model].add(
                 (start & ~success).astype(jnp.int32)),
             qos_utility=s.qos_utility + util)
-        if pol.gems:
-            m_ids = jnp.arange(prof.t_edge.shape[0], dtype=jnp.int32)
-            run_onehot = (m_ids == run_model) & start
-            s = _gems_bulk(s, prof, now, run_onehot & success, run_onehot,
-                           m_ids)
-        return s
+        run_onehot = (m_ids == run_model) & start & pp.gems
+        return _gems_bulk(s, prof, run_onehot & success, run_onehot, m_ids)
 
     st = jax.lax.fori_loop(0, SUBSTEPS, body, st)
     # at most one tick of banked debt; idle edges do not accumulate credit
     return st._replace(busy_rem=jnp.maximum(st.busy_rem - dt, -dt))
 
 
-def make_step(prof: Profiles, pol: FleetPolicy, dt: float,
-              edge_frac: float, cloud_frac: float):
-    """Build the single-edge tick function (to be vmapped over the fleet)."""
-    min_edge_t = float(np.min(np.asarray(prof.t_edge)))
-    m = prof.t_edge.shape[0]
+def make_step(dt: float, edge_frac: float, cloud_frac: float):
+    """Build the policy-generic single-edge tick function (vmapped over
+    the fleet); ``prof``/``pp`` are runtime arguments, so one compiled
+    step serves every model table and policy in a batch."""
 
-    def step(st: EdgeState, inputs) -> tuple[EdgeState, None]:
-        # arrive: bool[M]; order: i32[M]; theta/bw/load_mult per edge scalars
-        now, theta, bw, arrive, order, load_mult, cloud_up = inputs
+    def step(prof: Profiles, pp: PolicyParams, st: EdgeState, inputs
+             ) -> EdgeState:
+        # arrive: bool[M]; order: i32[M]; theta/bw/load_mult/valid per-edge
+        now, theta, bw, arrive, order, load_mult, cloud_up, valid = inputs
         # signed cellular transfer penalty (network.py convention); exactly
         # 0.0 at the nominal benchmark bandwidth
         bw_pen = network.bandwidth_penalty_ms(bw)
-        st = _resolve_cloud(st, prof, now, theta, bw_pen, cloud_frac, pol,
+        min_edge_t = prof.t_edge.min()     # padded models sit at +inf
+        st0 = st
+        st = _resolve_cloud(st, prof, pp, now, theta, bw_pen, cloud_frac,
                             cloud_up)
-        # §3.3: tasks of a segment are inserted in randomized order
+
+        # §3.3: tasks of a segment are inserted in randomized order; the
+        # loop is load-bearing — each insertion's feasibility depends on
+        # the same tick's earlier insertions — but its per-arrival cloud
+        # offers are batched inside _route_arrival
         def route_one(i, s):
             mdl = order[i]
-            return _route_arrival(s, prof, now, mdl, pol, arrive[mdl],
+            return _route_arrival(s, prof, pp, now, mdl, arrive[mdl],
                                   load_mult)
-        st = jax.lax.fori_loop(0, m, route_one, st)
-        st = _edge_execute(st, prof, now, dt, edge_frac, pol, min_edge_t)
-        if pol.gems:
-            st = _gems_act(st, prof, now, theta, bw_pen, cloud_frac, pol)
-        return st, None
+        st = jax.lax.fori_loop(0, prof.t_edge.shape[0], route_one, st)
+        st = _edge_execute(st, prof, pp, now, dt, edge_frac, min_edge_t)
+        st = _gems_act(st, prof, pp, now, theta, bw_pen, cloud_frac)
+        # padded (tick, edge) cells are exact no-ops
+        return jax.tree.map(lambda a, b: jnp.where(valid, a, b), st, st0)
 
     return step
 
@@ -638,8 +748,9 @@ def make_step(prof: Profiles, pol: FleetPolicy, dt: float,
 # cross-edge peer offload (fleet-level exchange between ticks)
 # ---------------------------------------------------------------------------
 
-def peer_offload(fs: EdgeState, now, slack_ms,
-                 max_transfers: int) -> EdgeState:
+def peer_offload(fs: EdgeState, now, slack_ms, max_transfers: int, *,
+                 enable=True, transfer_cap=None,
+                 edge_valid=None) -> EdgeState:
     """Move doomed tasks from overloaded edges to the least-loaded peer.
 
     Operates on the *stacked* fleet state (leading edge axis).  Each of
@@ -652,35 +763,48 @@ def peer_offload(fs: EdgeState, now, slack_ms,
     edge's speed factor; destination feasibility reuses them, which is
     conservative when the destination is faster.  Under a sharded fleet
     axis the gathers/scatters lower to cross-device collectives.
+
+    ``max_transfers`` is the static round bound; ``enable`` (the runtime
+    cooperation flag) and ``transfer_cap`` (the runtime per-tick cap, ≤
+    the bound) mask rounds off per replica, and ``edge_valid`` excludes
+    padded edges from both export and import.
     """
     n_edges = fs.busy_rem.shape[0]
-    if n_edges < 2:
+    if n_edges < 2 or max_transfers == 0:
         return fs
+    ev = jnp.ones(n_edges, bool) if edge_valid is None else edge_valid
+    cap = jnp.asarray(max_transfers if transfer_cap is None else
+                      transfer_cap, jnp.int32)
 
-    def one_transfer(_, fs: EdgeState) -> EdgeState:
+    def one_transfer(k, fs: EdgeState) -> EdgeState:
         busy = jnp.maximum(fs.busy_rem, 0.0)
         slacks = jax.vmap(js.queue_slacks, in_axes=(0, None, 0))(
             fs.eq, now, busy)                              # [E, Q]
-        min_slack = slacks.min(-1)                         # [E]
-        load = jax.vmap(js.queue_load)(fs.eq, fs.busy_rem)  # [E]
+        min_slack = jnp.where(ev, slacks.min(-1), js.POS)  # [E]
+        load = jnp.where(ev, jax.vmap(js.queue_load)(fs.eq, fs.busy_rem),
+                         js.POS)                           # [E]
 
         # each edge's best available destination load (least-loaded other
         # edge): the global minimum, or the runner-up for that edge itself
-        lead = jnp.argmin(load)
+        lead, best = sched_ops.masked_argmin(load, ev)
         runner_up = jnp.where(jnp.arange(n_edges) == lead, js.POS,
                               load).min()
         dst_load = jnp.where(jnp.arange(n_edges) == lead, runner_up,
-                             load.min())                   # [E]
+                             best)                         # [E]
         exportable = (fs.eq.valid & (slacks < slack_ms)
                       & (now + dst_load[:, None] + fs.eq.t_edge
                          <= fs.eq.deadline)).any(-1)       # [E]
-        over = (min_slack < slack_ms) & exportable
-        src = jnp.argmin(jnp.where(over, min_slack, js.POS))
-        dst = jnp.argmin(jnp.where(jnp.arange(n_edges) == src, js.POS, load))
+        over = (min_slack < slack_ms) & exportable & ev
+        sidx, _ = sched_ops.masked_argmin(min_slack, over)
+        src = jnp.maximum(sidx, 0)
+        didx, _ = sched_ops.masked_argmin(
+            load, ev & (jnp.arange(n_edges) != src))
+        dst = jnp.maximum(didx, 0)
 
         src_eq = jax.tree.map(lambda a: a[src], fs.eq)
         vidx = js.export_select(src_eq, now, busy[src], load[dst], slack_ms)
-        ok = over.any() & (vidx >= 0)
+        ok = (over.any() & (sidx >= 0) & (didx >= 0) & (vidx >= 0)
+              & enable & (k < cap))
         vi = jnp.maximum(vidx, 0)
 
         free = ~fs.eq.valid[dst]
@@ -734,15 +858,15 @@ def default_signals(n_models: int, *, n_edges: int, drones_per_edge: int = 3,
     bw_t = network.sample_trace(bw_fn, times) if bw_fn \
         else np.full(n_ticks, network.NOMINAL_BW_MBPS, np.float32)
     bw = np.broadcast_to(bw_t[:, None], (n_ticks, n_edges))
-    order = np.stack([rng.permuted(np.tile(np.arange(m), (n_edges, 1)),
-                                   axis=1) for _ in range(n_ticks)]
-                     ).astype(np.int32)
+    order = rng.permuted(np.tile(np.arange(m), (n_ticks, n_edges, 1)),
+                         axis=2).astype(np.int32)
     return FleetSignals(
         times=jnp.asarray(times), theta=jnp.asarray(theta),
         bw=jnp.asarray(bw), arrive=jnp.asarray(arrive),
         order=jnp.asarray(order),
         load_mult=jnp.ones((n_ticks, n_edges), jnp.float32),
-        cloud_up=jnp.ones(n_ticks, bool))
+        cloud_up=jnp.ones(n_ticks, bool),
+        valid=jnp.ones((n_ticks, n_edges), bool))
 
 
 def _resolve_policy(policy) -> FleetPolicy:
@@ -750,53 +874,106 @@ def _resolve_policy(policy) -> FleetPolicy:
         else FleetPolicy.from_name(policy)
 
 
-def _shard_leading(tree, mesh: jax.sharding.Mesh):
-    """Shard every leaf's leading axis over the mesh's first axis name."""
-    axis = mesh.axis_names[0]
-    return jax.tree.map(
-        lambda a: jax.device_put(a, jax.sharding.NamedSharding(
-            mesh, jax.sharding.PartitionSpec(
-                *([axis] + [None] * (a.ndim - 1))))), tree)
+# ---------------------------------------------------------------------------
+# mesh sharding
+# ---------------------------------------------------------------------------
+
+def _put(a: jax.Array, mesh: jax.sharding.Mesh, names: tuple) -> jax.Array:
+    """Place ``a`` with the given per-axis mesh-axis names (None = rep.);
+    axes whose size does not divide the mesh axis stay replicated."""
+    spec = []
+    for i in range(a.ndim):
+        n = names[i] if i < len(names) else None
+        if n is not None and a.shape[i] % mesh.shape[n] != 0:
+            n = None
+        spec.append(n)
+    return jax.device_put(a, jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(*spec)))
 
 
-def _fleet_setup(models, policy, dt, edge_frac, cloud_frac, n_edges,
-                 cloud_slots):
-    """Shared run_fleet / run_fleet_batch setup: program + initial state."""
-    pol = _resolve_policy(policy)
-    prof = Profiles.build(models)
-    run = _fleet_program(prof, pol, dt, edge_frac, cloud_frac, n_edges)
-    state = jax.vmap(
-        lambda _: init_state(prof, pol.adapt_window, cloud_slots))(
-        jnp.arange(n_edges))
-    return run, state
+def _shard_leading(tree, mesh: jax.sharding.Mesh, axes: int = 1):
+    """Shard every leaf's first ``axes`` dims over the mesh's first axes.
+
+    ``axes=2`` is the (replica, edge) grid of a padded batch: replicas
+    fan out over the first mesh axis, each replica's fleet over the
+    second — the 2-D NamedSharding of the ROADMAP item.
+    """
+    names = mesh.axis_names[:axes]
+    return jax.tree.map(lambda a: _put(a, mesh, names), tree)
 
 
-def _fleet_program(prof: Profiles, pol: FleetPolicy, dt: float,
-                   edge_frac: float, cloud_frac: float, n_edges: int):
-    """Build ``run(state, xs) -> final`` — the whole mission as one scan."""
-    step = make_step(prof, pol, dt, edge_frac, cloud_frac)
-    vstep = jax.vmap(step, in_axes=(0, (None, 0, 0, 0, 0, 0, None)))
-    cooperate = pol.cooperation and n_edges > 1
+# tick-signal leaves keep the replica axis leading; the edge axis sits at
+# a field-dependent position (None = no edge axis)
+_SIGNAL_EDGE_AXIS = dict(times=None, theta=2, bw=2, arrive=2, order=2,
+                         load_mult=2, cloud_up=None, valid=2)
 
-    def scan_body(state, xs):
-        now, th, bw, arr, ordr, lm, cup = xs
-        state, _ = vstep(state, (now, th, bw, arr, ordr, lm, cup))
-        if cooperate:
-            state = peer_offload(state, now + dt, pol.coop_slack_ms,
-                                 pol.coop_max_transfers)
-        return state, None
 
-    def run(state, xs):
-        final, _ = jax.lax.scan(scan_body, state, xs)
-        return final
+def _shard_signals(sig: FleetSignals, mesh: jax.sharding.Mesh
+                   ) -> FleetSignals:
+    """Shard batched signals ``[R, T, …]``: replicas over the first mesh
+    axis and (on a 2-D mesh) the edge axis over the second."""
+    r = mesh.axis_names[0]
+    e = mesh.axis_names[1] if len(mesh.axis_names) > 1 else None
+    out = {}
+    for f in FleetSignals._fields:
+        a = getattr(sig, f)
+        names = [None] * a.ndim
+        names[0] = r
+        ax = _SIGNAL_EDGE_AXIS[f]
+        if e is not None and ax is not None:
+            names[ax] = e
+        out[f] = _put(a, mesh, tuple(names))
+    return FleetSignals(**out)
 
-    return run
+
+# ---------------------------------------------------------------------------
+# compiled fleet programs (cached: policy and profiles are runtime args,
+# so a program is reused across every policy/scenario of the same shape)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _fleet_program(dt: float, edge_frac: float, cloud_frac: float,
+                   coop_rounds: int, record_trace: bool, batched: bool,
+                   hetero: bool):
+    """Jitted ``run(prof, pp, state, xs)``.
+
+    ``batched`` adds a leading replica axis on the signals (and, when
+    ``hetero``, on profiles/params/state too).  ``coop_rounds`` is the
+    static peer-offload round bound (0 compiles cooperation out
+    entirely); per-replica runtime caps mask rounds within it.
+    """
+    step = make_step(dt, edge_frac, cloud_frac)
+
+    def run(prof, pp, state, xs):
+        vstep = jax.vmap(step, in_axes=(
+            None, None, 0, (None, 0, 0, 0, 0, 0, None, 0)))
+
+        def scan_body(state, xs_t):
+            now = xs_t[0]
+            valid = xs_t[7]
+            state = vstep(prof, pp, state, xs_t)
+            if coop_rounds:
+                state = peer_offload(
+                    state, now + dt, pp.coop_slack_ms, coop_rounds,
+                    enable=pp.cooperation,
+                    transfer_cap=pp.coop_transfer_cap, edge_valid=valid)
+            ys = state.adapt.current if record_trace else ()
+            return state, ys
+
+        final, trace = jax.lax.scan(scan_body, state, xs)
+        return FleetResult(final, trace) if record_trace else final
+
+    if batched:
+        ax = 0 if hetero else None
+        run = jax.vmap(run, in_axes=(ax, ax, ax, 0))
+    return jax.jit(run)
 
 
 def run_fleet(models: list[ModelProfile], policy, signals: FleetSignals, *,
               dt: float = 25.0, edge_frac: float = 0.62,
               cloud_frac: float = 0.80, cloud_slots: int = CLOUD_SLOTS,
-              mesh: Optional[jax.sharding.Mesh] = None) -> EdgeState:
+              mesh: Optional[jax.sharding.Mesh] = None,
+              record_trace: bool = False):
     """Run the fleet simulator over arbitrary scenario signals.
 
     ``policy`` is a :class:`FleetPolicy` or a name (``"DEMS"``,
@@ -805,14 +982,22 @@ def run_fleet(models: list[ModelProfile], policy, signals: FleetSignals, *,
     large to recover the elastic-cloud limit.  With ``mesh`` given, fleet
     state is sharded over its first axis (pjit-style data parallelism over
     edges); the peer offload exchange then runs as cross-device
-    collectives.
+    collectives.  ``record_trace`` returns a :class:`FleetResult` whose
+    ``t_hat`` is the per-tick adapted-estimate trace; the default returns
+    the final :class:`EdgeState`.
     """
-    run, state = _fleet_setup(models, policy, dt, edge_frac, cloud_frac,
-                              signals.arrive.shape[1], cloud_slots)
-    xs = tuple(signals)
+    pol = _resolve_policy(policy)
+    prof = Profiles.build(models)
+    n_edges = signals.arrive.shape[1]
+    state = jax.vmap(
+        lambda _: init_state(prof, pol.adapt_window, cloud_slots))(
+        jnp.arange(n_edges))
+    run = _fleet_program(dt, edge_frac, cloud_frac,
+                         pol.coop_max_transfers if pol.cooperation else 0,
+                         record_trace, False, False)
     if mesh is not None:
         state = _shard_leading(state, mesh)
-    return jax.jit(run)(state, xs)
+    return run(prof, pol.params(), state, tuple(signals))
 
 
 def stack_signals(signals: list[FleetSignals]) -> FleetSignals:
@@ -820,16 +1005,71 @@ def stack_signals(signals: list[FleetSignals]) -> FleetSignals:
 
     All runs must share (n_ticks, n_edges, n_models) — i.e. seeds or event
     variants of one scenario shape, the unit :func:`run_fleet_batch`
-    compiles once and sweeps in a single program.
+    compiles once and sweeps in a single program.  Heterogeneous shapes
+    raise a :class:`ValueError` naming the offending field; use
+    :func:`pad_signals` for a cross-scenario batch.
     """
+    for f in FleetSignals._fields:
+        shapes = [tuple(getattr(s, f).shape) for s in signals]
+        if any(sh != shapes[0] for sh in shapes):
+            raise ValueError(
+                f"stack_signals: replica signals disagree on field {f!r} "
+                f"(shapes {shapes}); stack only same-shape replicas "
+                f"(seeds / event variants of one scenario) or use "
+                f"pad_signals for a heterogeneous cross-scenario batch")
     return jax.tree.map(lambda *xs: jnp.stack(xs), *signals)
+
+
+def pad_signals(signals: list[FleetSignals],
+                dt: float = 25.0) -> FleetSignals:
+    """Mask heterogeneous per-run signals to the max shape and stack.
+
+    Every replica is padded to the batch's max (ticks, edges, models):
+    padded ticks/edges carry ``valid=False`` (the tick function reverts
+    them to exact no-ops), padded models never arrive and their ids are
+    appended to the insertion ``order`` so it stays a permutation.  The
+    result feeds :func:`build_fleet_batch` / :func:`run_batch`, which run
+    the whole cross-scenario sweep as one compiled program.
+    """
+    sigs = [jax.tree.map(np.asarray, s) for s in signals]
+    tmax = max(s.arrive.shape[0] for s in sigs)
+    emax = max(s.arrive.shape[1] for s in sigs)
+    mmax = max(s.arrive.shape[2] for s in sigs)
+    padded = []
+    for s in sigs:
+        t, e, m = s.arrive.shape
+        pt, pe = tmax - t, emax - e
+        step = float(s.times[1] - s.times[0]) if t > 1 else dt
+        times = np.concatenate(
+            [s.times, s.times[-1] + step * np.arange(1, pt + 1,
+                                                     dtype=np.float32)])
+        order = np.broadcast_to(np.arange(mmax, dtype=np.int32),
+                                (tmax, emax, mmax)).copy()
+        order[:t, :e, :m] = s.order
+        valid = np.zeros((tmax, emax), dtype=bool)
+        valid[:t, :e] = s.valid
+        padded.append(FleetSignals(
+            times=times.astype(np.float32),
+            theta=np.pad(s.theta, ((0, pt), (0, pe))),
+            bw=np.pad(s.bw, ((0, pt), (0, pe)),
+                      constant_values=network.NOMINAL_BW_MBPS),
+            arrive=np.pad(s.arrive, ((0, pt), (0, pe),
+                                     (0, mmax - m))),
+            order=order,
+            load_mult=np.pad(s.load_mult, ((0, pt), (0, pe)),
+                             constant_values=1.0),
+            cloud_up=np.pad(s.cloud_up, (0, pt), constant_values=True),
+            valid=valid))
+    return jax.tree.map(lambda *xs: jnp.stack([np.asarray(x)
+                                               for x in xs]), *padded)
 
 
 def run_fleet_batch(models: list[ModelProfile], policy,
                     signals: FleetSignals, *, dt: float = 25.0,
                     edge_frac: float = 0.62, cloud_frac: float = 0.80,
                     cloud_slots: int = CLOUD_SLOTS,
-                    mesh: Optional[jax.sharding.Mesh] = None) -> EdgeState:
+                    mesh: Optional[jax.sharding.Mesh] = None,
+                    record_trace: bool = False):
     """One-jit sweep: ``signals`` carry a leading replica axis ``[R, …]``
     (from :func:`stack_signals`), and the whole sweep — every replica's
     full mission scan — runs as a single ``vmap``-over-replicas compiled
@@ -838,15 +1078,112 @@ def run_fleet_batch(models: list[ModelProfile], policy,
     Returns the stacked final :class:`EdgeState` with leading ``[R, E]``
     axes; slicing replica ``r`` reproduces ``run_fleet`` on that run's
     signals exactly.  With ``mesh`` given, replicas are sharded over its
-    first axis, so independent seeds/scenario-variants fan out across
-    devices.
+    first axis; a 2-D mesh additionally shards the edge axis over its
+    second (the (replica, edge) grid).  For *heterogeneous* replicas
+    (different scenarios / policies / pool depths) see
+    :func:`build_fleet_batch` / :func:`run_batch`.
     """
-    run, state = _fleet_setup(models, policy, dt, edge_frac, cloud_frac,
-                              signals.arrive.shape[2], cloud_slots)
-    xs = tuple(signals)
+    pol = _resolve_policy(policy)
+    prof = Profiles.build(models)
+    n_edges = signals.arrive.shape[2]
+    state = jax.vmap(
+        lambda _: init_state(prof, pol.adapt_window, cloud_slots))(
+        jnp.arange(n_edges))
+    run = _fleet_program(dt, edge_frac, cloud_frac,
+                         pol.coop_max_transfers if pol.cooperation else 0,
+                         record_trace, True, False)
     if mesh is not None:
-        xs = _shard_leading(xs, mesh)
-    return jax.jit(jax.vmap(run, in_axes=(None, 0)))(state, xs)
+        # state is replica-shared (vmap in_axes None): leave it replicated
+        # on a 1-D replica mesh; a 2-D mesh shards its edge axis over the
+        # second mesh axis
+        if len(mesh.axis_names) > 1:
+            state = jax.tree.map(
+                lambda a: _put(a, mesh, (mesh.axis_names[1],)), state)
+        signals = _shard_signals(signals, mesh)
+    return run(prof, pol.params(), state, tuple(signals))
+
+
+class FleetBatch(NamedTuple):
+    """A heterogeneous sweep compiled to one program's inputs.
+
+    ``profiles``/``params``/``state`` carry a leading replica axis
+    matching ``signals``; ``coop_rounds`` is the static peer-offload
+    bound (max across the batch's policies).
+    """
+
+    profiles: Profiles      # [R, Mp, …]
+    params: PolicyParams    # [R]
+    state: EdgeState        # [R, E, …]
+    signals: FleetSignals   # [R, T, …]
+    coop_rounds: int
+
+
+def build_fleet_batch(runs, *, dt: float = 25.0) -> FleetBatch:
+    """Assemble heterogeneous runs into one padded, stackable batch.
+
+    ``runs`` is a list of ``(models, policy, signals, cloud_slots)``
+    tuples — one per replica (scenario × policy × seed).  Model tables
+    are padded to the max model count, pool arrays to the max slot
+    count, signals to the max (ticks, edges) shape; policies become
+    per-replica runtime :class:`PolicyParams`.  Policies must agree on
+    ``adapt_window`` (an estimator buffer *shape*).
+    """
+    pols = [_resolve_policy(p) for _, p, _, _ in runs]
+    windows = {p.adapt_window for p in pols}
+    if len(windows) > 1:
+        raise ValueError(
+            f"build_fleet_batch: policies disagree on adapt_window "
+            f"{sorted(windows)} — the estimator buffer is a compiled "
+            f"shape, so one batch must share it")
+    mmax = max(len(models) for models, _, _, _ in runs)
+    smax = max(slots for _, _, _, slots in runs)
+    emax = max(sig.arrive.shape[1] for _, _, sig, _ in runs)
+    profs, states, cache = [], [], {}
+    for (models, _, sig, slots), pol in zip(runs, pols):
+        # lanes of the same (model table, pool, window) share one init
+        # (ModelProfile is a frozen dataclass, so the full table is the key)
+        key = (slots, pol.adapt_window, tuple(models))
+        if key not in cache:
+            prof = Profiles.build(models, pad_to=mmax)
+            cache[key] = (prof, jax.vmap(
+                lambda _, prof=prof: init_state(
+                    prof, pol.adapt_window, slots, total_slots=smax))(
+                jnp.arange(emax)))
+        prof, state = cache[key]
+        profs.append(prof)
+        states.append(state)
+    return FleetBatch(
+        profiles=jax.tree.map(lambda *xs: jnp.stack(xs), *profs),
+        params=jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[p.params() for p in pols]),
+        state=jax.tree.map(lambda *xs: jnp.stack(xs), *states),
+        signals=pad_signals([sig for _, _, sig, _ in runs], dt),
+        coop_rounds=max((p.coop_max_transfers for p in pols
+                         if p.cooperation), default=0))
+
+
+def run_batch(batch: FleetBatch, *, dt: float = 25.0,
+              edge_frac: float = 0.62, cloud_frac: float = 0.80,
+              mesh: Optional[jax.sharding.Mesh] = None,
+              record_trace: bool = False):
+    """Execute a heterogeneous :class:`FleetBatch` as one compiled program.
+
+    Every replica — its own scenario shape, policy flags, model table and
+    pool depth — runs under one jit; per-replica slices of the returned
+    ``[R, E, …]`` state match the corresponding :func:`run_fleet` call
+    exactly (padding is a no-op by construction).  A 2-D ``mesh`` shards
+    the (replica, edge) grid; a 1-D mesh shards replicas only.
+    """
+    prof, pp, state, sig = (batch.profiles, batch.params, batch.state,
+                            batch.signals)
+    run = _fleet_program(dt, edge_frac, cloud_frac, batch.coop_rounds,
+                         record_trace, True, True)
+    if mesh is not None:
+        prof = _shard_leading(prof, mesh, axes=1)
+        pp = _shard_leading(pp, mesh, axes=1)
+        state = _shard_leading(state, mesh, axes=2)
+        sig = _shard_signals(sig, mesh)
+    return run(prof, pp, state, tuple(sig))
 
 
 def simulate_fleet(models: list[ModelProfile], policy: str, *,

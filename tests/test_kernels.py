@@ -297,6 +297,95 @@ def test_rmsnorm_matches_model_layer():
                                rtol=1e-5, atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# masked segmented argmin/argmax scoring (scheduler selection kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("is_max", [True, False])
+@pytest.mark.parametrize("b,n", [(1, 32), (8, 64), (5, 200), (16, 128)])
+def test_sched_argext_kernel_matches_ref(b, n, is_max):
+    """Pallas kernel (interpret mode) ≡ jnp oracle over random masks."""
+    from repro.kernels import sched_ops
+
+    rng = np.random.default_rng(hash((b, n, is_max)) % 2**31)
+    scores = jnp.asarray(rng.normal(size=(b, n)).astype(np.float32))
+    mask = jnp.asarray(rng.random((b, n)) < 0.4)
+    got_i, got_v = sched_ops.masked_argext(scores, mask, is_max=is_max,
+                                           interpret=True)
+    want_i, want_v = ref.ref_masked_argext(scores, mask, is_max=is_max)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+
+
+def test_sched_argext_property_random_masks():
+    """Hypothesis sweep: any (shape, scores, mask) agrees with the oracle,
+    including all-False and all-True mask rows and tied scores."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import strategies as st
+    from repro.kernels import sched_ops
+
+    @hyp.settings(max_examples=40, deadline=None)
+    @hyp.given(b=st.integers(1, 6), n=st.integers(1, 70),
+               seed=st.integers(0, 2**31 - 1), is_max=st.booleans(),
+               p=st.sampled_from([0.0, 0.15, 0.6, 1.0]),
+               quantize=st.booleans())
+    def run(b, n, seed, is_max, p, quantize):
+        rng = np.random.default_rng(seed)
+        scores = rng.normal(size=(b, n)).astype(np.float32)
+        if quantize:                      # force ties
+            scores = np.round(scores)
+        mask = rng.random((b, n)) < p
+        got_i, got_v = sched_ops.masked_argext(
+            jnp.asarray(scores), jnp.asarray(mask), is_max=is_max,
+            interpret=True)
+        want_i, want_v = ref.ref_masked_argext(
+            jnp.asarray(scores), jnp.asarray(mask), is_max=is_max)
+        np.testing.assert_array_equal(np.asarray(got_i),
+                                      np.asarray(want_i))
+        np.testing.assert_array_equal(np.asarray(got_v),
+                                      np.asarray(want_v))
+
+    run()
+
+
+def test_sched_argext_all_masked_rows_return_minus_one():
+    from repro.kernels import sched_ops
+
+    scores = jnp.arange(24, dtype=jnp.float32).reshape(2, 12)
+    mask = jnp.zeros((2, 12), bool).at[1, 3].set(True)
+    idx, val = sched_ops.masked_argext(scores, mask, is_max=True,
+                                       interpret=True)
+    assert idx.tolist() == [-1, 3]
+    assert float(val[1]) == 15.0
+
+
+def test_sched_argext_ties_break_to_first_index():
+    from repro.kernels import sched_ops
+
+    scores = jnp.asarray([[2.0, 5.0, 5.0, 1.0, 5.0]])
+    mask = jnp.ones((1, 5), bool)
+    for interpret in (True, None):   # kernel body and the CPU jnp path
+        idx, _ = sched_ops.masked_argmax(scores, mask, interpret=interpret)
+        assert int(idx[0]) == 1
+        idx, _ = sched_ops.masked_argmin(
+            jnp.asarray([[3.0, 1.0, 4.0, 1.0, 9.0]]), mask,
+            interpret=interpret)
+        assert int(idx[0]) == 1
+
+
+def test_sched_argext_nd_batch_shapes():
+    from repro.kernels import sched_ops
+
+    scores = jnp.asarray(np.random.default_rng(0).normal(
+        size=(3, 4, 40)).astype(np.float32))
+    mask = jnp.asarray(np.random.default_rng(1).random((3, 4, 40)) < 0.5)
+    got_i, got_v = sched_ops.masked_argmin(scores, mask, interpret=True)
+    want_i, want_v = ref.ref_masked_argext(scores, mask, is_max=False)
+    assert got_i.shape == (3, 4)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+
+
 @pytest.mark.parametrize("dtype", [jnp.bfloat16])
 def test_moe_gemm_bf16(dtype):
     t, d, f, e = 256, 64, 64, 4
