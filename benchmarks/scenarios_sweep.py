@@ -23,8 +23,9 @@ from repro.scenarios import get, names, run_registry_sweep, \
     run_scenario_oracle
 
 ORACLE_POLICIES = ("EDF-E+C", "DEMS", "GEMS")
-FLEET_POLICIES = ("EDF-E+C", "DEMS", "DEMS-A", "DEMS-COOP", "GEMS",
-                  "GEMS-A", "GEMS-COOP")
+FLEET_POLICIES = ("EDF", "HPF", "CLD", "EDF-E+C", "SJF-E+C", "SOTA1",
+                  "SOTA2", "DEMS", "DEMS-A", "DEMS-COOP", "GEMS",
+                  "GEMS-A", "GEMS-COOP", "GEMS-B")
 
 
 def sweep_oracle(scenarios, policies, duration_ms) -> None:
@@ -68,9 +69,11 @@ def main() -> None:
 
     if args.quick:
         # one calm and one congested scenario so neither the elastic-limit
-        # nor the finite-pool/bw-shaping path can rot
+        # nor the finite-pool/bw-shaping path can rot; SOTA2 + GEMS-B keep
+        # the newly-covered routing/winnability branches in the smoke
         sweep_oracle(("baseline", "cloud-crunch"), ("DEMS",), 20_000.0)
-        sweep_fleet(("baseline", "cloud-crunch"), ("DEMS", "DEMS-A"),
+        sweep_fleet(("baseline", "cloud-crunch"),
+                    ("DEMS", "DEMS-A", "SOTA2", "GEMS-B"),
                     20_000.0, args.dt, (0, 1))
         return
     if args.backend == "oracle":

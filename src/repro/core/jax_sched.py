@@ -10,11 +10,15 @@ city-scale deployment the paper targets in §8.6.
 
 Queues are structure-of-arrays with a validity mask:
 
-* edge queue:  ``valid, key, seq, t_edge, deadline, model``  — ``key`` is
-  the policy priority (EDF: absolute deadline), ``seq`` breaks ties by
-  insertion order (stable, like the list-based oracle), ``deadline`` is the
-  *scheduling* deadline.
-* cloud queue: ``valid, trigger, t_edge, deadline, steal_only, rank``.
+* edge queue:  ``valid, key, seq, t_edge, deadline, abs_dl, model`` —
+  ``key`` is the policy priority (EDF: absolute deadline; HPF: negated
+  utility-per-edge-second; SJF: execution time — see
+  :func:`edge_priority_key`), ``seq`` breaks ties by insertion order
+  (stable, like the list-based oracle), ``deadline`` is the *scheduling*
+  deadline (SOTA1 may extend it by its 10 % buffer) and ``abs_dl`` the
+  absolute one that decides success (they differ only under SOTA1).
+* cloud queue: ``valid, trigger, t_edge, deadline, steal_only, rank``
+  (cloud deadlines are always absolute — the oracle's ``abs_deadline``).
 
 Every function is pure, shape-stable and differentiable-free; all are
 property-tested against the discrete-event oracle in
@@ -37,10 +41,11 @@ class EdgeQueue(NamedTuple):
     """Array-encoded edge priority queue (capacity = arrays' length)."""
 
     valid: jax.Array     # bool[Q]
-    key: jax.Array       # f32[Q]  policy priority (EDF: t'_j + δ_i)
+    key: jax.Array       # f32[Q]  policy priority (see edge_priority_key)
     seq: jax.Array       # i32[Q]  insertion counter (stable tie-break)
     t_edge: jax.Array    # f32[Q]  expected edge latency t_i
-    deadline: jax.Array  # f32[Q]  scheduling deadline (abs)
+    deadline: jax.Array  # f32[Q]  scheduling deadline (abs, + SOTA1 ext)
+    abs_dl: jax.Array    # f32[Q]  absolute deadline t'_j + δ_i (success)
     model: jax.Array     # i32[Q]
 
 
@@ -58,8 +63,8 @@ class CloudQueue(NamedTuple):
 def empty_edge_queue(capacity: int) -> EdgeQueue:
     z = jnp.zeros(capacity)
     return EdgeQueue(valid=jnp.zeros(capacity, bool), key=z, seq=jnp.zeros(
-        capacity, jnp.int32), t_edge=z, deadline=z, model=jnp.zeros(
-        capacity, jnp.int32))
+        capacity, jnp.int32), t_edge=z, deadline=z, abs_dl=z,
+        model=jnp.zeros(capacity, jnp.int32))
 
 
 def empty_cloud_queue(capacity: int) -> CloudQueue:
@@ -103,6 +108,31 @@ def projected_completions(q: EdgeQueue, now: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# §5.1 / §8.2 — edge-queue priority keys
+# ---------------------------------------------------------------------------
+
+# runtime codes for PolicyParams.edge_prio (oracle Policy.edge_priority)
+PRIO_EDF = 0   # "edf": absolute scheduling deadline t'_j + δ_i (§5.1)
+PRIO_HPF = 1   # "hpf": highest utility-per-edge-second first (§8.2)
+PRIO_SJF = 2   # "sjf": shortest job first (SJF-E+C / Dedas ordering)
+
+
+def edge_priority_key(prio, sched_deadline, t_edge_eff,
+                      gamma_e) -> jax.Array:
+    """The oracle's ``Policy.edge_key`` as a runtime-selected scalar.
+
+    Lower key = higher priority, ties broken by insertion ``seq``.
+    ``t_edge_eff`` is the *effective* edge latency (speed factor folded
+    in), matching the oracle, whose per-edge model tables fold the factor
+    before ``hpf_rank``/SJF read ``t_edge``.
+    """
+    hpf = -gamma_e / t_edge_eff          # −γ^E/t_i: greedy utility rate
+    return jnp.where(prio == PRIO_HPF, hpf,
+                     jnp.where(prio == PRIO_SJF, t_edge_eff,
+                               sched_deadline))
+
+
+# ---------------------------------------------------------------------------
 # §5.1 — EDF insertion feasibility
 # ---------------------------------------------------------------------------
 
@@ -111,6 +141,35 @@ def insert_feasible(q: EdgeQueue, now, busy_rem, new_key, new_t_edge,
     """Sum of execution times ahead + own ≤ deadline (paper §5.1)."""
     wait = jnp.where(ahead_of_new(q, new_key), q.t_edge, 0.0).sum()
     return now + busy_rem + wait + new_t_edge <= new_deadline
+
+
+# ---------------------------------------------------------------------------
+# §8.2 — SOTA2 (Dedas) average-completion-time comparison
+# ---------------------------------------------------------------------------
+
+def act_improves(q: EdgeQueue, now, busy_rem, new_key,
+                 new_t_edge) -> jax.Array:
+    """Dedas tie-break: does inserting keep the mean completion time down?
+
+    Mirrors the oracle's ``_route_sota2`` ACT comparison for the
+    exactly-one-violation case: the mean projected completion time over
+    all queued tasks *with* the insert (tasks behind the new key shift by
+    ``new_t_edge``; the new task completes after everything ahead of it)
+    must not exceed the mean *without* it.  An empty queue compares
+    against +inf, so the insert always "improves".
+    """
+    proj = projected_completions(q, now, busy_rem)
+    ahead = ahead_of_new(q, new_key)
+    behind = q.valid & ~ahead
+    n = q.valid.sum()
+    act_before = jnp.where(n > 0, jnp.where(q.valid, proj, 0.0).sum()
+                           / jnp.maximum(n, 1), POS)
+    new_proj = (now + busy_rem + jnp.where(ahead, q.t_edge, 0.0).sum()
+                + new_t_edge)
+    after_sum = (jnp.where(q.valid, proj, 0.0).sum()
+                 + jnp.where(behind, new_t_edge, 0.0).sum() + new_proj)
+    act_after = after_sum / (n + 1)
+    return act_after <= act_before
 
 
 # ---------------------------------------------------------------------------
@@ -245,6 +304,21 @@ def window_update(lam, lam_hat, success) -> tuple[jax.Array, jax.Array,
     return lam, lam_hat, lam_hat / lam
 
 
+def gems_winnable(lam, lam_hat, prev_lam, alpha, now, win_end,
+                  window) -> jax.Array:
+    """GEMS-B (beyond-paper): can α̂ still reach α this window?
+
+    Vectorized mirror of the oracle's ``_WindowState.winnable``: the
+    remaining arrivals are forecast from the *previous* window's count
+    (``prev_lam``, prorated by the fraction of the window left); if even
+    an all-success tail cannot lift the rate to α the window is
+    mathematically lost and Alg. 1's rescheduling flood is pointless.
+    """
+    frac_left = jnp.clip((win_end - now) / window, 0.0, None)
+    remaining = jnp.maximum(prev_lam, lam) * frac_left
+    return lam_hat + remaining >= alpha * (lam + remaining) - 1e-9
+
+
 # ---------------------------------------------------------------------------
 # §5.4 — DEMS-A adaptation
 # ---------------------------------------------------------------------------
@@ -317,11 +391,29 @@ def adapt_feed_batch(st: AdaptState, model_ids, sent, obs, obs_val, skip,
     observations land in slot order (their values must be equal within
     one call — true in the fleet tick, where a model's actual duration is
     a function of (model, tick) only), then at most one ``skip``
-    (same-instant repeated skips are idempotent).  The only divergence
-    from the sequential slot loop is a model that both dispatches *and*
-    skips in one tick: the loop interleaves by slot, here sends precede
-    skips — the same batched-per-tick simplification
-    :mod:`repro.sim.fleet_jax` already documents for DEMS-A.
+    (same-instant repeated skips are idempotent).
+
+    **Event-ordering caveat (sends-then-skips).**  A model that both
+    dispatches *and* skips in the same tick diverges from the sequential
+    slot loop: the loop interleaves events in queue-slot order (a skip in
+    slot 2 lands *before* a send in slot 5), whereas this batch applies
+    all sends first, then the skips.  The divergence is confined to the
+    cooling timer: a slot-ordered ``skip → send`` pair starts cooling and
+    immediately clears it (net no-op), while the batch's ``send → skip``
+    leaves the model cooling from ``now``.  Both orders agree again at
+    the next dispatch (any send clears the timer), so the visible effect
+    is bounded to at most one cooling window ``t_cp`` *starting* a few
+    slots early — it can only make the §5.4 point-of-no-return reset
+    fire sooner, never later, and only for models mixing sends and skips
+    within one ``dt``.  No registry scenario exercises this (a tick's
+    dispatch gate is feasibility-monotone per model: same-model entries
+    share one t̂, so they skip together or send together; mixes need a
+    deadline straddle within a single tick).  If a future scenario makes
+    the interleave matter, thread each event's queue-slot index into this
+    call and fold it into the per-model segment reductions (order the
+    replay tensors by slot instead of assuming sends-first) — the same
+    batched-per-tick simplification :mod:`repro.sim.fleet_jax` documents
+    for DEMS-A.
 
     With all masks False the state is returned bit-identical, so callers
     gate adaptivity by AND-ing a runtime policy flag into the masks.
@@ -392,8 +484,13 @@ def adapt_feed_batch(st: AdaptState, model_ids, sent, obs, obs_val, skip,
 # ---------------------------------------------------------------------------
 
 def edge_push(q: EdgeQueue, key, seq, t_edge, deadline, model,
-              enable=True) -> tuple[EdgeQueue, jax.Array]:
-    """Insert into the first free slot; returns (queue, ok)."""
+              enable=True, abs_dl=None) -> tuple[EdgeQueue, jax.Array]:
+    """Insert into the first free slot; returns (queue, ok).
+
+    ``abs_dl`` is the absolute deadline deciding success; it defaults to
+    ``deadline`` (they differ only under SOTA1's scheduling extension).
+    """
+    abs_dl = deadline if abs_dl is None else abs_dl
     free = ~q.valid
     slot = jnp.argmax(free)
     ok = free.any() & enable
@@ -402,7 +499,8 @@ def edge_push(q: EdgeQueue, key, seq, t_edge, deadline, model,
     return EdgeQueue(
         valid=set_at(q.valid, True), key=set_at(q.key, key),
         seq=set_at(q.seq, seq), t_edge=set_at(q.t_edge, t_edge),
-        deadline=set_at(q.deadline, deadline), model=set_at(q.model, model),
+        deadline=set_at(q.deadline, deadline),
+        abs_dl=set_at(q.abs_dl, abs_dl), model=set_at(q.model, model),
     ), ok
 
 

@@ -37,11 +37,15 @@ Modeling simplifications vs the event-driven oracle (documented per §Design):
   vectorized pass that fills free queue slots in the exact order a
   sequential push loop would.
 
-Supported policy flags: EDF-E+C routing, DEM migration, DEMS work stealing
-with trigger-time cloud queue and steal-only parking, DEMS-A sliding-window
-cloud-latency adaptation (§5.4), GEMS window rescheduling.
+Supported policies: the oracle's full registry — the §8.2 baselines
+(edge-only EDF/HPF, cloud-only CLD, EDF/SJF-E+C, the SOTA1/SOTA2
+Kalmia-and-Dedas adaptations), DEM migration, DEMS work stealing with
+trigger-time cloud queue and steal-only parking, DEMS-A sliding-window
+cloud-latency adaptation (§5.4), GEMS window rescheduling and the
+beyond-paper GEMS-B winnability budget.  Per-policy decision rules and
+the oracle↔fleet semantic deltas are documented in ``docs/POLICIES.md``;
 ``tests/test_fleet_jax.py`` checks single-edge agreement with the
-discrete-event engine.
+discrete-event engine for every policy.
 
 Policy flags are **runtime values** (:class:`PolicyParams`): the compiled
 tick program is policy-generic, so a whole scenario × policy × seed sweep
@@ -75,11 +79,13 @@ SUBSTEPS = 6      # max edge executor actions (drops/starts) per tick
 CLOUD_SLOTS = 16  # default per-edge FaaS share (engine's cloud_concurrency)
 
 
-# Fleet-supported policy names; flag sets derive from the oracle's registry
-# (core.schedulers._POLICIES) so the two simulators cannot drift apart.
-_FLEET_POLICY_NAMES = ("EDF", "EDF-E+C", "DEM", "DEMS", "DEMS-A", "GEMS",
-                       "GEMS-A")
-_FLEET_FLAGS = ("migration", "stealing", "gems", "adaptive", "use_cloud")
+# Fleet-supported policy names: the oracle's full registry.  Flag sets
+# derive from core.schedulers._POLICIES so the two simulators cannot
+# drift apart.
+_FLEET_POLICY_NAMES = tuple(_sched._POLICIES)
+_FLEET_FLAGS = ("migration", "stealing", "gems", "adaptive", "use_cloud",
+                "use_edge", "edge_feasibility_check", "edge_priority",
+                "cloud_accepts_negative", "sota1", "sota2", "gems_budget")
 _FLEET_POLICIES = {
     name: {k: v for k, v in _sched._POLICIES[name].items()
            if k in _FLEET_FLAGS}
@@ -100,6 +106,14 @@ class PolicyParams(NamedTuple):
     stealing: jax.Array         # bool[]
     gems: jax.Array             # bool[]
     use_cloud: jax.Array        # bool[]
+    use_edge: jax.Array         # bool[]  False → CLD (cloud-only routing)
+    feas_check: jax.Array       # bool[]  False → EDF/HPF unconditional insert
+    edge_prio: jax.Array        # i32[]   jax_sched.PRIO_{EDF,HPF,SJF}
+    cloud_neg_ok: jax.Array     # bool[]  SJF-E+C sends γ^C≤0 tasks anyway
+    sota1: jax.Array            # bool[]  Kalmia/D3 urgency routing (§8.2)
+    sota2: jax.Array            # bool[]  Dedas ACT routing (§8.2)
+    gems_budget: jax.Array      # bool[]  GEMS-B winnability gate
+    urgent_deadline: jax.Array  # f32[]   SOTA1 urgency threshold [ms]
     adaptive: jax.Array         # bool[]
     cooperation: jax.Array      # bool[]
     cloud_margin: jax.Array     # f32[]
@@ -122,6 +136,14 @@ class FleetPolicy:
     stealing: bool = False
     gems: bool = False
     use_cloud: bool = True
+    use_edge: bool = True
+    edge_feasibility_check: bool = True
+    edge_priority: str = "edf"            # "edf" | "hpf" | "sjf"
+    cloud_accepts_negative: bool = False
+    sota1: bool = False
+    sota2: bool = False
+    gems_budget: bool = False
+    urgent_deadline: float = 700.0        # SOTA1 urgency threshold [ms]
     cloud_margin: float = 50.0
     # DEMS-A sliding-window cloud-latency adaptation (§5.4): estimator
     # hyper-parameters mirror core.schedulers.AdaptiveEstimator.
@@ -151,11 +173,21 @@ class FleetPolicy:
 
     def params(self) -> PolicyParams:
         f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+        prio = {"edf": js.PRIO_EDF, "hpf": js.PRIO_HPF,
+                "sjf": js.PRIO_SJF}[self.edge_priority]
         return PolicyParams(
             migration=jnp.asarray(self.migration),
             stealing=jnp.asarray(self.stealing),
             gems=jnp.asarray(self.gems),
             use_cloud=jnp.asarray(self.use_cloud),
+            use_edge=jnp.asarray(self.use_edge),
+            feas_check=jnp.asarray(self.edge_feasibility_check),
+            edge_prio=jnp.asarray(prio, jnp.int32),
+            cloud_neg_ok=jnp.asarray(self.cloud_accepts_negative),
+            sota1=jnp.asarray(self.sota1),
+            sota2=jnp.asarray(self.sota2),
+            gems_budget=jnp.asarray(self.gems_budget),
+            urgent_deadline=f32(self.urgent_deadline),
             adaptive=jnp.asarray(self.adaptive),
             cooperation=jnp.asarray(self.cooperation),
             cloud_margin=f32(self.cloud_margin),
@@ -242,6 +274,10 @@ class EdgeState(NamedTuple):
     # GEMS window state
     lam: jax.Array             # i32[M]
     lam_hat: jax.Array         # i32[M]
+    # per-window arrival forecast (GEMS-B): events seen in the *previous*
+    # window, the base of the winnability check's remaining-arrival
+    # estimate (oracle _WindowState.prev_lam)
+    prev_lam: jax.Array        # i32[M]
     win_end: jax.Array         # f32[M]
     qoe_utility: jax.Array     # f32[]
     windows_met: jax.Array     # i32[M]
@@ -284,7 +320,7 @@ def init_state(prof: Profiles, adapt_window: int = 10,
         seq=jnp.zeros((), jnp.int32),
         n_success=zi, n_miss=zi, n_drop=zi, n_stolen=zi, n_edge_exec=zi,
         qos_utility=jnp.zeros(()),
-        lam=zi, lam_hat=zi, win_end=prof.qoe_window,
+        lam=zi, lam_hat=zi, prev_lam=zi, win_end=prof.qoe_window,
         qoe_utility=jnp.zeros(()), windows_met=zi,
         n_peer_out=jnp.zeros((), jnp.int32),
         n_peer_in=jnp.zeros((), jnp.int32),
@@ -470,23 +506,38 @@ def _gems_act(st: EdgeState, prof: Profiles, pp: PolicyParams, now, theta,
     GEMS-A resolves at the actual-duration model and feeds completions to
     the estimator (mirroring the oracle, where rescheduled tasks go
     through the instrumented cloud dispatch path).
+
+    GEMS-B (``pp.gems_budget``, beyond-paper) adds the winnability gate:
+    once a window is mathematically lost (per the ``prev_lam`` arrival
+    forecast) the Alg-1 flood stops, and only tasks already *doomed* on
+    the edge (projected completion past their scheduling deadline) still
+    move — a pure QoS rescue, since no QoE is recoverable this window.
     """
     m = prof.t_edge.shape[0]
     rate = st.lam_hat / jnp.maximum(st.lam, 1)
     lagging = (st.lam > 0) & (rate < prof.qoe_alpha)
+    lost = pp.gems_budget & ~js.gems_winnable(
+        st.lam, st.lam_hat, st.prev_lam, prof.qoe_alpha, now, st.win_end,
+        prof.qoe_window)
+    proj = js.projected_completions(st.eq, now,
+                                    jnp.maximum(st.busy_rem, 0.0))
+    doomed = proj > st.eq.deadline
 
     # move pending edge tasks of lagging models to the cloud (trigger=now,
-    # resolved immediately into the free slots of the finite pool).
+    # resolved immediately into the free slots of the finite pool);
+    # feasibility and success use the absolute deadline, as in the
+    # oracle's rescan/dispatch path.
     t_hat = _t_cloud_cur(st, prof, pp, now)
-    feas = now + t_hat[st.eq.model] <= st.eq.deadline
+    feas = now + t_hat[st.eq.model] <= st.eq.abs_dl
     want = (st.eq.valid & lagging[st.eq.model]
-            & (prof.gamma_c[st.eq.model] > 0) & feas) & pp.gems
+            & (prof.gamma_c[st.eq.model] > 0) & feas
+            & (~lost[st.eq.model] | doomed)) & pp.gems
     move = want & _free_slot_gate(st.cloud_busy_until, now, want)
     # slots are *held* for the actual duration either way; only the
     # outcome model differs between GEMS (estimate) and GEMS-A (actual)
     hold = cloud_frac * prof.t_cloud[st.eq.model] + theta + bw_pen
     act = jnp.where(pp.adaptive, hold, prof.t_cloud[st.eq.model])
-    success = move & (now + act <= st.eq.deadline)
+    success = move & (now + act <= st.eq.abs_dl)
     add = functools.partial(jax.ops.segment_sum, num_segments=m)
     util = jnp.where(success, prof.gamma_c[st.eq.model],
                      jnp.where(move, -prof.cost_c[st.eq.model], 0.0)).sum()
@@ -513,6 +564,9 @@ def _gems_act(st: EdgeState, prof: Profiles, pp: PolicyParams, now, theta,
     return st._replace(
         lam=jnp.where(expired, 0, st.lam),
         lam_hat=jnp.where(expired, 0, st.lam_hat),
+        # closing window's event count becomes the next window's arrival
+        # forecast (GEMS-B winnability base)
+        prev_lam=jnp.where(expired, st.lam, st.prev_lam),
         win_end=jnp.where(expired, st.win_end + prof.qoe_window, st.win_end),
         qoe_utility=st.qoe_utility + qoe,
         windows_met=st.windows_met + met.astype(jnp.int32))
@@ -544,7 +598,9 @@ def _offer_cloud_many(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
         t_cur = _t_cloud_cur(st, prof, pp, now)
     t_hat = t_cur[models]
     feasible = now + t_hat <= deadlines
-    negative = prof.gamma_c[models] <= 0
+    # SJF-E+C (cloud_neg_ok) sends γ^C≤0 tasks to the cloud anyway; every
+    # other policy rejects (or, stealing, parks) them
+    negative = (prof.gamma_c[models] <= 0) & ~pp.cloud_neg_ok
     trig_steal = jnp.where(negative, deadlines - t_edges,
                            jnp.maximum(now, deadlines - t_hat
                                        - pp.cloud_margin))
@@ -593,34 +649,69 @@ def _offer_cloud_many(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
 
 def _route_arrival(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
                    model, arrive, load_mult) -> EdgeState:
-    """Task-scheduler routing for one arriving task (§5.1–5.2).
+    """Task-scheduler routing for one arriving task (§5.1–5.2, §8.2).
 
     ``load_mult`` is the edge's speed factor: the effective edge latency
     ``load_mult·t_edge`` is stored on the queues, so feasibility, JIT
     checks, stealing and execution all see the heterogeneous speed —
     matching the oracle compiler, which folds it into the model table.
 
+    Every routing rule of the oracle registry is a runtime branch of the
+    same program: the queue position comes from the policy's priority key
+    (EDF deadline / HPF utility rate / SJF execution time), ``use_edge``
+    off sends everything cloud-ward (CLD), ``feas_check`` off inserts
+    unconditionally (edge-only EDF/HPF; the executor's JIT check culls
+    late heads), SOTA1 retries infeasible non-urgent tasks with a 10 %
+    *scheduling-only* deadline buffer, and SOTA2 admits a
+    single-violation insert only when it lowers the queue's mean
+    completion time (Dedas ACT rule).
+
     Migration victims and the redirected arrival go to the cloud through
     *one* vectorized :func:`_offer_cloud_many` call (victims in queue-slot
     order, then the arrival — the same admission order as the old
-    sequential offer loop).
+    sequential offer loop); cloud offers always use the *absolute*
+    deadline.
     """
-    deadline = now + prof.deadline[model]
+    abs_dl = now + prof.deadline[model]
     te = prof.t_edge[model] * load_mult
-    feasible = js.insert_feasible(st.eq, now, st.busy_rem, deadline, te,
-                                  deadline)
-    victims = js.victim_mask(st.eq, now, st.busy_rem, deadline, te)
+    key0 = js.edge_priority_key(pp.edge_prio, abs_dl, te,
+                                prof.gamma_e[model])
+    feas0 = js.insert_feasible(st.eq, now, st.busy_rem, key0, te, abs_dl)
+    victims = js.victim_mask(st.eq, now, st.busy_rem, key0, te)
+
+    # SOTA1 (Kalmia+D3): an infeasible non-urgent task retries with a
+    # 10 % deadline buffer; success is still judged at abs_dl, so bought
+    # slack can turn into an edge miss — the adaptation's known cost.
+    sched1 = abs_dl + 0.1 * prof.deadline[model]
+    feas1 = js.insert_feasible(st.eq, now, st.busy_rem, sched1, te, sched1)
+    take_ext = (pp.sota1 & ~feas0 & feas1
+                & (prof.deadline[model] > pp.urgent_deadline))
+
+    # SOTA2 (Dedas): violations caused by the insert — none: insert;
+    # more than one: cloud; exactly one: keep the schedule whose mean
+    # completion time is lower (inserting nearly always raises it).
+    nviol = victims.sum() + (~feas0).astype(jnp.int32)
+    act_ok = js.act_improves(st.eq, now, st.busy_rem, key0, te)
+    sota2_ok = (nviol == 0) | ((nviol == 1) & feas0 & act_ok)
+
     t_cur = _t_cloud_cur(st, prof, pp, now)
     migrate_ok = js.migration_decision(
-        st.eq, victims, now, model, deadline, prof.gamma_e,
+        st.eq, victims, now, model, abs_dl, prof.gamma_e,
         prof.gamma_c, t_cur)
-    insert_edge = arrive & feasible & jnp.where(
-        pp.migration, ~victims.any() | migrate_ok, True)
+    plain_ok = feas0 & jnp.where(pp.migration,
+                                 ~victims.any() | migrate_ok, True)
+    edge_ok = jnp.where(pp.sota1, feas0 | take_ext,
+                        jnp.where(pp.sota2, sota2_ok,
+                                  jnp.where(pp.feas_check, plain_ok,
+                                            True)))
+    insert_edge = arrive & pp.use_edge & edge_ok
     vic = victims & insert_edge & pp.migration
     to_cloud = arrive & ~insert_edge
+    key = jnp.where(take_ext, sched1, key0)
+    sched_dl = jnp.where(take_ext, sched1, abs_dl)
 
     models = jnp.concatenate([st.eq.model, jnp.asarray(model)[None]])
-    dls = jnp.concatenate([st.eq.deadline, jnp.asarray(deadline)[None]])
+    dls = jnp.concatenate([st.eq.abs_dl, jnp.asarray(abs_dl)[None]])
     tes = jnp.concatenate([st.eq.t_edge, jnp.asarray(te)[None]])
     offer = jnp.concatenate([vic, jnp.asarray(to_cloud)[None]])
     st, pushed = _offer_cloud_many(st, prof, pp, now, models, dls, tes,
@@ -628,11 +719,15 @@ def _route_arrival(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
     add = functools.partial(jax.ops.segment_sum,
                             num_segments=prof.t_edge.shape[0])
     eq = js.edge_remove(st.eq, vic)
-    eq, _ = js.edge_push(eq, deadline, st.seq, te, deadline, model,
-                         enable=insert_edge)
+    eq, ok = js.edge_push(eq, key, st.seq, te, sched_dl, model,
+                          enable=insert_edge, abs_dl=abs_dl)
+    # a full edge queue loses the task (edge-only policies cannot shed to
+    # the cloud): account it as a drop so tasks stay conserved
+    lost = (insert_edge & ~ok).astype(jnp.int32)
     return st._replace(
         eq=eq, seq=st.seq + arrive.astype(jnp.int32),
-        n_drop=st.n_drop + add((offer & ~pushed).astype(jnp.int32), models))
+        n_drop=st.n_drop.at[model].add(lost)
+        + add((offer & ~pushed).astype(jnp.int32), models))
 
 
 def _edge_execute(st: EdgeState, prof: Profiles, pp: PolicyParams, now, dt,
@@ -681,7 +776,10 @@ def _edge_execute(st: EdgeState, prof: Profiles, pp: PolicyParams, now, dt,
         eq_after, head_idx, found = js.edge_pop_head(s.eq)
         start_head = idle & ~can_steal & found
         run_model = jnp.where(can_steal, smodel, s.eq.model[head_idx])
-        run_dl = jnp.where(can_steal, sdl, s.eq.deadline[head_idx])
+        # success is judged at the *absolute* deadline (cloud-queue
+        # deadlines already are; SOTA1's scheduling extension must not
+        # turn a late finish into a success)
+        run_dl = jnp.where(can_steal, sdl, s.eq.abs_dl[head_idx])
         run_te = jnp.where(can_steal, ste, s.eq.t_edge[head_idx])
         start = can_steal | start_head
         act = edge_frac * run_te
@@ -817,6 +915,7 @@ def peer_offload(fs: EdgeState, now, slack_ms, max_transfers: int, *,
             seq=eq.seq.at[dst, slot].set(fs.seq[dst]),
             t_edge=eq.t_edge.at[dst, slot].set(src_eq.t_edge[vi]),
             deadline=eq.deadline.at[dst, slot].set(src_eq.deadline[vi]),
+            abs_dl=eq.abs_dl.at[dst, slot].set(src_eq.abs_dl[vi]),
             model=eq.model.at[dst, slot].set(src_eq.model[vi]))
         new_eq = jax.tree.map(lambda a, b: jnp.where(ok, a, b), moved, eq)
         oki = ok.astype(jnp.int32)

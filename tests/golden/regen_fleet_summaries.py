@@ -21,7 +21,7 @@ import sys
 from repro.scenarios import fleet_summary, get, names, run_scenario_fleet
 
 GOLDEN_DURATION_MS = 45_000.0
-POLICIES = ("DEMS", "GEMS-COOP")
+POLICIES = ("DEMS", "GEMS-COOP", "SJF-E+C", "GEMS-B")
 REL_TOL = 5e-3
 ABS_TOL = 1.5
 

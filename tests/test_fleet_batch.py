@@ -28,7 +28,7 @@ from repro.sim.fleet_jax import (FleetPolicy, run_fleet, run_fleet_batch,
 
 GOLDEN = pathlib.Path(__file__).parent / "golden" / "fleet_summaries.json"
 GOLDEN_DURATION_MS = 45_000.0
-GOLDEN_POLICIES = ("DEMS", "GEMS-COOP")
+GOLDEN_POLICIES = ("DEMS", "GEMS-COOP", "SJF-E+C", "GEMS-B")
 
 
 # ---------------------------------------------------------------------------
@@ -61,6 +61,25 @@ def test_gems_a_coop_runs_end_to_end():
     spec = get("hetero-edges", duration_ms=30_000.0)
     s = fleet_summary(run_scenario_fleet(spec, "GEMS-A-COOP"))
     assert s["completed"] > 0
+
+
+def test_from_name_covers_full_oracle_registry():
+    """Every oracle policy (plus its -COOP variant) resolves to a
+    FleetPolicy whose flags mirror core.schedulers._POLICIES — the fleet
+    coverage matrix has no more `—` cells."""
+    from repro.core.schedulers import ALL_POLICIES, make_policy
+
+    for name in ALL_POLICIES:
+        oracle = make_policy(name)
+        for fleet_name in (name, name + "-COOP"):
+            pol = FleetPolicy.from_name(fleet_name)
+            for flag in ("migration", "stealing", "gems", "adaptive",
+                         "use_cloud", "use_edge", "edge_feasibility_check",
+                         "edge_priority", "cloud_accepts_negative",
+                         "sota1", "sota2", "gems_budget"):
+                got, want = getattr(pol, flag), getattr(oracle, flag)
+                assert got == want, (fleet_name, flag, got, want)
+            assert pol.cooperation is fleet_name.endswith("-COOP")
 
 
 # ---------------------------------------------------------------------------

@@ -373,6 +373,59 @@ def test_sched_argext_ties_break_to_first_index():
         assert int(idx[0]) == 1
 
 
+def _fleet_hot_path_cases(rng):
+    """Score/mask tensors shaped and distributed like the fleet tick's
+    three selection call sites (see repro.sim.fleet_jax):
+
+    * ``steal_select``  — (Qc=64,) per edge: rank scores from a small tied
+      set, steal-only candidates offset by +1e12;
+    * ``export_select`` — (Q=32,) per edge: slack scores, empty slots at
+      +POS, sparse candidate masks;
+    * ``peer_offload``  — (E,) across the fleet: queue loads with invalid
+      edges parked at +POS, down to the 2-edge minimum.
+    """
+    from repro.kernels.sched_ops import POS
+
+    ranks = np.asarray([0.57, 0.43, 0.35, -0.012])   # Table-1 steal ranks
+    for e in (1, 4, 8):
+        score = ranks[rng.integers(0, 4, (e, 64))] \
+            + np.where(rng.random((e, 64)) < 0.3, 1e12, 0.0)
+        yield True, score.astype(np.float32), rng.random((e, 64)) < 0.5
+        slack = rng.normal(0, 400.0, (e, 32))
+        slack[rng.random((e, 32)) < 0.4] = POS       # empty queue slots
+        yield False, slack.astype(np.float32), rng.random((e, 32)) < 0.3
+    for e in (2, 3, 8):
+        load = np.abs(rng.normal(500.0, 300.0, (1, e)))
+        load[rng.random((1, e)) < 0.2] = POS         # padded edges
+        yield False, load.astype(np.float32), np.ones((1, e), bool)
+
+
+def test_sched_argext_interpret_parity_on_fleet_hot_path_shapes():
+    """ROADMAP close-out: the Pallas kernel body (interpret mode, i.e.
+    the exact Mosaic lowering input) agrees with the jnp reference the
+    CPU hot path traces, over the fleet's *actual* call shapes and score
+    distributions — sentinel offsets, ±POS fills, tied ranks, all-masked
+    rows included."""
+    from repro.kernels import sched_ops
+
+    rng = np.random.default_rng(0xf1ee7)
+    n_cases = 0
+    for is_max, scores, mask in _fleet_hot_path_cases(rng):
+        if n_cases == 0:
+            mask = np.zeros_like(mask)               # all-ineligible row
+        got_i, got_v = sched_ops.masked_argext(
+            jnp.asarray(scores), jnp.asarray(mask), is_max=is_max,
+            interpret=True)
+        want_i, want_v = ref.ref_masked_argext(
+            jnp.asarray(scores), jnp.asarray(mask), is_max=is_max)
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i),
+                                      err_msg=f"case {n_cases}")
+        np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v),
+                                      err_msg=f"case {n_cases}")
+        n_cases += 1
+    assert n_cases == 9
+
+
 def test_sched_argext_nd_batch_shapes():
     from repro.kernels import sched_ops
 

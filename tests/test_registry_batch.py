@@ -38,8 +38,10 @@ from repro.sim.fleet_jax import (FleetPolicy, FleetResult, Profiles,
 
 MODELS = [TABLE1[n] for n in PASSIVE]
 SWEEP_DURATION_MS = 10_000.0
-SWEEP_POLICIES = ("DEMS-A", "GEMS-COOP")
+SWEEP_POLICIES = ("DEMS-A", "GEMS-B-COOP")
 SWEEP_SEEDS = (0, 1)
+# the six policies this PR adds to the fleet backend (README matrix)
+NEW_POLICIES = ("HPF", "CLD", "SJF-E+C", "SOTA1", "SOTA2", "GEMS-B")
 
 
 # ---------------------------------------------------------------------------
@@ -57,6 +59,28 @@ def test_registry_batch_matches_per_scenario_loop_exactly():
         want = fleet_summary(run_scenario_fleet(spec, row["policy"]))
         got = {k: row[k] for k in want}
         assert got == want, (row["scenario"], row["policy"], row["seed"])
+
+
+def test_registry_sweep_runs_full_policy_matrix_in_one_program():
+    """All six newly-covered policies (plus DEMS as the reference) sweep
+    through ``run_registry_sweep`` — a *single* compiled program, policy
+    flags being runtime ``PolicyParams`` — and each run's summary equals
+    its standalone ``run_fleet`` loop exactly."""
+    pols = NEW_POLICIES + ("DEMS",)
+    rows = run_registry_sweep(("baseline", "cloud-crunch"), pols, (0,),
+                              duration_ms=SWEEP_DURATION_MS)
+    assert len(rows) == 2 * len(pols)
+    for row in rows:
+        spec = get(row["scenario"], duration_ms=SWEEP_DURATION_MS,
+                   seed=row["seed"])
+        want = fleet_summary(run_scenario_fleet(spec, row["policy"]))
+        got = {k: row[k] for k in want}
+        assert got == want, (row["scenario"], row["policy"])
+    # the matrix really exercised distinct decision rules: cloud-only CLD
+    # must differ from edge-only HPF on the same mission
+    by = {(r["scenario"], r["policy"]): r for r in rows}
+    assert by[("baseline", "CLD")]["qos_utility"] != \
+        by[("baseline", "HPF")]["qos_utility"]
 
 
 def test_registry_batch_edge_flattened_matches_loop_exactly():
