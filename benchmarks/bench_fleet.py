@@ -5,7 +5,7 @@
     PYTHONPATH=src python benchmarks/bench_fleet.py --quick \
         --check BENCH_fleet.json                               # CI gate
 
-Two measurements:
+Three measurements:
 
 * **tick throughput** — the steady-workload fleet program's edge-ticks
   per second, with compile time split out (first call − steady call);
@@ -15,7 +15,12 @@ Two measurements:
   (``run_registry_sweep``: a single jit for the whole sweep).  The
   reported ``speedup`` is the headline number of the one-program-sweeps
   PR (target ≥2×); both phases start from cleared compilation caches so
-  each pays its honest compile bill.
+  each pays its honest compile bill;
+* **flight-recorder cost** — trace-on vs trace-off ticks/sec (< 15 %
+  overhead target), XLA backend-compile accounting, a retrace guard on
+  the policy-generic tick program, and the paper's tail scoreboard
+  (p50/p95/p99 deadline slack & completion latency, per-task-type QoE
+  frequencies) for rush-hour and cloud-crunch.
 
 ``BENCH_fleet.json`` keeps one section per mode (``quick`` / ``full``),
 so a committed quick-mode baseline gates CI runs apples-to-apples while
@@ -121,6 +126,74 @@ def bench_sweep(quick: bool) -> dict:
         mismatches)
 
 
+def bench_trace(quick: bool) -> dict:
+    """Flight-recorder cost + the paper's tail scoreboard.
+
+    Measures trace-on vs trace-off ticks/sec on the same steady
+    workload as :func:`bench_throughput` (< 15 % overhead target — the
+    trace-off program is bit-identical to pre-recorder, so only the
+    trace-on number can move), counts real XLA backend compiles while
+    both programs build, and verifies the tick program stayed
+    policy-generic (one jit trace per cached program).  Also records
+    p50/p95/p99 deadline-slack / completion-latency and per-task-type
+    QoE frequencies for the rush-hour and cloud-crunch scenarios.
+    """
+    from repro.core.task import PASSIVE, TABLE1
+    from repro.obs import TraceSpec, metrics
+    from repro.obs.prof import (CompileCounter, fleet_compile_stats,
+                                reset_fleet_programs)
+    from repro.scenarios import get, run_scenario_fleet
+    from repro.sim.fleet_jax import default_signals, run_fleet
+
+    models = [TABLE1[n] for n in PASSIVE]
+    n_edges = 8 if quick else 16
+    duration = 30_000.0 if quick else 120_000.0
+    signals = default_signals(len(models), n_edges=n_edges,
+                              duration_ms=duration)
+    tspec = TraceSpec.full()
+    reset_fleet_programs()
+    jax.clear_caches()
+    off = lambda: run_fleet(models, "DEMS-A", signals)          # noqa: E731
+    on = lambda: run_fleet(models, "DEMS-A", signals,           # noqa: E731
+                           trace=tspec)
+    with CompileCounter() as cc:
+        _timed(off)
+        _timed(on)
+    reps = 3 if quick else 5
+    off_s = min(_timed(off) for _ in range(reps))
+    on_s = min(_timed(on) for _ in range(reps))
+    stats = fleet_compile_stats()
+    n_ticks = int(signals.times.shape[0])
+
+    tails = {}
+    tail_duration = 15_000.0 if quick else 45_000.0
+    for sc in ("rush-hour", "cloud-crunch"):
+        spec = get(sc, duration_ms=tail_duration)
+        res = run_scenario_fleet(spec, "DEMS-A", trace=tspec)
+        metrics.check_conservation(res.counters)
+        tm = metrics.tail_metrics(res.counters, tspec,
+                                  list(spec.model_names))
+        tails[sc] = dict(
+            hit_rate=round(tm["hit_rate"], 4),
+            slack_ms={p: round(v, 1) for p, v in tm["slack_ms"].items()},
+            latency_ms={p: round(v, 1)
+                        for p, v in tm["latency_ms"].items()},
+            qoe_frequency={k: round(v, 4)
+                           for k, v in tm["qoe_frequency"].items()},
+            drops_by_cause=tm["drops_by_cause"])
+    return dict(
+        n_edges=n_edges, n_ticks=n_ticks, policy="DEMS-A",
+        ticks_per_sec_off=round(n_ticks / off_s, 1),
+        ticks_per_sec_on=round(n_ticks / on_s, 1),
+        overhead_frac=round(on_s / off_s - 1.0, 4),
+        backend_compiles=cc.count,
+        compile_secs=round(cc.total_secs, 2),
+        programs=stats.programs,
+        max_traces_per_program=stats.max_traces_per_program,
+        policy_generic=stats.policy_generic,
+        tails=tails)
+
+
 def check(report: dict, baseline_path: pathlib.Path,
           tolerance: float) -> int:
     mode = "quick" if report["quick"] else "full"
@@ -141,6 +214,15 @@ def check(report: dict, baseline_path: pathlib.Path,
         print("FAIL: one-program sweep summaries diverge from the "
               "per-scenario loop")
         return 1
+    trace = report.get("trace")
+    if trace is not None:
+        print(f"trace overhead: {trace['overhead_frac']:+.1%} "
+              f"({trace['ticks_per_sec_on']} on vs "
+              f"{trace['ticks_per_sec_off']} off ticks/sec)")
+        if not trace["policy_generic"]:
+            print("FAIL: tick program retraced across policies "
+                  "(PolicyParams leaked into a static argument)")
+            return 1
     print("OK")
     return 0
 
@@ -169,7 +251,8 @@ def main() -> None:
         jax=jax.__version__, backend=jax.default_backend(),
         devices=jax.device_count(), cpus=os.cpu_count(),
         throughput=bench_throughput(args.quick),
-        sweep=bench_sweep(args.quick))
+        sweep=bench_sweep(args.quick),
+        trace=bench_trace(args.quick))
     print(json.dumps(report, indent=1))
     if args.check is not None:
         sys.exit(check(report, args.check, args.tolerance))

@@ -106,16 +106,18 @@ def main_fleet(quick: bool = False, rows: Rows | None = None) -> dict:
 def adaptation_trace(spec, policy: str, seed: int = 7) -> dict:
     """Fig. 12-style adaptation dynamics from the fleet t̂ telemetry.
 
-    Runs one scenario with ``record_trace`` and reduces the per-tick
+    Runs one scenario with ``trace=TraceSpec(t_hat=True)`` (the
+    flight recorder) and reduces the per-tick
     ``t_hat`` trace ``[T, E, M]`` (DEMS-A's adapted cloud-latency
     estimate) to inflation statistics against the static Table-1 t̂.
     """
     import dataclasses as dc
 
+    from repro.obs import TraceSpec
     from repro.scenarios import run_scenario_fleet
 
     res = run_scenario_fleet(dc.replace(spec, seed=seed), policy,
-                             record_trace=True)
+                             trace=TraceSpec(t_hat=True))
     t_hat = np.asarray(res.t_hat)                      # [T, E, M]
     static = np.asarray([m.t_cloud for m in spec.models])
     excess = t_hat - static[None, None, :]

@@ -1,6 +1,7 @@
 """Paper Fig. 12: adaptation dynamics — t̂ vs θ(t) overlay, per model.
 
-Runs a θ-shaped mission under an adaptive policy with ``record_trace``
+Runs a θ-shaped mission under an adaptive policy with the flight
+recorder (``trace=TraceSpec(t_hat=True)``)
 and plots the scheduler's per-tick adapted cloud-latency estimate
 t̂_m(t) (``FleetResult.t_hat``, carried out of the tick scan) against
 the scenario's θ(t) waveform — one small-multiple panel per model, all
@@ -51,10 +52,12 @@ def trace_spec(duration_ms: float):
 
 def compute(spec, policy: str, seed: int, dt: float = 25.0) -> dict:
     """t̂ trace [T, M] (edge 0), θ trace [T], static t̂ and times [s]."""
+    from repro.obs import TraceSpec
     from repro.scenarios import compile_fleet, run_scenario_fleet
 
     spec = dataclasses.replace(spec, seed=seed)
-    res = run_scenario_fleet(spec, policy, dt=dt, record_trace=True)
+    res = run_scenario_fleet(spec, policy, dt=dt,
+                             trace=TraceSpec(t_hat=True))
     sig = compile_fleet(spec, dt)
     return dict(
         times=np.asarray(sig.times) / 1e3,

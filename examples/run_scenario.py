@@ -10,7 +10,11 @@
 ``--cooperation`` enables the cross-edge peer-offload exchange (fleet
 backend only; the oracle runs edges as silos).  Passing more than one
 ``--seeds`` value runs the fleet backend's whole seed sweep as a single
-compiled program (``run_fleet_batch``).
+compiled program (``run_fleet_batch``).  ``--trace`` turns on the
+flight recorder (fleet backend, single run) and prints the tail
+scoreboard — p50/p95/p99 deadline slack and completion latency,
+per-task-type QoE success frequencies, drops by cause — plus the task
+conservation residual (always 0).
 """
 from __future__ import annotations
 
@@ -36,6 +40,9 @@ def main() -> None:
     ap.add_argument("--seeds", nargs="*", type=int, default=None,
                     help=">1 seed: one-jit batched fleet sweep")
     ap.add_argument("--dt", type=float, default=25.0)
+    ap.add_argument("--trace", action="store_true",
+                    help="flight recorder: tail metrics + conservation "
+                         "ledger (fleet backend)")
     args = ap.parse_args()
 
     overrides = {}
@@ -76,12 +83,39 @@ def main() -> None:
             return
         if args.seeds:
             spec = get(args.scenario, seed=args.seeds[0], **overrides)
-        final = run_scenario_fleet(spec, pol, dt=args.dt)
+        tspec = None
+        if args.trace:
+            from repro.obs import TraceSpec
+            tspec = TraceSpec.full()
+        res = run_scenario_fleet(spec, pol, dt=args.dt, trace=tspec)
+        final = res.final if tspec else res
         s = fleet_summary(final)
         print(f"fleet    tasks={s['completed']} "
               f"({100 * s['completion_rate']:.1f}% of settled) "
               f"QoS={s['qos_utility']:.0f} QoE={s['qoe_utility']:.0f} "
               f"stolen={s['stolen']} peer_offloaded={s['peer_offloaded']}")
+        if tspec:
+            import numpy as np
+
+            from repro.obs import metrics
+            tm = metrics.tail_metrics(res.counters, tspec,
+                                      list(spec.model_names))
+            resid = metrics.conservation_ledger(
+                res.counters)["residual"]
+            print(f"trace    hit_rate={100 * tm['hit_rate']:.1f}% "
+                  f"slack p50/p95/p99 = "
+                  f"{tm['slack_ms']['p50']:.0f}/"
+                  f"{tm['slack_ms']['p95']:.0f}/"
+                  f"{tm['slack_ms']['p99']:.0f} ms  latency = "
+                  f"{tm['latency_ms']['p50']:.0f}/"
+                  f"{tm['latency_ms']['p95']:.0f}/"
+                  f"{tm['latency_ms']['p99']:.0f} ms")
+            print(f"         QoE freq: " + "  ".join(
+                f"{k}={100 * v:.0f}%"
+                for k, v in tm['qoe_frequency'].items()))
+            print(f"         drops: {tm['drops_by_cause']}  "
+                  f"conservation residual max="
+                  f"{int(np.abs(resid).max())}")
 
 
 if __name__ == "__main__":

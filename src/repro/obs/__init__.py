@@ -1,0 +1,21 @@
+"""Observability: flight recorder, QoS/QoE tail metrics, profiling hooks.
+
+Three layers (see ``docs/OBSERVABILITY.md``):
+
+* :mod:`repro.obs.trace` — the in-program decision-trace schema
+  (:class:`TraceSpec`, :class:`TickCounters`) tapped out of the compiled
+  fleet tick scan by :mod:`repro.sim.fleet_jax`;
+* :mod:`repro.obs.metrics` — host-side aggregation: QoS/QoE time
+  series, per-task-type success frequencies (the paper's QoE metric),
+  p50/p95/p99 deadline-slack and completion-latency percentiles, the
+  per-tick conservation ledger, and JSON/CSV/Perfetto export;
+* :mod:`repro.obs.prof` — ``jax.profiler`` trace capture plus
+  compile/retrace accounting for the policy-generic tick program.
+"""
+from repro.obs.trace import (EVENT_FIELDS, TickCounters, TraceSpec,
+                             hist_counts, resolve_spec, zero_counters)
+
+__all__ = [
+    "EVENT_FIELDS", "TickCounters", "TraceSpec", "hist_counts",
+    "resolve_spec", "zero_counters",
+]

@@ -1,0 +1,181 @@
+"""Flight-recorder trace layer: what the compiled fleet tick records.
+
+The fleet simulator's tick scan (:mod:`repro.sim.fleet_jax`) is one
+compiled program; the only way to see *why* a policy wins — which ticks
+dropped, stole, migrated, or missed deadlines — is to tap the scan's
+carry and emit extra outputs.  This module defines that tap:
+
+* :class:`TraceSpec` — a frozen, hashable request for which streams to
+  record.  It is part of the compiled program's cache key, so the
+  trace-off program is *literally the same executable* as before the
+  flight recorder existed (zero cost, bit-identical results), and every
+  trace computation is read-only on the scheduler state (trace-on runs
+  produce bit-identical summaries; ``tests/test_obs.py`` pins both).
+* :class:`TickCounters` — the dense per-tick decision counters, one
+  value per (tick, edge) cell [fleet axis added by ``vmap``, tick axis
+  by ``scan``, replica axis by the batch paths].  Event counters are
+  zeroed on ``valid=False`` (padded) cells; *level* gauges (queue
+  depths, slot occupancy) carry the reverted pre-tick state instead, so
+  the conservation ledger ``arrived = settled + in-flight`` stays exact
+  through a padded tail.
+* histogram helpers — deadline slack and completion latency are
+  recorded as fixed-bin histograms (``hist_bins`` buckets over
+  ``[0, hist_max_ms)``, last bucket catches overflow), the dense-tensor
+  answer to "per-task percentiles" that needs no per-task storage:
+  p50/p95/p99 come out host-side with bin-width resolution
+  (:func:`repro.obs.metrics.hist_percentiles`).
+
+Nothing here imports the simulator — the dependency points the other
+way (``fleet_jax`` imports the spec and counter schema), keeping the
+recorder reusable by any scan-shaped program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """What the fleet tick scan should record (hashable → cache key).
+
+    ``t_hat``
+        the per-tick adapted cloud-latency estimate ``adapt.current``
+        (the legacy ``record_trace=True`` stream; shape ``[T, E, M]``
+        from :func:`~repro.sim.fleet_jax.run_fleet`, ``[R, T, E, M]``
+        from the batch paths).
+    ``counters``
+        the full :class:`TickCounters` decision stream.
+    ``hist_bins`` / ``hist_max_ms``
+        resolution of the slack/latency histograms: ``hist_bins``
+        equal buckets over ``[0, hist_max_ms)`` ms, the last bucket
+        absorbing anything larger.
+    """
+
+    t_hat: bool = False
+    counters: bool = False
+    hist_bins: int = 32
+    hist_max_ms: float = 4_000.0
+
+    @property
+    def enabled(self) -> bool:
+        return self.t_hat or self.counters
+
+    @classmethod
+    def off(cls) -> "TraceSpec":
+        return cls()
+
+    @classmethod
+    def full(cls, **kw) -> "TraceSpec":
+        return cls(t_hat=True, counters=True, **kw)
+
+
+class TickCounters(NamedTuple):
+    """Per-(tick, edge) decision counters emitted by the tick scan.
+
+    Scalars are ``i32[]`` per edge before stacking; the batch paths
+    deliver ``[R, T, E]`` (``[T, E]`` from :func:`run_fleet`), per-model
+    leaves ``[…, M]`` and histograms ``[…, B]``.  Event counters count
+    *this tick's* decisions; ``eq_depth``/``cq_depth``/``slots_busy``
+    and ``valid`` are end-of-tick gauges.  See ``docs/OBSERVABILITY.md``
+    for the full glossary.
+    """
+
+    # --- routing / admission events -----------------------------------
+    arrivals: jax.Array        # tasks arriving at this edge
+    admit_edge: jax.Array      # inserted into the edge queue
+    admit_cloud: jax.Array     # pushed onto the cloud queue (incl. victims)
+    migrated: jax.Array        # §5.2 migration victims evicted cloud-ward
+    # --- cloud pool events --------------------------------------------
+    cloud_dispatch: jax.Array  # matured tasks dispatched into a FaaS slot
+    pool_blocked: jax.Array    # matured but parked on a saturated pool
+    # --- GEMS window events -------------------------------------------
+    gems_moved: jax.Array      # Alg-1 reschedules moved to the cloud
+    gems_withheld: jax.Array   # blocked purely by the GEMS-B winnability gate
+    # --- edge executor events -----------------------------------------
+    edge_exec: jax.Array       # tasks started on the edge executor
+    # --- drops by cause -----------------------------------------------
+    drop_infeasible: jax.Array  # JIT/feasibility drops (edge head, cloud
+    #                             dispatch re-check, rejected cloud offers)
+    drop_unstolen: jax.Array    # steal-only parked tasks that expired (§5.3)
+    drop_qfull: jax.Array       # lost to a full edge or cloud queue
+    # --- cross-edge events (filled between ticks by the scan body) ----
+    peer_out: jax.Array        # tasks exported to a peer edge
+    peer_in: jax.Array         # tasks imported from a peer edge
+    # --- per-model outcome deltas (exactly the summary stats' ticks) --
+    hit: jax.Array             # i32[M] deadline hits (n_success delta)
+    miss: jax.Array            # i32[M] deadline misses (n_miss delta)
+    drop: jax.Array            # i32[M] drops, all causes (n_drop delta)
+    stolen: jax.Array          # i32[M] §5.3 steals (n_stolen delta)
+    # --- utility deltas -----------------------------------------------
+    qos: jax.Array             # f32[] QoS utility earned this tick
+    qoe: jax.Array             # f32[] QoE utility earned this tick
+    # --- end-of-tick gauges -------------------------------------------
+    eq_depth: jax.Array        # edge-queue occupancy
+    cq_depth: jax.Array        # cloud-queue occupancy
+    slots_busy: jax.Array      # FaaS slots still busy at tick end
+    valid: jax.Array           # bool[] this (tick, edge) cell is live
+    # --- per-task tail evidence ---------------------------------------
+    slack_hist: jax.Array      # i32[B] deadline slack of successful tasks
+    latency_hist: jax.Array    # i32[B] arrival→completion latency, successes
+
+
+# TickCounters leaves that are per-tick *event* counts: zeroed on padded
+# (valid=False) cells.  Everything else is a gauge or outcome delta that
+# must keep the reverted state's value for exact ledger accounting.
+EVENT_FIELDS = (
+    "arrivals", "admit_edge", "admit_cloud", "migrated", "cloud_dispatch",
+    "pool_blocked", "gems_moved", "gems_withheld", "edge_exec",
+    "drop_infeasible", "drop_unstolen", "drop_qfull", "peer_out", "peer_in",
+    "slack_hist", "latency_hist")
+
+
+def zero_counters(n_models: int, spec: TraceSpec) -> TickCounters:
+    """A fresh all-zero per-edge accumulator for one tick."""
+    zi = jnp.zeros((), jnp.int32)
+    zm = jnp.zeros(n_models, jnp.int32)
+    zb = jnp.zeros(spec.hist_bins, jnp.int32)
+    return TickCounters(
+        arrivals=zi, admit_edge=zi, admit_cloud=zi, migrated=zi,
+        cloud_dispatch=zi, pool_blocked=zi, gems_moved=zi, gems_withheld=zi,
+        edge_exec=zi, drop_infeasible=zi, drop_unstolen=zi, drop_qfull=zi,
+        peer_out=zi, peer_in=zi,
+        hit=zm, miss=zm, drop=zm, stolen=zm,
+        qos=jnp.zeros(()), qoe=jnp.zeros(()),
+        eq_depth=zi, cq_depth=zi, slots_busy=zi,
+        valid=jnp.zeros((), bool),
+        slack_hist=zb, latency_hist=zb)
+
+
+def hist_counts(values: jax.Array, mask: jax.Array,
+                spec: TraceSpec) -> jax.Array:
+    """Bucket ``values[mask]`` into the spec's fixed bins → ``i32[B]``.
+
+    Bin ``k`` covers ``[k·w, (k+1)·w)`` with ``w = hist_max_ms / bins``;
+    negatives clamp into bin 0 and overflow into the last bin, so the
+    total count is always ``mask.sum()`` (percentile math stays exact on
+    counts, approximate only in value, by at most one bin width).
+    """
+    values = jnp.atleast_1d(values)
+    mask = jnp.atleast_1d(mask)
+    scale = spec.hist_bins / spec.hist_max_ms
+    idx = jnp.clip((values * scale).astype(jnp.int32), 0,
+                   spec.hist_bins - 1)
+    return jax.ops.segment_sum(mask.astype(jnp.int32), idx,
+                               num_segments=spec.hist_bins)
+
+
+def resolve_spec(trace, record_trace: bool = False) -> TraceSpec:
+    """Normalize the public API's trace arguments to one TraceSpec.
+
+    ``record_trace=True`` is the deprecated pre-flight-recorder alias
+    for ``TraceSpec(t_hat=True)``; an explicit ``trace`` wins.
+    """
+    if trace is None:
+        return TraceSpec(t_hat=True) if record_trace else TraceSpec()
+    if not isinstance(trace, TraceSpec):
+        raise TypeError(f"trace must be a TraceSpec, got {type(trace)!r}")
+    return trace

@@ -82,13 +82,16 @@ def run_scenario_oracle(spec: ScenarioSpec, policy: str, *,
 
 def run_scenario_fleet(spec: ScenarioSpec, policy, *, dt: float = 25.0,
                        edge_frac: float = 0.62, cloud_frac: float = 0.80,
-                       mesh=None, record_trace: bool = False):
+                       mesh=None, record_trace: bool = False, trace=None):
     """The scenario through the JAX fleet simulator (stacked EdgeState).
 
     The spec's ``cloud_concurrency`` becomes each edge's finite
     ``cloud_slots`` pool, matching the oracle path slot for slot.
-    ``record_trace`` returns a ``FleetResult`` carrying the per-tick
-    adapted-t̂ trace (Fig. 12-style adaptation dynamics).
+    ``trace`` (a :class:`repro.obs.trace.TraceSpec`; ``record_trace`` is
+    the deprecated ``TraceSpec(t_hat=True)`` alias) returns a
+    ``FleetResult`` carrying the requested flight-recorder streams —
+    per-tick adapted-t̂ (``[T, E, M]``, Fig. 12-style adaptation
+    dynamics) and/or decision counters.
     """
     from repro.sim.fleet_jax import run_fleet
 
@@ -96,18 +99,20 @@ def run_scenario_fleet(spec: ScenarioSpec, policy, *, dt: float = 25.0,
     return run_fleet(spec.models, policy, signals, dt=dt,
                      edge_frac=edge_frac, cloud_frac=cloud_frac,
                      cloud_slots=spec.cloud_concurrency, mesh=mesh,
-                     record_trace=record_trace)
+                     record_trace=record_trace, trace=trace)
 
 
 def run_scenario_fleet_batch(spec: ScenarioSpec, policy,
                              seeds: tuple[int, ...], *, dt: float = 25.0,
                              edge_frac: float = 0.62,
                              cloud_frac: float = 0.80, mesh=None,
-                             record_trace: bool = False):
+                             record_trace: bool = False, trace=None):
     """One scenario × many seeds as one compiled fleet program.
 
     Returns a stacked final EdgeState with leading ``[R, E]`` axes;
-    use :func:`fleet_summary_batch` for per-seed metrics.
+    use :func:`fleet_summary_batch` for per-seed metrics.  ``trace`` /
+    ``record_trace`` switch to a ``FleetResult`` with replica-leading
+    streams (``t_hat`` shaped ``[R, T, E, M]``).
     """
     from repro.sim.fleet_jax import run_fleet_batch
 
@@ -115,12 +120,12 @@ def run_scenario_fleet_batch(spec: ScenarioSpec, policy,
     return run_fleet_batch(spec.models, policy, signals, dt=dt,
                            edge_frac=edge_frac, cloud_frac=cloud_frac,
                            cloud_slots=spec.cloud_concurrency, mesh=mesh,
-                           record_trace=record_trace)
+                           record_trace=record_trace, trace=trace)
 
 
 def run_registry_sweep(scenarios=None, policies=("DEMS",), seeds=(0,), *,
                        dt: float = 25.0, duration_ms: float | None = None,
-                       mesh=None) -> list[dict]:
+                       mesh=None, trace=None) -> list[dict]:
     """Scenarios × policies × seeds as **one** compiled, padded program.
 
     The whole sweep — by default the entire registry — is lowered through
@@ -130,9 +135,17 @@ def run_registry_sweep(scenarios=None, policies=("DEMS",), seeds=(0,), *,
     ``mesh="auto"`` fans the replica axis over every available device
     (the largest device count dividing it).  Returns one summary dict per
     run, tagged with its (scenario, policy, seed).
+
+    ``trace`` (a :class:`repro.obs.trace.TraceSpec`) threads the flight
+    recorder through the one-program sweep: each row dict then also
+    carries a ``"trace"`` :class:`~repro.sim.fleet_jax.FleetResult`
+    whose streams are re-stacked to that run's own ``[T, E, …]`` layout
+    (lanes of the edge-flattened lowering concatenated back along the
+    edge axis; the model axis stays padded to the batch maximum, padded
+    models simply never count).
     """
     from repro.scenarios.compile import compile_registry_batch
-    from repro.sim.fleet_jax import run_batch
+    from repro.sim.fleet_jax import FleetResult, run_batch
 
     batch, rows = compile_registry_batch(scenarios, policies, seeds,
                                          dt=dt, duration_ms=duration_ms)
@@ -143,20 +156,30 @@ def run_registry_sweep(scenarios=None, policies=("DEMS",), seeds=(0,), *,
     # one host transfer up front: the per-row lane slicing below would
     # otherwise issue a device gather per leaf per run (slow when the
     # replica axis is sharded)
-    final = jax.device_get(run_batch(batch, dt=dt, mesh=mesh))
+    res = jax.device_get(run_batch(batch, dt=dt, mesh=mesh, trace=trace))
+    traced = trace is not None and trace.enabled
+    final = res.final if traced else res
     out = []
     for row in rows:
         # a run's lanes are its replicas: one for a padded multi-edge
         # batch, one per edge under the edge-flattened lowering — re-stack
         # them into the run's [E, …] state so fleet_summary reduces the
         # per-edge values exactly as the run_fleet path would
-        parts = [jax.tree.map(lambda a, i=i: a[i], final)
-                 for i in row.lanes]
-        state = parts[0] if len(parts) == 1 else jax.tree.map(
-            lambda *xs: np.concatenate([np.asarray(x) for x in xs]),
-            *parts)
-        out.append(dict(scenario=row.scenario, policy=row.policy,
-                        seed=row.seed, **fleet_summary(state)))
+        def restack(tree, axis=0):
+            parts = [jax.tree.map(lambda a, i=i: a[i], tree)
+                     for i in row.lanes]
+            return parts[0] if len(parts) == 1 else jax.tree.map(
+                lambda *xs: np.concatenate([np.asarray(x) for x in xs],
+                                           axis=axis), *parts)
+        state = restack(final)
+        d = dict(scenario=row.scenario, policy=row.policy,
+                 seed=row.seed, **fleet_summary(state))
+        if traced:
+            # trace streams are [T, E, …]: lanes rejoin on the edge axis
+            d["trace"] = FleetResult(
+                final=state, t_hat=restack(res.t_hat, axis=1),
+                counters=restack(res.counters, axis=1))
+        out.append(d)
     return out
 
 

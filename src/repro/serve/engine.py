@@ -19,6 +19,7 @@ comparable.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 import threading
@@ -84,6 +85,10 @@ class ServeEngine:
         self.adaptive = {n: AdaptiveEstimator(static=m.profile.t_cloud)
                          for n, m in models.items()}
         self.stats = {n: ModelStats() for n in models}
+        # flight-recorder samples for metrics_snapshot(): bounded ring
+        # buffers of per-task completion latency and deadline slack (ms)
+        self._lat_samples = collections.deque(maxlen=4096)
+        self._slack_samples = collections.deque(maxlen=4096)
         self._lock = threading.RLock()
         self._edge_q: list[tuple[float, int, Task]] = []
         self._cloud_q: list[tuple[float, int, Task]] = []
@@ -318,6 +323,9 @@ class ServeEngine:
                 st.cloud_miss += (not ok)
                 st.cloud_utility += task.utility()
             st.qos_utility += task.utility()
+            if ok:
+                self._lat_samples.append(task.finished - task.created)
+                self._slack_samples.append(task.abs_deadline - task.finished)
             self._after_completion(task, success=ok)
 
     def _after_completion(self, task: Task, success: bool) -> None:
@@ -357,6 +365,54 @@ class ServeEngine:
                 heapq.heapify(self._edge_q)
 
     # ------------------------------------------------------------------
+    def metrics_snapshot(self) -> dict:
+        """Live observability endpoint: the flight recorder's serve twin.
+
+        One lock-protected read returning the same scoreboard
+        :func:`repro.obs.metrics.tail_metrics` computes for the
+        simulator — per-model outcome counts and QoE success
+        frequencies, queue depths, and p50/p95/p99 completion-latency /
+        deadline-slack percentiles over a bounded window of recent
+        completions.  Cheap enough to poll from a control plane.
+        """
+        with self._lock:
+            per_model = {}
+            hit = miss = drop = 0
+            for n, st in self.stats.items():
+                ok = st.edge_success + st.cloud_success
+                bad = st.edge_miss + st.cloud_miss
+                settled = ok + bad + st.dropped
+                per_model[n] = dict(
+                    generated=st.generated, hit=ok, miss=bad,
+                    dropped=st.dropped, stolen=st.stolen,
+                    migrated=st.migrated,
+                    qoe_frequency=ok / settled if settled else None)
+                hit, miss, drop = hit + ok, miss + bad, drop + st.dropped
+            lat = np.asarray(self._lat_samples, dtype=np.float64)
+            slack = np.asarray(self._slack_samples, dtype=np.float64)
+
+            def pcts(a):
+                if a.size == 0:
+                    return {f"p{q:g}": None for q in (50, 95, 99)}
+                return {f"p{q:g}": float(np.percentile(a, q))
+                        for q in (50, 95, 99)}
+
+            settled = max(hit + miss + drop, 1)
+            return dict(
+                now_ms=self.now(), policy=self.policy.name,
+                hit=hit, miss=miss, dropped=drop,
+                hit_rate=hit / settled,
+                edge_queue_depth=len(self._edge_q),
+                cloud_queue_depth=len(self._cloud_q),
+                latency_ms=pcts(lat), slack_ms=pcts(slack),
+                window=dict(latency_samples=int(lat.size),
+                            slack_samples=int(slack.size)),
+                per_model=per_model,
+                qos_utility=sum(st.qos_utility
+                                for st in self.stats.values()),
+                qoe_utility=sum(st.qoe_utility
+                                for st in self.stats.values()))
+
     def results(self, duration_ms: float) -> Results:
         busy = sum((st.edge_success + st.edge_miss) *
                    self.models[n].profile.t_edge

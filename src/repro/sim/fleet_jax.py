@@ -56,6 +56,16 @@ across *heterogeneous* scenarios — through :func:`run_batch` on a
 replica to the max (ticks, edges, models) shape with per-(tick, edge)
 validity; padded cells are exact no-ops.  With a 2-D device mesh the
 batch shards over a (replica, edge) grid.
+
+Every entry point takes a ``trace=`` :class:`repro.obs.trace.TraceSpec`
+— the flight recorder.  It taps the tick scan's carry and emits dense
+per-tick decision counters and/or the adapted-t̂ stream as extra scan
+outputs (:class:`FleetResult`); the taps are read-only and
+valid-masked, so traced runs produce bit-identical scheduler results,
+and a trace-off run compiles the very same program as before the
+recorder existed.  Host-side aggregation (QoS/QoE time series, tail
+percentiles, conservation ledger, Perfetto export) lives in
+:mod:`repro.obs.metrics`.
 """
 from __future__ import annotations
 
@@ -71,6 +81,9 @@ from repro.core import jax_sched as js
 from repro.core import schedulers as _sched
 from repro.core.task import ModelProfile
 from repro.kernels import sched_ops
+from repro.obs import trace as obs_trace
+from repro.obs.trace import (TickCounters, TraceSpec, hist_counts,
+                             resolve_spec, zero_counters)
 from repro.sim import network
 
 EDGE_CAP = 32
@@ -289,15 +302,32 @@ class EdgeState(NamedTuple):
 
 
 class FleetResult(NamedTuple):
-    """A fleet run with estimator telemetry (``record_trace=True``).
+    """A fleet run with flight-recorder telemetry (``trace=TraceSpec``).
 
-    ``t_hat`` carries ``adapt.current`` out of the tick scan: the
+    ``t_hat`` carries ``adapt.current`` out of the tick scan — the
     scheduler's per-tick adapted cloud-latency estimate, enabling
-    Fig. 12-style adaptation-dynamics plots.
+    Fig. 12-style adaptation-dynamics plots.  Its shape is ``[T, E, M]``
+    from :func:`run_fleet` and ``[R, T, E, M]`` from both batch entry
+    points (:func:`run_fleet_batch` and :func:`run_batch`), where T is
+    the tick count, E the (padded) edge count, M the (padded) model
+    count and R the replica count.  ``counters`` carries the per-tick
+    decision stream (:class:`repro.obs.trace.TickCounters`, leaves
+    ``[T, E, …]`` / ``[R, T, E, …]``).  Streams not requested by the
+    :class:`~repro.obs.trace.TraceSpec` are ``None``.
     """
 
     final: EdgeState
-    t_hat: jax.Array     # f32[T, E, M] ([R, T, E, M] from a batch)
+    t_hat: Optional[jax.Array] = None        # f32[(R,) T, E, M]
+    counters: Optional[TickCounters] = None  # [(R,) T, E, …] leaves
+
+
+def _tr_add(tr: Optional[TickCounters], **deltas) -> Optional[TickCounters]:
+    """Accumulate trace contributions; statically a no-op when the
+    flight recorder is off (``tr is None``), so the untraced program is
+    byte-identical to the pre-recorder one."""
+    if tr is None:
+        return None
+    return tr._replace(**{k: getattr(tr, k) + v for k, v in deltas.items()})
 
 
 def init_state(prof: Profiles, adapt_window: int = 10,
@@ -411,8 +441,9 @@ class FleetSignals(NamedTuple):
 # per-tick logic for one edge
 # ---------------------------------------------------------------------------
 
-def _resolve_cloud(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
-                   theta, bw_pen, cloud_frac, cloud_up) -> EdgeState:
+def _resolve_cloud(st: EdgeState, tr: Optional[TickCounters],
+                   tspec: TraceSpec, prof: Profiles, pp: PolicyParams, now,
+                   theta, bw_pen, cloud_frac, cloud_up):
     """Dispatch matured cloud tasks into the finite FaaS pool.
 
     During a cloud outage (``cloud_up`` False) matured tasks stay parked
@@ -463,6 +494,15 @@ def _resolve_cloud(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
     dropped = mature & st.cq.steal_only      # not stolen in time (§5.3)
     n_drop = st.n_drop + add((dropped | skipped).astype(jnp.int32),
                              st.cq_model)
+    # flight recorder: read-only taps (drops by cause, pool pressure,
+    # tail evidence from the settled tasks' slack/latency)
+    tr = _tr_add(
+        tr, cloud_dispatch=dispatch.sum(), pool_blocked=(run & ~avail).sum(),
+        drop_infeasible=skipped.sum(), drop_unstolen=dropped.sum(),
+        slack_hist=hist_counts(st.cq.deadline - (now + act), success, tspec),
+        latency_hist=hist_counts(
+            (now + act) - (st.cq.deadline - prof.deadline[st.cq_model]),
+            success, tspec))
     settled = dispatch | skipped | dropped   # blocked tasks stay parked
     new_valid = st.cq.valid & ~settled
     st = st._replace(cq=st.cq._replace(valid=new_valid),
@@ -477,7 +517,8 @@ def _resolve_cloud(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
         now, prof.t_cloud, pp.adapt_eps, pp.adapt_cooling_ms,
         max_obs=st.cloud_busy_until.shape[0]))
     return _gems_bulk(st, prof, success & pp.gems,
-                      (dispatch | skipped | dropped) & pp.gems, st.cq_model)
+                      (dispatch | skipped | dropped) & pp.gems,
+                      st.cq_model), tr
 
 
 def _gems_bulk(st: EdgeState, prof: Profiles, success_mask, done_mask,
@@ -490,8 +531,9 @@ def _gems_bulk(st: EdgeState, prof: Profiles, success_mask, done_mask,
     return st._replace(lam=lam, lam_hat=lam_hat)
 
 
-def _gems_act(st: EdgeState, prof: Profiles, pp: PolicyParams, now, theta,
-              bw_pen, cloud_frac) -> EdgeState:
+def _gems_act(st: EdgeState, tr: Optional[TickCounters], tspec: TraceSpec,
+              prof: Profiles, pp: PolicyParams, now, theta, bw_pen,
+              cloud_frac):
     """Alg. 1: reschedule lagging models, close expired windows.
 
     Rescheduled tasks go through the same finite pool as the dispatch
@@ -529,15 +571,22 @@ def _gems_act(st: EdgeState, prof: Profiles, pp: PolicyParams, now, theta,
     # oracle's rescan/dispatch path.
     t_hat = _t_cloud_cur(st, prof, pp, now)
     feas = now + t_hat[st.eq.model] <= st.eq.abs_dl
-    want = (st.eq.valid & lagging[st.eq.model]
-            & (prof.gamma_c[st.eq.model] > 0) & feas
-            & (~lost[st.eq.model] | doomed)) & pp.gems
+    cand = (st.eq.valid & lagging[st.eq.model]
+            & (prof.gamma_c[st.eq.model] > 0) & feas) & pp.gems
+    want = cand & (~lost[st.eq.model] | doomed)
     move = want & _free_slot_gate(st.cloud_busy_until, now, want)
     # slots are *held* for the actual duration either way; only the
     # outcome model differs between GEMS (estimate) and GEMS-A (actual)
     hold = cloud_frac * prof.t_cloud[st.eq.model] + theta + bw_pen
     act = jnp.where(pp.adaptive, hold, prof.t_cloud[st.eq.model])
     success = move & (now + act <= st.eq.abs_dl)
+    tr = _tr_add(
+        tr, gems_moved=move.sum(),
+        gems_withheld=(cand & lost[st.eq.model] & ~doomed).sum(),
+        slack_hist=hist_counts(st.eq.abs_dl - (now + act), success, tspec),
+        latency_hist=hist_counts(
+            (now + act) - (st.eq.abs_dl - prof.deadline[st.eq.model]),
+            success, tspec))
     add = functools.partial(jax.ops.segment_sum, num_segments=m)
     util = jnp.where(success, prof.gamma_c[st.eq.model],
                      jnp.where(move, -prof.cost_c[st.eq.model], 0.0)).sum()
@@ -569,7 +618,7 @@ def _gems_act(st: EdgeState, prof: Profiles, pp: PolicyParams, now, theta,
         prev_lam=jnp.where(expired, st.lam, st.prev_lam),
         win_end=jnp.where(expired, st.win_end + prof.qoe_window, st.win_end),
         qoe_utility=st.qoe_utility + qoe,
-        windows_met=st.windows_met + met.astype(jnp.int32))
+        windows_met=st.windows_met + met.astype(jnp.int32)), tr
 
 
 def _offer_cloud_many(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
@@ -591,8 +640,10 @@ def _offer_cloud_many(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
     congested cloud pulls stealing triggers earlier and fails the
     feasibility gate sooner; a policy-level rejection then counts as a
     *skip* for the estimator's cooling logic (oracle ``_offer_cloud``).
-    Returns ``(state, pushed)``; ``t_cur`` lets the caller reuse an
-    already-computed :func:`_t_cloud_cur` vector for the same state.
+    Returns ``(state, pushed, accepted)`` — ``accepted & ~pushed`` lost
+    the race for a free queue slot (a capacity drop, not a policy one);
+    ``t_cur`` lets the caller reuse an already-computed
+    :func:`_t_cloud_cur` vector for the same state.
     """
     if t_cur is None:
         t_cur = _t_cloud_cur(st, prof, pp, now)
@@ -644,11 +695,12 @@ def _offer_cloud_many(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
         st.adapt, models, jnp.zeros_like(skip), jnp.zeros_like(skip),
         jnp.zeros_like(t_hat), skip, now, prof.t_cloud, pp.adapt_eps,
         pp.adapt_cooling_ms, with_obs=False))
-    return st, pushed
+    return st, pushed, accept
 
 
-def _route_arrival(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
-                   model, arrive, load_mult) -> EdgeState:
+def _route_arrival(st: EdgeState, tr: Optional[TickCounters],
+                   prof: Profiles, pp: PolicyParams, now,
+                   model, arrive, load_mult):
     """Task-scheduler routing for one arriving task (§5.1–5.2, §8.2).
 
     ``load_mult`` is the edge's speed factor: the effective edge latency
@@ -714,8 +766,8 @@ def _route_arrival(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
     dls = jnp.concatenate([st.eq.abs_dl, jnp.asarray(abs_dl)[None]])
     tes = jnp.concatenate([st.eq.t_edge, jnp.asarray(te)[None]])
     offer = jnp.concatenate([vic, jnp.asarray(to_cloud)[None]])
-    st, pushed = _offer_cloud_many(st, prof, pp, now, models, dls, tes,
-                                   offer, t_cur=t_cur)
+    st, pushed, accepted = _offer_cloud_many(st, prof, pp, now, models, dls,
+                                             tes, offer, t_cur=t_cur)
     add = functools.partial(jax.ops.segment_sum,
                             num_segments=prof.t_edge.shape[0])
     eq = js.edge_remove(st.eq, vic)
@@ -724,14 +776,21 @@ def _route_arrival(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
     # a full edge queue loses the task (edge-only policies cannot shed to
     # the cloud): account it as a drop so tasks stay conserved
     lost = (insert_edge & ~ok).astype(jnp.int32)
+    tr = _tr_add(
+        tr, arrivals=arrive.astype(jnp.int32),
+        admit_edge=(insert_edge & ok).astype(jnp.int32),
+        admit_cloud=pushed.sum(), migrated=vic.sum(),
+        drop_infeasible=(offer & ~accepted).sum(),
+        drop_qfull=lost + (offer & accepted & ~pushed).sum())
     return st._replace(
         eq=eq, seq=st.seq + arrive.astype(jnp.int32),
         n_drop=st.n_drop.at[model].add(lost)
-        + add((offer & ~pushed).astype(jnp.int32), models))
+        + add((offer & ~pushed).astype(jnp.int32), models)), tr
 
 
-def _edge_execute(st: EdgeState, prof: Profiles, pp: PolicyParams, now, dt,
-                  edge_frac, min_edge_t) -> EdgeState:
+def _edge_execute(st: EdgeState, tr: Optional[TickCounters],
+                  tspec: TraceSpec, prof: Profiles, pp: PolicyParams, now,
+                  dt, edge_frac, min_edge_t):
     """Edge executor: JIT drops, stealing, starting the next task.
 
     Queue entries carry the *effective* edge latency (speed factor folded
@@ -740,7 +799,8 @@ def _edge_execute(st: EdgeState, prof: Profiles, pp: PolicyParams, now, dt,
     """
     m_ids = jnp.arange(prof.t_edge.shape[0], dtype=jnp.int32)
 
-    def body(_, s: EdgeState) -> EdgeState:
+    def body(_, carry):
+        s, tr = carry
         idle = s.busy_rem <= 0.0
 
         # JIT check on the head
@@ -786,6 +846,13 @@ def _edge_execute(st: EdgeState, prof: Profiles, pp: PolicyParams, now, dt,
         success = start & (now + act <= run_dl)
         util = jnp.where(success, prof.gamma_e[run_model],
                          jnp.where(start, -prof.cost_e[run_model], 0.0))
+        tr = _tr_add(
+            tr, drop_infeasible=do_drop.astype(jnp.int32),
+            edge_exec=start.astype(jnp.int32),
+            slack_hist=hist_counts(run_dl - (now + act), success, tspec),
+            latency_hist=hist_counts(
+                (now + act) - (run_dl - prof.deadline[run_model]),
+                success, tspec))
         s = s._replace(
             eq=jax.tree.map(lambda a, b: jnp.where(start_head, a, b),
                             eq_after, s.eq),
@@ -801,20 +868,29 @@ def _edge_execute(st: EdgeState, prof: Profiles, pp: PolicyParams, now, dt,
                 (start & ~success).astype(jnp.int32)),
             qos_utility=s.qos_utility + util)
         run_onehot = (m_ids == run_model) & start & pp.gems
-        return _gems_bulk(s, prof, run_onehot & success, run_onehot, m_ids)
+        return _gems_bulk(s, prof, run_onehot & success, run_onehot,
+                          m_ids), tr
 
-    st = jax.lax.fori_loop(0, SUBSTEPS, body, st)
+    st, tr = jax.lax.fori_loop(0, SUBSTEPS, body, (st, tr))
     # at most one tick of banked debt; idle edges do not accumulate credit
-    return st._replace(busy_rem=jnp.maximum(st.busy_rem - dt, -dt))
+    return st._replace(busy_rem=jnp.maximum(st.busy_rem - dt, -dt)), tr
 
 
-def make_step(dt: float, edge_frac: float, cloud_frac: float):
+def make_step(dt: float, edge_frac: float, cloud_frac: float,
+              tspec: TraceSpec = TraceSpec()):
     """Build the policy-generic single-edge tick function (vmapped over
     the fleet); ``prof``/``pp`` are runtime arguments, so one compiled
-    step serves every model table and policy in a batch."""
+    step serves every model table and policy in a batch.
 
-    def step(prof: Profiles, pp: PolicyParams, st: EdgeState, inputs
-             ) -> EdgeState:
+    With ``tspec.counters`` the step also returns a
+    :class:`~repro.obs.trace.TickCounters` of this tick's decisions —
+    every tap is read-only on the scheduler state, so the traced run's
+    summaries are bit-identical to the untraced run's; without it the
+    second return value is ``None`` and the compiled program is the same
+    one as before the flight recorder existed.
+    """
+
+    def step(prof: Profiles, pp: PolicyParams, st: EdgeState, inputs):
         # arrive: bool[M]; order: i32[M]; theta/bw/load_mult/valid per-edge
         now, theta, bw, arrive, order, load_mult, cloud_up, valid = inputs
         # signed cellular transfer penalty (network.py convention); exactly
@@ -822,22 +898,52 @@ def make_step(dt: float, edge_frac: float, cloud_frac: float):
         bw_pen = network.bandwidth_penalty_ms(bw)
         min_edge_t = prof.t_edge.min()     # padded models sit at +inf
         st0 = st
-        st = _resolve_cloud(st, prof, pp, now, theta, bw_pen, cloud_frac,
-                            cloud_up)
+        tr = zero_counters(prof.t_edge.shape[0], tspec) \
+            if tspec.counters else None
+        st, tr = _resolve_cloud(st, tr, tspec, prof, pp, now, theta, bw_pen,
+                                cloud_frac, cloud_up)
 
         # §3.3: tasks of a segment are inserted in randomized order; the
         # loop is load-bearing — each insertion's feasibility depends on
         # the same tick's earlier insertions — but its per-arrival cloud
         # offers are batched inside _route_arrival
-        def route_one(i, s):
+        def route_one(i, carry):
+            s, t = carry
             mdl = order[i]
-            return _route_arrival(s, prof, pp, now, mdl, arrive[mdl],
+            return _route_arrival(s, t, prof, pp, now, mdl, arrive[mdl],
                                   load_mult)
-        st = jax.lax.fori_loop(0, prof.t_edge.shape[0], route_one, st)
-        st = _edge_execute(st, prof, pp, now, dt, edge_frac, min_edge_t)
-        st = _gems_act(st, prof, pp, now, theta, bw_pen, cloud_frac)
+        st, tr = jax.lax.fori_loop(0, prof.t_edge.shape[0], route_one,
+                                   (st, tr))
+        st, tr = _edge_execute(st, tr, tspec, prof, pp, now, dt, edge_frac,
+                               min_edge_t)
+        st, tr = _gems_act(st, tr, tspec, prof, pp, now, theta, bw_pen,
+                           cloud_frac)
         # padded (tick, edge) cells are exact no-ops
-        return jax.tree.map(lambda a, b: jnp.where(valid, a, b), st, st0)
+        st = jax.tree.map(lambda a, b: jnp.where(valid, a, b), st, st0)
+        if tr is not None:
+            # event counters zero out on padded cells; outcome counters
+            # are post-revert state deltas (so they sum to the final
+            # summary stats exactly), and gauges read the (possibly
+            # reverted) end-of-tick state so the conservation ledger
+            # stays exact through a padded tail
+            tr = tr._replace(**{
+                f: jnp.where(valid, getattr(tr, f),
+                             jnp.zeros_like(getattr(tr, f)))
+                for f in obs_trace.EVENT_FIELDS})
+            tr = tr._replace(
+                hit=st.n_success - st0.n_success,
+                miss=st.n_miss - st0.n_miss,
+                drop=st.n_drop - st0.n_drop,
+                stolen=st.n_stolen - st0.n_stolen,
+                qos=st.qos_utility - st0.qos_utility,
+                qoe=st.qoe_utility - st0.qoe_utility,
+                eq_depth=st.eq.valid.sum().astype(jnp.int32),
+                cq_depth=st.cq.valid.sum().astype(jnp.int32),
+                slots_busy=((st.cloud_busy_until > now + dt)
+                            & (jnp.arange(st.cloud_busy_until.shape[0])
+                               < st.n_slots)).sum().astype(jnp.int32),
+                valid=valid)
+        return st, tr
 
     return step
 
@@ -1030,9 +1136,16 @@ def _shard_signals(sig: FleetSignals, mesh: jax.sharding.Mesh
 # so a program is reused across every policy/scenario of the same shape)
 # ---------------------------------------------------------------------------
 
+# every live compiled program, for retrace accounting
+# (repro.obs.prof.fleet_compile_stats): a program jit-traces once per
+# input *shape* — policies are runtime data, so running more policies
+# through it must add no traces (tests/conftest.py ``compile_guard``)
+_PROGRAM_REGISTRY: list = []
+
+
 @functools.lru_cache(maxsize=None)
 def _fleet_program(dt: float, edge_frac: float, cloud_frac: float,
-                   coop_rounds: int, record_trace: bool, batched: bool,
+                   coop_rounds: int, tspec: TraceSpec, batched: bool,
                    hetero: bool):
     """Jitted ``run(prof, pp, state, xs)``.
 
@@ -1040,8 +1153,11 @@ def _fleet_program(dt: float, edge_frac: float, cloud_frac: float,
     ``hetero``, on profiles/params/state too).  ``coop_rounds`` is the
     static peer-offload round bound (0 compiles cooperation out
     entirely); per-replica runtime caps mask rounds within it.
+    ``tspec`` selects the flight-recorder streams tapped out of the scan;
+    it is part of this cache's key, so the trace-off program is the very
+    executable the untraced sweeps always compiled.
     """
-    step = make_step(dt, edge_frac, cloud_frac)
+    step = make_step(dt, edge_frac, cloud_frac, tspec)
 
     def run(prof, pp, state, xs):
         vstep = jax.vmap(step, in_axes=(
@@ -1050,29 +1166,41 @@ def _fleet_program(dt: float, edge_frac: float, cloud_frac: float,
         def scan_body(state, xs_t):
             now = xs_t[0]
             valid = xs_t[7]
-            state = vstep(prof, pp, state, xs_t)
+            state, tick = vstep(prof, pp, state, xs_t)
             if coop_rounds:
+                pre_out, pre_in = state.n_peer_out, state.n_peer_in
                 state = peer_offload(
                     state, now + dt, pp.coop_slack_ms, coop_rounds,
                     enable=pp.cooperation,
                     transfer_cap=pp.coop_transfer_cap, edge_valid=valid)
-            ys = state.adapt.current if record_trace else ()
+                if tick is not None:
+                    # the exchange runs on the stacked fleet state between
+                    # ticks; fold its per-edge deltas into the tick row
+                    tick = tick._replace(
+                        peer_out=tick.peer_out + state.n_peer_out - pre_out,
+                        peer_in=tick.peer_in + state.n_peer_in - pre_in)
+            ys = (state.adapt.current if tspec.t_hat else None, tick)
             return state, ys
 
-        final, trace = jax.lax.scan(scan_body, state, xs)
-        return FleetResult(final, trace) if record_trace else final
+        final, (t_hat, counters) = jax.lax.scan(scan_body, state, xs)
+        if tspec.enabled:
+            return FleetResult(final, t_hat, counters)
+        return final
 
     if batched:
         ax = 0 if hetero else None
         run = jax.vmap(run, in_axes=(ax, ax, ax, 0))
-    return jax.jit(run)
+    prog = jax.jit(run)
+    _PROGRAM_REGISTRY.append(prog)
+    return prog
 
 
 def run_fleet(models: list[ModelProfile], policy, signals: FleetSignals, *,
               dt: float = 25.0, edge_frac: float = 0.62,
               cloud_frac: float = 0.80, cloud_slots: int = CLOUD_SLOTS,
               mesh: Optional[jax.sharding.Mesh] = None,
-              record_trace: bool = False):
+              record_trace: bool = False,
+              trace: Optional[TraceSpec] = None):
     """Run the fleet simulator over arbitrary scenario signals.
 
     ``policy`` is a :class:`FleetPolicy` or a name (``"DEMS"``,
@@ -1081,10 +1209,17 @@ def run_fleet(models: list[ModelProfile], policy, signals: FleetSignals, *,
     large to recover the elastic-cloud limit.  With ``mesh`` given, fleet
     state is sharded over its first axis (pjit-style data parallelism over
     edges); the peer offload exchange then runs as cross-device
-    collectives.  ``record_trace`` returns a :class:`FleetResult` whose
-    ``t_hat`` is the per-tick adapted-estimate trace; the default returns
-    the final :class:`EdgeState`.
+    collectives.
+
+    ``trace`` turns on the flight recorder: a
+    :class:`~repro.obs.trace.TraceSpec` selecting the per-tick streams,
+    returned as a :class:`FleetResult` (``t_hat`` shaped ``[T, E, M]``
+    here; tracing never changes the scheduler's results — the final
+    state is bit-identical to the untraced run).  ``record_trace=True``
+    is the deprecated alias for ``TraceSpec(t_hat=True)``.  The default
+    returns just the final :class:`EdgeState`.
     """
+    tspec = resolve_spec(trace, record_trace)
     pol = _resolve_policy(policy)
     prof = Profiles.build(models)
     n_edges = signals.arrive.shape[1]
@@ -1093,7 +1228,7 @@ def run_fleet(models: list[ModelProfile], policy, signals: FleetSignals, *,
         jnp.arange(n_edges))
     run = _fleet_program(dt, edge_frac, cloud_frac,
                          pol.coop_max_transfers if pol.cooperation else 0,
-                         record_trace, False, False)
+                         tspec, False, False)
     if mesh is not None:
         state = _shard_leading(state, mesh)
     return run(prof, pol.params(), state, tuple(signals))
@@ -1168,7 +1303,8 @@ def run_fleet_batch(models: list[ModelProfile], policy,
                     edge_frac: float = 0.62, cloud_frac: float = 0.80,
                     cloud_slots: int = CLOUD_SLOTS,
                     mesh: Optional[jax.sharding.Mesh] = None,
-                    record_trace: bool = False):
+                    record_trace: bool = False,
+                    trace: Optional[TraceSpec] = None):
     """One-jit sweep: ``signals`` carry a leading replica axis ``[R, …]``
     (from :func:`stack_signals`), and the whole sweep — every replica's
     full mission scan — runs as a single ``vmap``-over-replicas compiled
@@ -1178,10 +1314,14 @@ def run_fleet_batch(models: list[ModelProfile], policy,
     axes; slicing replica ``r`` reproduces ``run_fleet`` on that run's
     signals exactly.  With ``mesh`` given, replicas are sharded over its
     first axis; a 2-D mesh additionally shards the edge axis over its
-    second (the (replica, edge) grid).  For *heterogeneous* replicas
+    second (the (replica, edge) grid).  ``trace`` (or the deprecated
+    ``record_trace`` alias for ``TraceSpec(t_hat=True)``) returns a
+    :class:`FleetResult` instead, with replica-leading trace streams
+    (``t_hat`` shaped ``[R, T, E, M]``).  For *heterogeneous* replicas
     (different scenarios / policies / pool depths) see
     :func:`build_fleet_batch` / :func:`run_batch`.
     """
+    tspec = resolve_spec(trace, record_trace)
     pol = _resolve_policy(policy)
     prof = Profiles.build(models)
     n_edges = signals.arrive.shape[2]
@@ -1190,7 +1330,7 @@ def run_fleet_batch(models: list[ModelProfile], policy,
         jnp.arange(n_edges))
     run = _fleet_program(dt, edge_frac, cloud_frac,
                          pol.coop_max_transfers if pol.cooperation else 0,
-                         record_trace, True, False)
+                         tspec, True, False)
     if mesh is not None:
         # state is replica-shared (vmap in_axes None): leave it replicated
         # on a 1-D replica mesh; a 2-D mesh shards its edge axis over the
@@ -1264,19 +1404,25 @@ def build_fleet_batch(runs, *, dt: float = 25.0) -> FleetBatch:
 def run_batch(batch: FleetBatch, *, dt: float = 25.0,
               edge_frac: float = 0.62, cloud_frac: float = 0.80,
               mesh: Optional[jax.sharding.Mesh] = None,
-              record_trace: bool = False):
+              record_trace: bool = False,
+              trace: Optional[TraceSpec] = None):
     """Execute a heterogeneous :class:`FleetBatch` as one compiled program.
 
     Every replica — its own scenario shape, policy flags, model table and
     pool depth — runs under one jit; per-replica slices of the returned
     ``[R, E, …]`` state match the corresponding :func:`run_fleet` call
     exactly (padding is a no-op by construction).  A 2-D ``mesh`` shards
-    the (replica, edge) grid; a 1-D mesh shards replicas only.
+    the (replica, edge) grid; a 1-D mesh shards replicas only.  ``trace``
+    (or the deprecated ``record_trace`` alias) returns a
+    :class:`FleetResult` whose streams lead with the replica axis
+    (``t_hat`` shaped ``[R, T, E, M]``); padded (tick, edge) cells record
+    zero events, by the same masking that makes them state no-ops.
     """
+    tspec = resolve_spec(trace, record_trace)
     prof, pp, state, sig = (batch.profiles, batch.params, batch.state,
                             batch.signals)
     run = _fleet_program(dt, edge_frac, cloud_frac, batch.coop_rounds,
-                         record_trace, True, True)
+                         tspec, True, True)
     if mesh is not None:
         prof = _shard_leading(prof, mesh, axes=1)
         pp = _shard_leading(pp, mesh, axes=1)

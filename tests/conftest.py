@@ -1,0 +1,36 @@
+"""Shared fixtures: the retrace guard for the policy-generic tick program."""
+import pytest
+
+
+@pytest.fixture
+def compile_guard():
+    """Fail if the fleet tick program retraces after the guard is armed.
+
+    The tick program is policy-generic: every policy is runtime
+    ``PolicyParams`` data, so once a program has traced for a given
+    input shape, running *other policies* through the same shapes must
+    not trace again — a second trace means some runtime input (usually
+    a policy field) leaked into the static/trace-level signature.
+
+    Usage: run one policy to pay the legitimate shape-driven trace,
+    ``compile_guard.arm()``, then run the other policies; teardown
+    asserts the jit trace count across all cached tick programs never
+    grew past the armed baseline.
+    """
+    from repro.obs.prof import fleet_compile_stats
+
+    class Guard:
+        baseline = None
+
+        def arm(self) -> None:
+            self.baseline = fleet_compile_stats().traces
+
+    g = Guard()
+    yield g
+    if g.baseline is not None:
+        stats = fleet_compile_stats()
+        assert stats.traces == g.baseline, (
+            f"fleet tick program retraced after the guard was armed: "
+            f"{stats.traces - g.baseline} new jit trace(s) across "
+            f"{stats.programs} cached programs — PolicyParams leaked "
+            f"into a static argument")

@@ -1,0 +1,242 @@
+"""Flight recorder: bit-identity, conservation, tails, exports, retrace guard.
+
+1. tracing is *free of observable effect*: trace-on final states are
+   bitwise identical to trace-off for ``run_fleet`` and the one-program
+   registry sweep (the trace-off program is literally the pre-recorder
+   executable — ``TraceSpec`` is part of the program cache key);
+2. the per-tick conservation ledger ``arrived = settled + in-flight``
+   holds on every tick of every registry scenario × {DEMS-A, GEMS-COOP,
+   SOTA1}, and counter totals equal the end-of-run summary stats;
+3. padded batch cells record nothing: events are zeroed where
+   ``valid=False`` while gauges hold the final depths, so the ledger
+   stays exact through a padded tail;
+4. histogram percentiles: totals survive clamping/overflow, known
+   distributions give known p50/p95/p99, empty gives nan;
+5. exports (JSON/CSV/Perfetto) parse and carry the series;
+6. the deprecated ``record_trace`` alias ≡ ``TraceSpec(t_hat=True)``;
+7. the serve engine's ``metrics_snapshot`` endpoint;
+8. the retrace guard: a multi-policy sweep jit-traces each cached tick
+   program exactly once (``compile_guard`` fixture).
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.schedulers import make_policy
+from repro.core.task import ModelProfile
+from repro.obs import TraceSpec, metrics
+from repro.obs.trace import hist_counts, resolve_spec
+from repro.scenarios import (get, names, run_registry_sweep,
+                             run_scenario_fleet)
+from repro.serve.engine import ServableModel, ServeEngine, run_stream
+from repro.sim.fleet_jax import build_fleet_batch, pad_signals, run_batch
+
+D = 8_000.0
+TSPEC = TraceSpec.full()
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# (1) tracing never changes results — bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["DEMS-A", "GEMS-COOP"])
+def test_trace_on_bitwise_identical_run_fleet(policy):
+    spec = get("rush-hour", duration_ms=D)
+    plain = run_scenario_fleet(spec, policy)
+    traced = run_scenario_fleet(spec, policy, trace=TSPEC)
+    _assert_trees_equal(plain, traced.final)
+
+
+def test_trace_on_bitwise_identical_fleet_batch():
+    from repro.scenarios import run_scenario_fleet_batch
+
+    spec = get("baseline", duration_ms=5_000.0)
+    plain = run_scenario_fleet_batch(spec, "DEMS-A", (0, 1))
+    traced = run_scenario_fleet_batch(spec, "DEMS-A", (0, 1), trace=TSPEC)
+    _assert_trees_equal(plain, traced.final)
+    assert traced.t_hat.ndim == 4 and traced.t_hat.shape[0] == 2  # [R,T,E,M]
+    for r in range(2):
+        metrics.check_conservation(
+            metrics.select_replica(traced.counters, r))
+
+
+def test_trace_on_bitwise_identical_registry_sweep():
+    kw = dict(scenarios=("baseline", "cloud-crunch"),
+              policies=("DEMS-A", "SOTA1"), seeds=(0,), duration_ms=D)
+    plain = run_registry_sweep(**kw)
+    traced = run_registry_sweep(**kw, trace=TSPEC)
+    for p, t in zip(plain, traced):
+        assert p == {k: t[k] for k in p}
+        assert t["trace"].counters is not None
+
+
+# ---------------------------------------------------------------------------
+# (2) conservation + counters ≡ summaries, all scenarios × 3 policies
+# ---------------------------------------------------------------------------
+
+def test_conservation_and_summary_match_across_registry():
+    rows = run_registry_sweep(None, ("DEMS-A", "GEMS-COOP", "SOTA1"),
+                              (0,), duration_ms=D, trace=TSPEC)
+    assert len(rows) == len(names()) * 3
+    for row in rows:
+        c = row["trace"].counters
+        metrics.check_conservation(c)
+        # per-model outcome deltas sum to exactly the run's summary
+        assert int(np.asarray(c.hit).sum()) == row["completed"]
+        assert int(np.asarray(c.miss).sum()) == row["missed"]
+        assert int(np.asarray(c.drop).sum()) == row["dropped"]
+        assert int(np.asarray(c.stolen).sum()) == row["stolen"]
+        np.testing.assert_allclose(float(np.asarray(c.qos).sum()),
+                                   row["qos_utility"], rtol=1e-5)
+        # per-task tail evidence covers every deadline hit
+        assert int(np.asarray(c.slack_hist).sum()) == row["completed"]
+        assert int(np.asarray(c.latency_hist).sum()) == row["completed"]
+        # every drop has a cause
+        by_cause = (np.asarray(c.drop_infeasible).sum()
+                    + np.asarray(c.drop_unstolen).sum()
+                    + np.asarray(c.drop_qfull).sum())
+        assert int(by_cause) == row["dropped"]
+
+
+# ---------------------------------------------------------------------------
+# (3) padded cells record nothing
+# ---------------------------------------------------------------------------
+
+def test_padded_tail_masks_events_and_holds_gauges():
+    from repro.scenarios import compile_fleet
+
+    short = get("baseline", duration_ms=5_000.0)      # 200 ticks, 1 edge
+    long = get("roaming-vips", duration_ms=10_000.0)  # 400 ticks, 3 edges
+    sig = pad_signals([compile_fleet(short), compile_fleet(long)])
+    runs = [(short.models, "DEMS-A", jax.tree.map(lambda a: a[0], sig),
+             short.cloud_concurrency),
+            (long.models, "DEMS-A", jax.tree.map(lambda a: a[1], sig),
+             long.cloud_concurrency)]
+    batch = build_fleet_batch(runs)
+    res = run_batch(batch, trace=TSPEC)
+    c = metrics.select_replica(res.counters, 0)
+    valid = np.asarray(c.valid)                        # [T, E]
+    assert valid[:200, 0].all() and not valid[200:].any() \
+        and not valid[:, 1:].any()
+    dead = ~valid
+    for f in ("arrivals", "admit_edge", "admit_cloud", "cloud_dispatch",
+              "edge_exec", "peer_out", "peer_in", "drop_infeasible"):
+        assert not np.asarray(getattr(c, f))[dead].any(), f
+    # outcome deltas are state deltas: reverted state ⇒ zero in the tail
+    assert not np.asarray(c.hit)[dead].any()
+    # gauges hold through the tail, keeping the ledger exact
+    metrics.check_conservation(c)
+    metrics.check_conservation(metrics.select_replica(res.counters, 1))
+
+
+# ---------------------------------------------------------------------------
+# (4) histograms and percentiles
+# ---------------------------------------------------------------------------
+
+def test_hist_counts_preserves_totals_under_clamp_and_overflow():
+    spec = TraceSpec(counters=True, hist_bins=8, hist_max_ms=800.0)
+    vals = np.array([-50.0, 0.0, 99.0, 100.0, 799.0, 800.0, 5_000.0])
+    mask = np.ones(len(vals), bool)
+    h = np.asarray(hist_counts(vals, mask, spec))
+    assert h.sum() == len(vals)
+    assert h[0] == 2 + 1          # clamp: -50 and 0, plus 99
+    assert h[-1] == 3             # 799 in-range + 800, 5000 overflow
+    assert np.asarray(hist_counts(vals, np.zeros(len(vals), bool),
+                                  spec)).sum() == 0
+
+
+def test_hist_percentiles_known_distribution():
+    spec = TraceSpec(counters=True, hist_bins=4, hist_max_ms=400.0)
+    p = metrics.hist_percentiles(np.array([1, 1, 1, 1]), spec)
+    assert p["p50"] == pytest.approx(200.0)
+    assert p["p99"] == pytest.approx(396.0)
+    empty = metrics.hist_percentiles(np.zeros(4), spec)
+    assert all(np.isnan(v) for v in empty.values())
+    # stacked per-tick histograms reduce before the percentile
+    stacked = np.tile(np.array([0, 4, 0, 0]), (7, 3, 1))
+    assert metrics.hist_percentiles(stacked, spec)["p50"] == \
+        pytest.approx(150.0)
+
+
+# ---------------------------------------------------------------------------
+# (5) exports
+# ---------------------------------------------------------------------------
+
+def test_exports_parse_and_carry_series():
+    spec = get("cloud-crunch", duration_ms=D)
+    res = run_scenario_fleet(spec, "DEMS-A", trace=TSPEC)
+    doc = json.loads(metrics.to_json(res.counters, TSPEC,
+                                     list(spec.model_names)))
+    n_ticks = len(doc["series"]["arrivals"])
+    assert n_ticks == np.asarray(res.counters.valid).shape[0]
+    assert doc["ledger"]["residual"] == [0] * n_ticks
+    assert set(doc["tail"]["qoe_frequency"]) == set(spec.model_names)
+
+    csv_text = metrics.to_csv(res.counters)
+    assert len(csv_text.strip().splitlines()) == n_ticks + 1
+
+    pf = json.loads(metrics.to_perfetto(res.counters, dt_ms=25.0,
+                                        stride=10))
+    counter_events = [e for e in pf["traceEvents"] if e.get("ph") == "C"]
+    assert counter_events and all("args" in e for e in counter_events)
+
+
+# ---------------------------------------------------------------------------
+# (6) deprecated alias
+# ---------------------------------------------------------------------------
+
+def test_record_trace_alias_matches_tracespec():
+    spec = get("baseline", duration_ms=D)
+    old = run_scenario_fleet(spec, "DEMS-A", record_trace=True)
+    new = run_scenario_fleet(spec, "DEMS-A",
+                             trace=TraceSpec(t_hat=True))
+    np.testing.assert_array_equal(np.asarray(old.t_hat),
+                                  np.asarray(new.t_hat))
+    assert old.counters is None and new.counters is None
+    assert resolve_spec(None, True) == TraceSpec(t_hat=True)
+    with pytest.raises(TypeError, match="TraceSpec"):
+        resolve_spec(True)
+
+
+# ---------------------------------------------------------------------------
+# (7) serve engine snapshot endpoint
+# ---------------------------------------------------------------------------
+
+def test_serve_metrics_snapshot():
+    prof = ModelProfile(name="HV", beta=100, deadline=400.0, t_edge=5.0,
+                        t_cloud=60.0, cost_edge=1, cost_cloud=25)
+    models = {"HV": ServableModel(profile=prof, run=lambda: None)}
+    engine = ServeEngine(make_policy("DEMS"), models,
+                         cloud_concurrency=2, seed=0)
+    run_stream(engine, {"HV": 20.0}, duration_ms=1_000.0)
+    snap = engine.metrics_snapshot()
+    assert snap["policy"] == "DEMS"
+    assert snap["hit"] > 0
+    settled = snap["hit"] + snap["miss"] + snap["dropped"]
+    assert settled <= snap["per_model"]["HV"]["generated"]
+    assert snap["hit_rate"] == pytest.approx(snap["hit"] / settled)
+    assert snap["latency_ms"]["p50"] is not None
+    assert snap["slack_ms"]["p99"] is not None
+    assert snap["window"]["latency_samples"] == snap["hit"]
+    freq = snap["per_model"]["HV"]["qoe_frequency"]
+    assert freq == pytest.approx(snap["hit"] / settled)
+
+
+# ---------------------------------------------------------------------------
+# (8) retrace guard: policies stay runtime data
+# ---------------------------------------------------------------------------
+
+def test_multi_policy_sweep_traces_each_program_once(compile_guard):
+    spec = get("rush-hour", duration_ms=5_000.0)
+    run_scenario_fleet(spec, "DEMS-A", trace=TSPEC)  # shape-driven trace
+    compile_guard.arm()
+    for pol in ("GEMS-B", "SOTA1", "EDF-E+C"):       # policies are runtime
+        run_scenario_fleet(spec, pol, trace=TSPEC)   # data: no new traces
+    # compile_guard teardown asserts the trace count never grew
