@@ -19,8 +19,10 @@ Three measurements:
 * **flight-recorder cost** — trace-on vs trace-off ticks/sec (< 15 %
   overhead target), XLA backend-compile accounting, a retrace guard on
   the policy-generic tick program, and the paper's tail scoreboard
-  (p50/p95/p99 deadline slack & completion latency, per-task-type QoE
-  frequencies) for rush-hour and cloud-crunch.
+  (p50/p95/p99 deadline slack & completion latency, windowed p95/p99
+  deadline-hit rates, per-task-type QoE frequencies) for rush-hour,
+  cloud-crunch, and the stochastic duration-jitter / heavy-tail
+  scenarios.
 
 ``BENCH_fleet.json`` keeps one section per mode (``quick`` / ``full``),
 so a committed quick-mode baseline gates CI runs apples-to-apples while
@@ -135,8 +137,9 @@ def bench_trace(quick: bool) -> dict:
     trace-on number can move), counts real XLA backend compiles while
     both programs build, and verifies the tick program stayed
     policy-generic (one jit trace per cached program).  Also records
-    p50/p95/p99 deadline-slack / completion-latency and per-task-type
-    QoE frequencies for the rush-hour and cloud-crunch scenarios.
+    p50/p95/p99 deadline-slack / completion-latency, windowed p95/p99
+    deadline-hit rates, and per-task-type QoE frequencies for the
+    rush-hour, cloud-crunch, duration-jitter, and heavy-tail scenarios.
     """
     from repro.core.task import PASSIVE, TABLE1
     from repro.obs import TraceSpec, metrics
@@ -167,7 +170,8 @@ def bench_trace(quick: bool) -> dict:
 
     tails = {}
     tail_duration = 15_000.0 if quick else 45_000.0
-    for sc in ("rush-hour", "cloud-crunch"):
+    for sc in ("rush-hour", "cloud-crunch", "duration-jitter",
+               "heavy-tail"):
         spec = get(sc, duration_ms=tail_duration)
         res = run_scenario_fleet(spec, "DEMS-A", trace=tspec)
         metrics.check_conservation(res.counters)
@@ -175,6 +179,8 @@ def bench_trace(quick: bool) -> dict:
                                   list(spec.model_names))
         tails[sc] = dict(
             hit_rate=round(tm["hit_rate"], 4),
+            deadline_hit={k: round(v, 4) if isinstance(v, float) else v
+                          for k, v in tm["deadline_hit"].items()},
             slack_ms={p: round(v, 1) for p, v in tm["slack_ms"].items()},
             latency_ms={p: round(v, 1)
                         for p, v in tm["latency_ms"].items()},

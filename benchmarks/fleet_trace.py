@@ -4,8 +4,8 @@ Runs one registry scenario under one fleet policy with the full
 :class:`~repro.obs.trace.TraceSpec` and renders what the compiled tick
 program decided, tick by tick — admissions, dispatches, drops by cause,
 steals/migrations/peer offloads, queue depths — plus the paper's tail
-scoreboard (p50/p95/p99 deadline slack and completion latency,
-per-task-type QoE success frequencies).
+scoreboard (p50/p95/p99 deadline slack and completion latency, windowed
+p95/p99 deadline-hit rates, per-task-type QoE success frequencies).
 
     PYTHONPATH=src python benchmarks/fleet_trace.py \\
         --scenario cloud-crunch --policy DEMS-A --duration-ms 20000
@@ -65,6 +65,10 @@ def tail_table(tm: dict) -> str:
             f"{tm['slack_ms'][p]:8.0f}" for p in ("p50", "p95", "p99")),
         "completion lat  " + " ".join(
             f"{tm['latency_ms'][p]:8.0f}" for p in ("p50", "p95", "p99")),
+        f"deadline-hit tail (per ~1s window): "
+        f"mean {100 * tm['deadline_hit']['mean']:.1f}%  "
+        f"p95 {100 * tm['deadline_hit']['p95']:.1f}%  "
+        f"p99 {100 * tm['deadline_hit']['p99']:.1f}%",
         "QoE frequency (per task type): " + "  ".join(
             f"{k}={100 * v:.1f}%" for k, v in tm["qoe_frequency"].items()),
     ]

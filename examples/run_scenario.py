@@ -7,8 +7,9 @@
     PYTHONPATH=src python examples/run_scenario.py --scenario hetero-edges \
         --policy DEMS --backend fleet --cooperation
 
-``--cooperation`` enables the cross-edge peer-offload exchange (fleet
-backend only; the oracle runs edges as silos).  Passing more than one
+``--cooperation`` enables the cross-edge peer-offload exchange on the
+fleet backend; a ``*-COOP`` policy name enables it on both backends
+(the oracle runs the lockstep multi-edge ``FleetOracle``).  Passing more than one
 ``--seeds`` value runs the fleet backend's whole seed sweep as a single
 compiled program (``run_fleet_batch``).  ``--trace`` turns on the
 flight recorder (fleet backend, single run) and prints the tail
@@ -54,9 +55,11 @@ def main() -> None:
           f" duration={spec.duration_ms / 1000:.0f}s")
 
     if args.backend in ("oracle", "both"):
-        if args.policy not in ALL_POLICIES:
+        base = args.policy[:-5] if args.policy.endswith("-COOP") \
+            else args.policy
+        if base not in ALL_POLICIES:
             ap.error(f"--policy {args.policy!r} unknown to the oracle; "
-                     f"choose from {ALL_POLICIES}")
+                     f"choose from {ALL_POLICIES} (plus '-COOP' variants)")
         run = run_scenario_oracle(spec, args.policy)
         print("oracle  ", run.merged.summary())
         for e, r in enumerate(run.per_edge):
@@ -110,6 +113,11 @@ def main() -> None:
                   f"{tm['latency_ms']['p50']:.0f}/"
                   f"{tm['latency_ms']['p95']:.0f}/"
                   f"{tm['latency_ms']['p99']:.0f} ms")
+            dh = tm["deadline_hit"]
+            print(f"         deadline-hit tail (~1s windows): "
+                  f"mean={100 * dh['mean']:.1f}% "
+                  f"p95={100 * dh['p95']:.1f}% "
+                  f"p99={100 * dh['p99']:.1f}%")
             print(f"         QoE freq: " + "  ".join(
                 f"{k}={100 * v:.0f}%"
                 for k, v in tm['qoe_frequency'].items()))

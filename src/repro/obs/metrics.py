@@ -13,7 +13,8 @@ The three product surfaces:
 * :func:`time_series` — fleet-summed per-tick QoS/QoE and decision
   series (the figures' raw material);
 * :func:`tail_metrics` — the paper's distributional claims as numbers:
-  per-task-type success frequencies (QoE), deadline-hit rate, and
+  per-task-type success frequencies (QoE), deadline-hit rate, the
+  windowed p95/p99 deadline-hit tail (:func:`deadline_hit_tail`), and
   p50/p95/p99 deadline-slack / completion-latency percentiles read out
   of the in-program histograms (:func:`hist_percentiles`);
 * :func:`conservation_ledger` / :func:`check_conservation` — the
@@ -127,6 +128,40 @@ def check_conservation(counters: TickCounters) -> None:
             f"{int(resid[t])} (arrived != settled + in-flight)")
 
 
+def deadline_hit_tail(counters: TickCounters, *,
+                      window_ms: float = 1_000.0,
+                      dt_ms: float = 25.0) -> dict[str, float]:
+    """Tail-QoS scoreboard: windowed deadline-hit rate percentiles.
+
+    The per-tick fleet-summed hit/miss/drop series is aggregated into
+    ``window_ms`` buckets; each bucket's hit rate ``hit / settled`` is
+    one observation, and the *lower* tail of that distribution is the
+    service-level number a fleet operator cares about — "in the worst
+    1 % of seconds, what fraction of frames still met their deadline?".
+    Reported as ``mean`` plus ``p95``/``p99`` (the 5th/1st percentile of
+    per-window hit rates, i.e. the rate the fleet beats 95 %/99 % of the
+    time).  Windows where nothing settled are skipped; an all-idle run
+    gives ``nan``.
+    """
+    ts = time_series(counters)
+    per = max(int(round(window_ms / dt_ms)), 1)
+    n = len(ts["hit"])
+    rates = []
+    for s in range(0, n, per):
+        hit = float(ts["hit"][s:s + per].sum())
+        settled = float(ts["settled"][s:s + per].sum())
+        if settled > 0:
+            rates.append(hit / settled)
+    if not rates:
+        nan = float("nan")
+        return dict(mean=nan, p95=nan, p99=nan, windows=0)
+    r = np.asarray(rates, dtype=np.float64)
+    return dict(mean=float(r.mean()),
+                p95=float(np.percentile(r, 5.0)),
+                p99=float(np.percentile(r, 1.0)),
+                windows=int(r.size))
+
+
 def qoe_frequencies(counters: TickCounters,
                     model_names: Sequence[str] | None = None
                     ) -> dict[str, float]:
@@ -153,7 +188,8 @@ def tail_metrics(counters: TickCounters, spec: TraceSpec,
                  model_names: Sequence[str] | None = None) -> dict:
     """The distributional scoreboard for one traced run.
 
-    Returns deadline-hit/miss/drop totals and rate, per-task-type QoE
+    Returns deadline-hit/miss/drop totals and rate, the windowed
+    tail-QoS scoreboard (:func:`deadline_hit_tail`), per-task-type QoE
     success frequencies, and p50/p95/p99 deadline-slack and
     completion-latency percentiles (successful tasks; ms, bin-width
     resolution).
@@ -166,6 +202,7 @@ def tail_metrics(counters: TickCounters, spec: TraceSpec,
     return dict(
         hit=hit, miss=miss, drop=drop,
         hit_rate=hit / settled,
+        deadline_hit=deadline_hit_tail(counters),
         qoe_frequency=qoe_frequencies(counters, model_names),
         slack_ms=hist_percentiles(c.slack_hist, spec),
         latency_ms=hist_percentiles(c.latency_hist, spec),

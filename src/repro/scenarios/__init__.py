@@ -5,7 +5,8 @@ See :mod:`repro.scenarios.spec` for the vocabulary,
 :mod:`repro.scenarios.runner` for one-call execution on the discrete-event
 oracle or the JAX fleet simulator.
 """
-from repro.scenarios.compile import (OracleInputs, SweepRun, compile_fleet,
+from repro.scenarios.compile import (OracleInputs, SweepRun,
+                                     compile_exec_jitter, compile_fleet,
                                      compile_fleet_batch, compile_oracle,
                                      compile_registry_batch)
 from repro.scenarios.registry import SCENARIOS, get, names
@@ -15,15 +16,16 @@ from repro.scenarios.runner import (fleet_summary, fleet_summary_batch,
                                     run_scenario_fleet_batch,
                                     run_scenario_oracle)
 from repro.scenarios.spec import (BandwidthTrace, Burst, CloudOutage,
-                                  DroneSpec, EdgeSite, ScenarioSpec,
-                                  ThetaTrapezium)
+                                  DroneSpec, DurationJitter, EdgeSite,
+                                  ScenarioSpec, ThetaTrapezium)
 
 __all__ = [
-    "BandwidthTrace", "Burst", "CloudOutage", "DroneSpec", "EdgeSite",
-    "OracleInputs",
+    "BandwidthTrace", "Burst", "CloudOutage", "DroneSpec", "DurationJitter",
+    "EdgeSite", "OracleInputs",
     "SCENARIOS", "ScenarioSpec", "SweepRun", "ThetaTrapezium",
-    "compile_fleet", "compile_fleet_batch", "compile_oracle",
-    "compile_registry_batch", "fleet_summary", "fleet_summary_batch",
-    "get", "merge_results", "names", "run_registry_sweep",
-    "run_scenario_fleet", "run_scenario_fleet_batch", "run_scenario_oracle",
+    "compile_exec_jitter", "compile_fleet", "compile_fleet_batch",
+    "compile_oracle", "compile_registry_batch", "fleet_summary",
+    "fleet_summary_batch", "get", "merge_results", "names",
+    "run_registry_sweep", "run_scenario_fleet", "run_scenario_fleet_batch",
+    "run_scenario_oracle",
 ]

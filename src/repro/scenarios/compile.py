@@ -63,11 +63,29 @@ def _bw_fn(spec: ScenarioSpec, e: int) -> Callable[[float], float]:
         lo=b.lo, hi=b.hi, start=b.start)
 
 
+def n_steps(total_ms: float, step_ms: float, what: str = "duration") -> int:
+    """Number of ``step_ms`` steps covering ``total_ms``, validated.
+
+    ``int(total / step)`` truncates: a duration not divisible by the step
+    (or mere float drift, e.g. ``0.1 * 3``) silently drops the final
+    steps.  Round instead, tolerate only float noise, and raise on
+    genuinely non-divisible specs so the mission horizon is always exact.
+    """
+    ratio = total_ms / step_ms
+    n = round(ratio)
+    if n <= 0 or abs(ratio - n) > 1e-6 * max(1.0, abs(ratio)):
+        raise ValueError(
+            f"{what} {total_ms} ms is not an integer multiple of the "
+            f"{step_ms} ms step (ratio {ratio!r}); pick divisible values "
+            "so no ticks are silently dropped")
+    return int(n)
+
+
 def _arrival_times(spec: ScenarioSpec, d: int,
                    rng: np.random.Generator) -> tuple[float, list[float]]:
     """Base (phase, segment times) for drone ``d`` — task_stream protocol."""
     phase = float(rng.uniform(0, spec.segment_ms))
-    n_segments = int(spec.duration_ms / spec.segment_ms)
+    n_segments = n_steps(spec.duration_ms, spec.segment_ms, "duration")
     times = [s * spec.segment_ms + phase for s in range(n_segments)]
     return phase, times
 
@@ -115,6 +133,45 @@ def _emit(spec: ScenarioSpec, sink, seed=None) -> None:
             sink(t, d, assignment(spec, d, t), order)
 
 
+def compile_exec_jitter(spec: ScenarioSpec, dt: float = 25.0,
+                        n_ticks: int | None = None
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-(tick, model) execution-duration multiplier tables.
+
+    Returns ``(edge_tab, cloud_tab)``, each ``float32 [T, M]`` with
+    median-1.0 log-normal samples per :class:`~repro.scenarios.spec.
+    DurationJitter` — or exact ones when ``spec.jitter`` is ``None`` (and
+    bit-identically when every sigma is zero, since ``exp(N(0, 0)) ==
+    1.0``).  Both simulators consume the *same* tables: the fleet as the
+    dense ``FleetSignals.exec_jit`` lane, the oracle through
+    :class:`repro.sim.network.TableEdgeLatencyModel` /
+    :class:`~repro.sim.network.TableCloudLatencyModel` indexing by
+    ``min(now // dt, T - 1)`` — so a task executing at time ``t`` draws
+    the same multiplier in either backend.
+    """
+    m = len(spec.model_names)
+    if n_ticks is None:
+        n_ticks = n_steps(spec.duration_ms, dt, "duration")
+    j = spec.jitter
+    if j is None:
+        ones = np.ones((n_ticks, m), np.float32)
+        return ones, ones.copy()
+    rng = np.random.default_rng([spec.seed, 0x4A17, j.seed])
+
+    def lognormal(sigma: float, clip: tuple[float, float]) -> np.ndarray:
+        x = np.exp(rng.normal(0.0, sigma, size=(n_ticks, m)))
+        return np.clip(x, clip[0], clip[1])
+
+    edge = lognormal(j.edge_sigma, j.edge_clip)
+    cloud = lognormal(j.cloud_sigma, j.cloud_clip)
+    if j.heavy_tail_p > 0.0:
+        # Lambda cold-start-like stragglers: rare multiplicative spikes
+        tail = rng.random(size=(n_ticks, m)) < j.heavy_tail_p
+        cloud = np.where(
+            tail, np.clip(cloud * j.heavy_tail_mult, *j.cloud_clip), cloud)
+    return edge.astype(np.float32), cloud.astype(np.float32)
+
+
 def compile_oracle(spec: ScenarioSpec) -> OracleInputs:
     """Per-edge arrival streams + traces for the discrete-event engine."""
     edge_models = [spec.edge_models(e) for e in range(spec.n_edges)]
@@ -149,7 +206,7 @@ def compile_fleet(spec: ScenarioSpec, dt: float = 25.0) -> FleetSignals:
 
     m = len(spec.model_names)
     n_edges = spec.n_edges
-    n_ticks = int(spec.duration_ms / dt)
+    n_ticks = n_steps(spec.duration_ms, dt, "duration")
     times = np.arange(n_ticks, dtype=np.float32) * dt
 
     arrive = np.zeros((n_ticks, n_edges, m), dtype=bool)
@@ -192,12 +249,21 @@ def compile_fleet(spec: ScenarioSpec, dt: float = 25.0) -> FleetSignals:
     order = rng.permuted(np.tile(np.arange(m), (n_ticks, n_edges, 1)),
                          axis=2).astype(np.int32)
 
+    # sampled execution-duration multipliers, shared with the oracle's
+    # table latency models; axis -1 is (edge, cloud).  Every edge sees
+    # the same [T, M] tables so a peer-offloaded task keeps its draw.
+    ej, cj = compile_exec_jitter(spec, dt, n_ticks)
+    exec_jit = np.broadcast_to(
+        np.stack([ej, cj], axis=-1)[:, None, :, :],
+        (n_ticks, n_edges, m, 2)).copy()
+
     return FleetSignals(
         times=jnp.asarray(times), theta=jnp.asarray(theta),
         bw=jnp.asarray(bw), arrive=jnp.asarray(arrive),
         order=jnp.asarray(order),
         load_mult=jnp.asarray(load_mult), cloud_up=jnp.asarray(cloud_up),
-        valid=jnp.ones((n_ticks, n_edges), bool))
+        valid=jnp.ones((n_ticks, n_edges), bool),
+        exec_jit=jnp.asarray(exec_jit))
 
 
 def compile_fleet_batch(spec: ScenarioSpec, seeds: tuple[int, ...],
@@ -230,7 +296,8 @@ def _slice_edge(sig: FleetSignals, e: int) -> FleetSignals:
         times=sig.times, theta=sig.theta[:, e:e + 1],
         bw=sig.bw[:, e:e + 1], arrive=sig.arrive[:, e:e + 1],
         order=sig.order[:, e:e + 1], load_mult=sig.load_mult[:, e:e + 1],
-        cloud_up=sig.cloud_up, valid=sig.valid[:, e:e + 1])
+        cloud_up=sig.cloud_up, valid=sig.valid[:, e:e + 1],
+        exec_jit=sig.exec_jit[:, e:e + 1])
 
 
 def compile_registry_batch(scenarios=None, policies=("DEMS",),
@@ -278,3 +345,58 @@ def compile_registry_batch(scenarios=None, policies=("DEMS",),
                 rows.append(SweepRun(scenario=sc, policy=pol, seed=seed,
                                      lanes=lanes))
     return build_fleet_batch(runs, dt=dt), rows
+
+
+def compile_registry_groups(scenarios=None, policies=("DEMS",),
+                            seeds=(0,), *, dt: float = 25.0,
+                            duration_ms: float | None = None
+                            ) -> list[tuple[FleetBatch, list[SweepRun]]]:
+    """The sweep as exact-shape groups — the single-device lowering.
+
+    On one device the single padded batch of
+    :func:`compile_registry_batch` buys no parallelism, yet every replica
+    still pays max-shape padding and (with any cooperative policy in the
+    mix) the un-flattened multi-edge step + peer-offload rounds — the
+    full registry ran *slower* batched than looped.  This lowering
+    partitions the same sweep into groups keyed by exact
+    ``(ticks, edges, models, cooperative)`` shape: non-cooperative runs
+    are edge-flattened per group (1-edge replicas, zero edge padding),
+    cooperative runs group by their true multi-edge shape, and
+    peer-offload rounds compile only into cooperative groups.  Within a
+    group stacking is exact — no padding at all — so each group's
+    ``run_batch`` rows still equal the per-scenario ``run_fleet`` loop
+    bitwise.
+
+    Returns ``(batch, rows)`` per group; each row's ``lanes`` index into
+    its *own* group's batch.  Rows across all groups partition the sweep.
+    """
+    from repro.scenarios.registry import get, names
+    from repro.sim.fleet_jax import _resolve_policy
+
+    groups: dict = {}
+    sig_cache: dict = {}
+    for sc in (tuple(scenarios) if scenarios else names()):
+        spec = get(sc) if duration_ms is None else get(
+            sc, duration_ms=duration_ms)
+        for pol in policies:
+            coop = _resolve_policy(pol).cooperation
+            for seed in seeds:
+                sp = dataclasses.replace(spec, seed=seed)
+                if (sc, seed) not in sig_cache:
+                    sig = compile_fleet(sp, dt)
+                    sig_cache[sc, seed] = (
+                        sig, [_slice_edge(sig, e)
+                              for e in range(sp.n_edges)])
+                whole, slices = sig_cache[sc, seed]
+                sigs = [whole] if coop else slices
+                t, e, m = sigs[0].arrive.shape
+                g = groups.setdefault((t, e, m, coop),
+                                      dict(runs=[], rows=[], lane=0))
+                g["runs"].extend((sp.models, pol, s, sp.cloud_concurrency)
+                                 for s in sigs)
+                lanes = tuple(range(g["lane"], g["lane"] + len(sigs)))
+                g["lane"] += len(sigs)
+                g["rows"].append(SweepRun(scenario=sc, policy=pol,
+                                          seed=seed, lanes=lanes))
+    return [(build_fleet_batch(g["runs"], dt=dt), g["rows"])
+            for g in groups.values()]

@@ -11,8 +11,8 @@ from typing import Callable
 
 from repro.core.task import ACTIVE, PASSIVE
 from repro.scenarios.spec import (BandwidthTrace, Burst, CloudOutage,
-                                  DroneSpec, EdgeSite, ScenarioSpec,
-                                  ThetaTrapezium)
+                                  DroneSpec, DurationJitter, EdgeSite,
+                                  ScenarioSpec, ThetaTrapezium)
 
 
 def baseline() -> ScenarioSpec:
@@ -108,6 +108,33 @@ def bw_fade() -> ScenarioSpec:
         bandwidth=BandwidthTrace(seed=11, lo=0.3, hi=6.0, start=2.0))
 
 
+def duration_jitter() -> ScenarioSpec:
+    """Stochastic execution durations (Fig 1 distributions): two edges of
+    four drones with log-normal per-(tick, model) duration multipliers on
+    both the Jetson-class edge and the Lambda cloud — the fidelity regime
+    where *tail* latency, not mean latency, decides deadline hits.
+    Multi-edge, so ``*-COOP`` policies get same-sample oracle validation
+    through the lockstep :class:`~repro.sim.engine.FleetOracle`."""
+    return ScenarioSpec(
+        name="duration-jitter",
+        edges=(EdgeSite(0, 0), EdgeSite(3_000, 0)),
+        drones=(DroneSpec(waypoints=((0.0, 100.0),)),
+                DroneSpec(waypoints=((100.0, 0.0),)),
+                DroneSpec(waypoints=((3_000.0, 100.0),)),
+                DroneSpec(waypoints=((2_900.0, 0.0),))),
+        jitter=DurationJitter(edge_sigma=0.10, cloud_sigma=0.18))
+
+
+def heavy_tail() -> ScenarioSpec:
+    """Long-tailed cloud durations (Fig 1b): moderate body jitter plus a
+    5 % chance any cloud sample triples (Lambda cold-start-shaped
+    stragglers) — p99 deadline-hit is where policies separate."""
+    return ScenarioSpec(
+        name="heavy-tail",
+        jitter=DurationJitter(edge_sigma=0.08, cloud_sigma=0.25,
+                              heavy_tail_p=0.05, heavy_tail_mult=3.0))
+
+
 SCENARIOS: dict[str, Callable[[], ScenarioSpec]] = {
     "baseline": baseline,
     "rush-hour": rush_hour,
@@ -117,6 +144,8 @@ SCENARIOS: dict[str, Callable[[], ScenarioSpec]] = {
     "churn": churn,
     "cloud-crunch": cloud_crunch,
     "bw-fade": bw_fade,
+    "duration-jitter": duration_jitter,
+    "heavy-tail": heavy_tail,
 }
 
 

@@ -17,11 +17,13 @@ import jax
 import numpy as np
 
 from repro.core.schedulers import make_policy
-from repro.scenarios.compile import (compile_fleet, compile_fleet_batch,
-                                     compile_oracle)
+from repro.scenarios.compile import (compile_exec_jitter, compile_fleet,
+                                     compile_fleet_batch, compile_oracle)
 from repro.scenarios.spec import ScenarioSpec
-from repro.sim.engine import ModelStats, Results, Simulator
-from repro.sim.network import CloudLatencyModel, EdgeLatencyModel
+from repro.sim.engine import FleetOracle, ModelStats, Results, Simulator
+from repro.sim.network import (CloudLatencyModel, EdgeLatencyModel,
+                               TableCloudLatencyModel,
+                               TableEdgeLatencyModel)
 
 
 def merge_results(results: list[Results]) -> Results:
@@ -51,31 +53,64 @@ def run_scenario_oracle(spec: ScenarioSpec, policy: str, *,
                         edge_model: EdgeLatencyModel | None = None,
                         cloud_concurrency: int | None = None,
                         cloud_model_overrides: dict | None = None,
+                        dt: float = 25.0,
                         **policy_overrides) -> OracleScenarioRun:
-    """One event-driven Simulator per edge site; silo (non-cooperative).
+    """One event-driven Simulator per edge site.
 
     ``cloud_concurrency`` defaults to ``spec.cloud_concurrency`` (each
     edge's share of the bounded FaaS pool); ``cloud_model_overrides``
     replaces :class:`CloudLatencyModel` fields (e.g. ``sigma=1e-6`` for
     deterministic fleet-agreement comparisons) while the compiled θ and
     bandwidth traces stay attached.
+
+    With ``spec.jitter`` set, both latency models become table-backed
+    (:class:`~repro.sim.network.TableEdgeLatencyModel` /
+    :class:`~repro.sim.network.TableCloudLatencyModel`) over the *same*
+    per-(tick, model) sample tables the fleet simulator consumes as its
+    ``exec_jit`` lane — same-sample fleet-vs-oracle comparisons.
+
+    A ``*-COOP`` policy runs the per-edge simulators through the
+    :class:`~repro.sim.engine.FleetOracle` lockstep wrapper (base policy
+    on each edge + cross-edge peer offload between ``dt`` slices,
+    mirroring the fleet's exchange); silo policies keep the independent
+    per-edge loop.
     """
+    coop = policy.endswith("-COOP")
+    base_policy = policy[:-5] if coop else policy
     compiled = compile_oracle(spec)
-    per_edge: list[Results] = []
+    jit_tables = None
+    if spec.jitter is not None:
+        jit_tables = compile_exec_jitter(spec, dt)
+        if edge_model is None:
+            edge_model = TableEdgeLatencyModel(
+                table=jit_tables[0], names=spec.model_names, dt=dt)
+    sims: list[Simulator] = []
     for e, arrivals in enumerate(compiled.edge_arrivals):
-        cloud_model = CloudLatencyModel(
-            latency_at=compiled.theta_fns[e],
-            bandwidth_at=compiled.bw_fns[e],
-            **(cloud_model_overrides or {}))
-        sim = Simulator(
-            make_policy(policy, **policy_overrides), arrivals,
+        shaping = dict(latency_at=compiled.theta_fns[e],
+                       bandwidth_at=compiled.bw_fns[e])
+        if jit_tables is not None:
+            cloud_model = TableCloudLatencyModel(
+                table=jit_tables[1], names=spec.model_names, dt=dt,
+                **shaping, **(cloud_model_overrides or {}))
+        else:
+            cloud_model = CloudLatencyModel(
+                **shaping, **(cloud_model_overrides or {}))
+        sims.append(Simulator(
+            make_policy(base_policy, **policy_overrides), arrivals,
             spec.duration_ms,
             cloud_concurrency=spec.cloud_concurrency
             if cloud_concurrency is None else cloud_concurrency,
             edge_model=edge_model, cloud_model=cloud_model,
             cloud_outages=compiled.outages,
-            seed=spec.seed + e)
-        per_edge.append(sim.run())
+            seed=spec.seed + e))
+    if coop:
+        from repro.sim.fleet_jax import FleetPolicy
+        fp = FleetPolicy.from_name(policy)
+        per_edge = FleetOracle(
+            sims, spec.duration_ms, dt=dt, slack_ms=fp.coop_slack_ms,
+            max_transfers=fp.coop_max_transfers).run()
+    else:
+        per_edge = [sim.run() for sim in sims]
     return OracleScenarioRun(spec=spec, per_edge=per_edge,
                              merged=merge_results(per_edge))
 
@@ -144,12 +179,60 @@ def run_registry_sweep(scenarios=None, policies=("DEMS",), seeds=(0,), *,
     edge axis; the model axis stays padded to the batch maximum, padded
     models simply never count).
     """
-    from repro.scenarios.compile import compile_registry_batch
+    from repro.scenarios.compile import (compile_registry_batch,
+                                         compile_registry_groups)
     from repro.sim.fleet_jax import FleetResult, run_batch
+
+    traced = trace is not None and trace.enabled
+
+    def summarize(res, rows):
+        final = res.final if traced else res
+        out = []
+        for row in rows:
+            # a run's lanes are its replicas: one for a padded multi-edge
+            # batch, one per edge under the edge-flattened lowering —
+            # re-stack them into the run's [E, …] state so fleet_summary
+            # reduces the per-edge values exactly as the run_fleet path
+            # would
+            def restack(tree, axis=0):
+                parts = [jax.tree.map(lambda a, i=i: a[i], tree)
+                         for i in row.lanes]
+                return parts[0] if len(parts) == 1 else jax.tree.map(
+                    lambda *xs: np.concatenate(
+                        [np.asarray(x) for x in xs], axis=axis), *parts)
+            state = restack(final)
+            d = dict(scenario=row.scenario, policy=row.policy,
+                     seed=row.seed, **fleet_summary(state))
+            if traced:
+                # trace streams are [T, E, …]: lanes rejoin on the edge
+                # axis
+                d["trace"] = FleetResult(
+                    final=state, t_hat=restack(res.t_hat, axis=1),
+                    counters=restack(res.counters, axis=1))
+            out.append(d)
+        return out
+
+    auto = isinstance(mesh, str) and mesh == "auto"
+    if (mesh is None or auto) and jax.device_count() == 1:
+        # single device: the padded max-shape batch buys no parallelism
+        # and *costs* padding + (with any coop policy) un-flattened
+        # multi-edge stepping for every replica — run exact-shape groups
+        # instead (each group unpadded, rows still bitwise equal to the
+        # per-scenario loop), then emit rows in sweep order
+        by_key = {}
+        for batch, rows in compile_registry_groups(
+                scenarios, policies, seeds, dt=dt, duration_ms=duration_ms):
+            res = jax.device_get(run_batch(batch, dt=dt, trace=trace))
+            for d in summarize(res, rows):
+                by_key[d["scenario"], d["policy"], d["seed"]] = d
+        from repro.scenarios.registry import names
+        return [by_key[sc, pol, seed]
+                for sc in (tuple(scenarios) if scenarios else names())
+                for pol in policies for seed in seeds]
 
     batch, rows = compile_registry_batch(scenarios, policies, seeds,
                                          dt=dt, duration_ms=duration_ms)
-    if isinstance(mesh, str) and mesh == "auto":
+    if auto:
         r = int(batch.signals.arrive.shape[0])
         n = max(d for d in range(1, jax.device_count() + 1) if r % d == 0)
         mesh = jax.make_mesh((n,), ("replica",)) if n > 1 else None
@@ -157,30 +240,7 @@ def run_registry_sweep(scenarios=None, policies=("DEMS",), seeds=(0,), *,
     # otherwise issue a device gather per leaf per run (slow when the
     # replica axis is sharded)
     res = jax.device_get(run_batch(batch, dt=dt, mesh=mesh, trace=trace))
-    traced = trace is not None and trace.enabled
-    final = res.final if traced else res
-    out = []
-    for row in rows:
-        # a run's lanes are its replicas: one for a padded multi-edge
-        # batch, one per edge under the edge-flattened lowering — re-stack
-        # them into the run's [E, …] state so fleet_summary reduces the
-        # per-edge values exactly as the run_fleet path would
-        def restack(tree, axis=0):
-            parts = [jax.tree.map(lambda a, i=i: a[i], tree)
-                     for i in row.lanes]
-            return parts[0] if len(parts) == 1 else jax.tree.map(
-                lambda *xs: np.concatenate([np.asarray(x) for x in xs],
-                                           axis=axis), *parts)
-        state = restack(final)
-        d = dict(scenario=row.scenario, policy=row.policy,
-                 seed=row.seed, **fleet_summary(state))
-        if traced:
-            # trace streams are [T, E, …]: lanes rejoin on the edge axis
-            d["trace"] = FleetResult(
-                final=state, t_hat=restack(res.t_hat, axis=1),
-                counters=restack(res.counters, axis=1))
-        out.append(d)
-    return out
+    return summarize(res, rows)
 
 
 def fleet_summary(final) -> dict[str, float]:

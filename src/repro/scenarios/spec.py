@@ -107,6 +107,36 @@ class BandwidthTrace:
 
 
 @dataclasses.dataclass(frozen=True)
+class DurationJitter:
+    """Stochastic per-(model, tick) execution-duration multipliers.
+
+    Both simulators draw the *same* seeded log-normal sample tables
+    (``compile.compile_exec_jitter``): the fleet consumes them as the
+    dense ``FleetSignals.exec_jit`` lane; the oracle indexes the
+    identical tables through ``network.TableEdgeLatencyModel`` /
+    ``TableCloudLatencyModel``, so fleet-vs-oracle agreement holds on
+    stochastic scenarios too.  Multipliers have median 1.0
+    (``exp(N(0, sigma))``) and scale only the compute body of a task —
+    θ(t) and bandwidth shaping stay additive on top, matching the
+    oracle's conventions.  ``sigma == 0`` yields *exactly* 1.0, making
+    the zero-variance mode bit-identical to ``jitter=None``.
+
+    ``heavy_tail_p`` mixes in Lambda cold-start-like stragglers: with
+    that probability a cloud sample is further multiplied by
+    ``heavy_tail_mult``.  Clip bounds keep edge samples inside the
+    oracle's admissible fraction band.
+    """
+
+    edge_sigma: float = 0.10
+    cloud_sigma: float = 0.18
+    heavy_tail_p: float = 0.0
+    heavy_tail_mult: float = 3.0
+    edge_clip: tuple[float, float] = (0.68, 1.77)
+    cloud_clip: tuple[float, float] = (0.40, 6.0)
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
 class ScenarioSpec:
     """A complete mission description, compilable to both simulators."""
 
@@ -124,6 +154,8 @@ class ScenarioSpec:
     # oracle Simulator's ``cloud_concurrency`` and the fleet simulator's
     # per-edge ``cloud_slots`` (small values → queue-wait under load)
     cloud_concurrency: int = 16
+    # stochastic execution durations (None → deterministic Table-1 means)
+    jitter: Optional[DurationJitter] = None
     seed: int = 0
 
     @property

@@ -342,7 +342,8 @@ class Simulator:
             if not self.edge_queue:
                 return
             task = self.edge_queue.pop(0)
-        dur = self.edge_model.sample(self.rng, task.model.t_edge)
+        dur = self.edge_model.sample(self.rng, task.model.t_edge,
+                                     now=self.now, model=task.model.name)
         self.edge_current = task
         self.edge_busy_until = self.now + dur
         self.edge_busy_total += dur
@@ -439,8 +440,9 @@ class Simulator:
                 continue
             if self.policy.adaptive:
                 self.adaptive[task.model.name].on_sent()
-            dur = self.cloud_model.sample(self.rng, task.model.t_cloud,
-                                          self.now) + self._cold_penalty()
+            dur = self.cloud_model.sample(
+                self.rng, task.model.t_cloud, self.now,
+                model=task.model.name) + self._cold_penalty()
             self.cloud_inflight += 1
             self._push(self.now + dur, "cloud_done", (task, dur))
 
@@ -537,43 +539,165 @@ class Simulator:
     # ------------------------------------------------------------------
     # main loop
     # ------------------------------------------------------------------
-    def run(self) -> Results:
-        order = list(range(len(self.arrivals)))
-        for i in order:
-            a = self.arrivals[i]
+    def prime(self) -> None:
+        """Push every arrival onto the event heap (call exactly once)."""
+        for a in self.arrivals:
             self._push(a.time, "arrival", a)
-        while self._heap:
+
+    def _handle(self, time: float, kind: str, data: object) -> None:
+        self.now = time
+        if kind == "arrival":
+            a: Arrival = data  # type: ignore[assignment]
+            self._uid += 1
+            task = Task(uid=self._uid, model=a.model,
+                        created=a.time, drone=a.drone)
+            self.tasks.append(task)
+            self.stats[a.model.name].generated += 1
+            self._route(task)
+        elif kind == "edge_done":
+            task = data  # type: ignore[assignment]
+            self.edge_current = None
+            self._finish(task, "edge")
+            self._edge_dispatch()
+        elif kind == "cloud_done":
+            task, dur = data  # type: ignore[misc]
+            self.cloud_inflight -= 1
+            if self.policy.adaptive:
+                self.adaptive[task.model.name].observe(dur)
+            self._finish(task, "cloud")
+            self._cloud_dispatch()
+        elif kind == "cloud_check":
+            self._cloud_dispatch()
+
+    def run_until(self, t: float) -> None:
+        """Drain events up to and including time ``t`` (lockstep slices:
+        the multi-edge :class:`FleetOracle` interleaves these with
+        cross-edge exchanges)."""
+        while self._heap and self._heap[0][0] <= t:
             time, _, kind, data = heapq.heappop(self._heap)
-            self.now = time
-            if kind == "arrival":
-                a: Arrival = data  # type: ignore[assignment]
-                self._uid += 1
-                task = Task(uid=self._uid, model=a.model,
-                            created=a.time, drone=a.drone)
-                self.tasks.append(task)
-                self.stats[a.model.name].generated += 1
-                self._route(task)
-            elif kind == "edge_done":
-                task = data  # type: ignore[assignment]
-                self.edge_current = None
-                self._finish(task, "edge")
-                self._edge_dispatch()
-            elif kind == "cloud_done":
-                task, dur = data  # type: ignore[misc]
-                self.cloud_inflight -= 1
-                if self.policy.adaptive:
-                    self.adaptive[task.model.name].observe(dur)
-                self._finish(task, "cloud")
-                self._cloud_dispatch()
-            elif kind == "cloud_check":
-                self._cloud_dispatch()
+            self._handle(time, kind, data)
+
+    def finalize(self) -> Results:
         self.now = self.duration
         for name, wm in self.windows.items():
             self._close_windows(self.profiles[name], until=self.duration + 1)
         return Results(policy=self.policy.name, duration=self.duration,
                        per_model=self.stats, edge_busy=self.edge_busy_total)
 
+    def run(self) -> Results:
+        self.prime()
+        self.run_until(float("inf"))
+        return self.finalize()
+
 
 def run_policy(policy: Policy, arrivals: list[Arrival], duration: float,
                **kw) -> Results:
     return Simulator(policy, arrivals, duration, **kw).run()
+
+
+class FleetOracle:
+    """Multi-edge oracle: per-edge :class:`Simulator`\\ s in lockstep.
+
+    Runs every edge's event heap in ``dt`` slices and, between slices,
+    exchanges tasks across edges exactly like the fleet simulator's
+    :func:`repro.sim.fleet_jax.peer_offload` — so ``*-COOP`` policies get
+    oracle validation like every silo branch.  Each round picks the
+    worst-min-slack edge among those holding an exportable task (queued,
+    slack below ``slack_ms``, still feasible appended behind the
+    least-loaded other edge), moves that edge's worst-slack feasible task
+    to the least-loaded peer, and repeats up to ``max_transfers`` times
+    per slice.
+
+    With ``max_transfers == 0`` (or one edge) no exchange ever fires and
+    results are identical to running each :class:`Simulator` to
+    completion on its own — the existing silo oracle path.
+    """
+
+    def __init__(self, sims: list[Simulator], duration: float, *,
+                 dt: float = 25.0, slack_ms: float = 0.0,
+                 max_transfers: int = 0):
+        self.sims = sims
+        self.duration = duration
+        self.dt = dt
+        self.slack_ms = slack_ms
+        self.max_transfers = max_transfers
+        self.peer_moved = 0
+
+    # -- fleet peer_offload mirrors (oracle-native quantities) ----------
+    def _slacks(self, sim: Simulator) -> list[float]:
+        proj = sim._projected(sim.edge_queue)
+        return [t.sched_deadline - c
+                for t, c in zip(sim.edge_queue, proj)]
+
+    def _load(self, sim: Simulator, now: float) -> float:
+        busy = max(sim.edge_busy_until - now, 0.0)
+        return busy + sum(t.model.t_edge for t in sim.edge_queue)
+
+    def _adopt(self, dst: Simulator, task: Task) -> None:
+        """Give the destination edge the state a foreign task needs."""
+        m = task.model
+        if m.name not in dst.profiles:
+            dst.profiles[m.name] = m
+            dst.min_edge_t = min(dst.min_edge_t or m.t_edge, m.t_edge)
+            dst.adaptive[m.name] = AdaptiveEstimator(static=m.t_cloud)
+            dst.stats[m.name] = ModelStats()
+            if m.qoe_alpha > 0:
+                dst.windows[m.name] = _WindowState(m.qoe_window)
+
+    def _one_transfer(self, now: float) -> bool:
+        sims = self.sims
+        n = len(sims)
+        slacks = [self._slacks(s) for s in sims]
+        min_slack = [min(sl, default=float("inf")) for sl in slacks]
+        load = [self._load(s, now) for s in sims]
+
+        # each edge's best destination load: the global minimum, or the
+        # runner-up for the least-loaded edge itself
+        lead = min(range(n), key=lambda e: load[e])
+        runner_up = min((load[e] for e in range(n) if e != lead),
+                        default=float("inf"))
+        dst_load = [runner_up if e == lead else load[lead]
+                    for e in range(n)]
+        exportable = [
+            any(sl < self.slack_ms
+                and now + dst_load[e] + t.model.t_edge <= t.sched_deadline
+                for t, sl in zip(sims[e].edge_queue, slacks[e]))
+            for e in range(n)]
+        over = [e for e in range(n)
+                if min_slack[e] < self.slack_ms and exportable[e]]
+        if not over:
+            return False
+        src = min(over, key=lambda e: min_slack[e])
+        dst = min((e for e in range(n) if e != src),
+                  key=lambda e: load[e])
+        # worst-slack task still feasible behind the destination's load
+        cands = [(sl, i) for i, (t, sl) in enumerate(
+            zip(sims[src].edge_queue, slacks[src]))
+            if sl < self.slack_ms
+            and now + load[dst] + t.model.t_edge <= t.sched_deadline]
+        if not cands:
+            return False
+        _, vi = min(cands)
+        task = sims[src].edge_queue.pop(vi)
+        self._adopt(sims[dst], task)
+        sims[dst]._edge_insert(task, sims[dst]._insert_pos(task))
+        self.peer_moved += 1
+        return True
+
+    def run(self) -> list[Results]:
+        for sim in self.sims:
+            sim.prime()
+        n_slices = max(1, round(self.duration / self.dt))
+        coop = self.max_transfers > 0 and len(self.sims) > 1
+        for i in range(n_slices):
+            t = min((i + 1) * self.dt, self.duration)
+            for sim in self.sims:
+                sim.run_until(t)
+                sim.now = max(sim.now, t)
+            if coop:
+                for _ in range(self.max_transfers):
+                    if not self._one_transfer(t):
+                        break
+        for sim in self.sims:     # drain in-flight work past the horizon
+            sim.run_until(float("inf"))
+        return [sim.finalize() for sim in self.sims]

@@ -435,6 +435,10 @@ class FleetSignals(NamedTuple):
     load_mult: jax.Array   # f32[T,E]  edge execution-time multiplier
     cloud_up: jax.Array    # bool[T]   cloud FaaS availability
     valid: jax.Array       # bool[T,E] live cells (False ⇒ padded no-op)
+    # sampled execution-duration multipliers, axis -1 = (edge, cloud);
+    # exactly 1.0 in deterministic mode, so the default lane is a
+    # bitwise no-op on every act computation it scales
+    exec_jit: jax.Array    # f32[T,E,M,2]
 
 
 # ---------------------------------------------------------------------------
@@ -443,7 +447,7 @@ class FleetSignals(NamedTuple):
 
 def _resolve_cloud(st: EdgeState, tr: Optional[TickCounters],
                    tspec: TraceSpec, prof: Profiles, pp: PolicyParams, now,
-                   theta, bw_pen, cloud_frac, cloud_up):
+                   theta, bw_pen, cloud_frac, cloud_up, jit_c):
     """Dispatch matured cloud tasks into the finite FaaS pool.
 
     During a cloud outage (``cloud_up`` False) matured tasks stay parked
@@ -481,7 +485,10 @@ def _resolve_cloud(st: EdgeState, tr: Optional[TickCounters],
     avail = _free_slot_gate(st.cloud_busy_until, now, run & fits)
     dispatch = run & fits & avail
     skipped = run & ~fits & avail     # popped + JIT-dropped, slot stays free
-    act = cloud_frac * prof.t_cloud[st.cq_model] + theta + bw_pen
+    # the sampled multiplier scales the compute body only — θ(t) and the
+    # bandwidth penalty stay additive, like the oracle's shaped_delta
+    act = cloud_frac * prof.t_cloud[st.cq_model] * jit_c[st.cq_model] \
+        + theta + bw_pen
     success = dispatch & (now + act <= st.cq.deadline)
     util = jnp.where(success, prof.gamma_c[st.cq_model],
                      jnp.where(dispatch, -prof.cost_c[st.cq_model],
@@ -533,7 +540,7 @@ def _gems_bulk(st: EdgeState, prof: Profiles, success_mask, done_mask,
 
 def _gems_act(st: EdgeState, tr: Optional[TickCounters], tspec: TraceSpec,
               prof: Profiles, pp: PolicyParams, now, theta, bw_pen,
-              cloud_frac):
+              cloud_frac, jit_c):
     """Alg. 1: reschedule lagging models, close expired windows.
 
     Rescheduled tasks go through the same finite pool as the dispatch
@@ -577,7 +584,8 @@ def _gems_act(st: EdgeState, tr: Optional[TickCounters], tspec: TraceSpec,
     move = want & _free_slot_gate(st.cloud_busy_until, now, want)
     # slots are *held* for the actual duration either way; only the
     # outcome model differs between GEMS (estimate) and GEMS-A (actual)
-    hold = cloud_frac * prof.t_cloud[st.eq.model] + theta + bw_pen
+    hold = cloud_frac * prof.t_cloud[st.eq.model] * jit_c[st.eq.model] \
+        + theta + bw_pen
     act = jnp.where(pp.adaptive, hold, prof.t_cloud[st.eq.model])
     success = move & (now + act <= st.eq.abs_dl)
     tr = _tr_add(
@@ -790,7 +798,7 @@ def _route_arrival(st: EdgeState, tr: Optional[TickCounters],
 
 def _edge_execute(st: EdgeState, tr: Optional[TickCounters],
                   tspec: TraceSpec, prof: Profiles, pp: PolicyParams, now,
-                  dt, edge_frac, min_edge_t):
+                  dt, edge_frac, min_edge_t, jit_e):
     """Edge executor: JIT drops, stealing, starting the next task.
 
     Queue entries carry the *effective* edge latency (speed factor folded
@@ -842,7 +850,7 @@ def _edge_execute(st: EdgeState, tr: Optional[TickCounters],
         run_dl = jnp.where(can_steal, sdl, s.eq.abs_dl[head_idx])
         run_te = jnp.where(can_steal, ste, s.eq.t_edge[head_idx])
         start = can_steal | start_head
-        act = edge_frac * run_te
+        act = edge_frac * run_te * jit_e[run_model]
         success = start & (now + act <= run_dl)
         util = jnp.where(success, prof.gamma_e[run_model],
                          jnp.where(start, -prof.cost_e[run_model], 0.0))
@@ -892,16 +900,19 @@ def make_step(dt: float, edge_frac: float, cloud_frac: float,
 
     def step(prof: Profiles, pp: PolicyParams, st: EdgeState, inputs):
         # arrive: bool[M]; order: i32[M]; theta/bw/load_mult/valid per-edge
-        now, theta, bw, arrive, order, load_mult, cloud_up, valid = inputs
+        (now, theta, bw, arrive, order, load_mult, cloud_up, valid,
+         exec_jit) = inputs
         # signed cellular transfer penalty (network.py convention); exactly
         # 0.0 at the nominal benchmark bandwidth
         bw_pen = network.bandwidth_penalty_ms(bw)
+        # per-model sampled duration multipliers for this (tick, edge)
+        jit_e, jit_c = exec_jit[:, 0], exec_jit[:, 1]
         min_edge_t = prof.t_edge.min()     # padded models sit at +inf
         st0 = st
         tr = zero_counters(prof.t_edge.shape[0], tspec) \
             if tspec.counters else None
         st, tr = _resolve_cloud(st, tr, tspec, prof, pp, now, theta, bw_pen,
-                                cloud_frac, cloud_up)
+                                cloud_frac, cloud_up, jit_c)
 
         # §3.3: tasks of a segment are inserted in randomized order; the
         # loop is load-bearing — each insertion's feasibility depends on
@@ -915,9 +926,9 @@ def make_step(dt: float, edge_frac: float, cloud_frac: float,
         st, tr = jax.lax.fori_loop(0, prof.t_edge.shape[0], route_one,
                                    (st, tr))
         st, tr = _edge_execute(st, tr, tspec, prof, pp, now, dt, edge_frac,
-                               min_edge_t)
+                               min_edge_t, jit_e)
         st, tr = _gems_act(st, tr, tspec, prof, pp, now, theta, bw_pen,
-                           cloud_frac)
+                           cloud_frac, jit_c)
         # padded (tick, edge) cells are exact no-ops
         st = jax.tree.map(lambda a, b: jnp.where(valid, a, b), st, st0)
         if tr is not None:
@@ -1071,7 +1082,8 @@ def default_signals(n_models: int, *, n_edges: int, drones_per_edge: int = 3,
         order=jnp.asarray(order),
         load_mult=jnp.ones((n_ticks, n_edges), jnp.float32),
         cloud_up=jnp.ones(n_ticks, bool),
-        valid=jnp.ones((n_ticks, n_edges), bool))
+        valid=jnp.ones((n_ticks, n_edges), bool),
+        exec_jit=jnp.ones((n_ticks, n_edges, m, 2), jnp.float32))
 
 
 def _resolve_policy(policy) -> FleetPolicy:
@@ -1110,7 +1122,7 @@ def _shard_leading(tree, mesh: jax.sharding.Mesh, axes: int = 1):
 # tick-signal leaves keep the replica axis leading; the edge axis sits at
 # a field-dependent position (None = no edge axis)
 _SIGNAL_EDGE_AXIS = dict(times=None, theta=2, bw=2, arrive=2, order=2,
-                         load_mult=2, cloud_up=None, valid=2)
+                         load_mult=2, cloud_up=None, valid=2, exec_jit=2)
 
 
 def _shard_signals(sig: FleetSignals, mesh: jax.sharding.Mesh
@@ -1161,7 +1173,7 @@ def _fleet_program(dt: float, edge_frac: float, cloud_frac: float,
 
     def run(prof, pp, state, xs):
         vstep = jax.vmap(step, in_axes=(
-            None, None, 0, (None, 0, 0, 0, 0, 0, None, 0)))
+            None, None, 0, (None, 0, 0, 0, 0, 0, None, 0, 0)))
 
         def scan_body(state, xs_t):
             now = xs_t[0]
@@ -1293,7 +1305,11 @@ def pad_signals(signals: list[FleetSignals],
             load_mult=np.pad(s.load_mult, ((0, pt), (0, pe)),
                              constant_values=1.0),
             cloud_up=np.pad(s.cloud_up, (0, pt), constant_values=True),
-            valid=valid))
+            valid=valid,
+            # padded cells keep the deterministic ×1.0 multiplier
+            exec_jit=np.pad(s.exec_jit,
+                            ((0, pt), (0, pe), (0, mmax - m), (0, 0)),
+                            constant_values=1.0)))
     return jax.tree.map(lambda *xs: jnp.stack([np.asarray(x)
                                                for x in xs]), *padded)
 

@@ -163,7 +163,10 @@ class EdgeLatencyModel:
     spike_p: float = 0.0    # transient stalls (GC pause, thermal throttle)
     spike_mult: float = 1.4
 
-    def sample(self, rng: np.random.Generator, t_edge: float) -> float:
+    def sample(self, rng: np.random.Generator, t_edge: float,
+               now: float = 0.0, model: str | None = None) -> float:
+        # ``now``/``model`` let table-backed subclasses share the fleet's
+        # per-(tick, model) draws; the distributional model ignores them
         f = rng.normal(self.mean_frac, self.sd_frac)
         f = float(np.clip(f, self.lo_frac, self.hi_frac))
         if self.spike_p and rng.random() < self.spike_p:
@@ -205,9 +208,72 @@ class CloudLatencyModel:
             self.bandwidth_at(now), self.segment_kb)
 
     def sample(self, rng: np.random.Generator, t_cloud: float,
-               now: float) -> float:
+               now: float, model: str | None = None) -> float:
         body = t_cloud * float(rng.lognormal(math.log(self.median_frac),
                                              self.sigma))
         if rng.random() < self.cold_start_p:
             body += self.cold_start_ms
         return body + self.shaped_delta(now)
+
+
+# ---------------------------------------------------------------------------
+# Table-backed samplers: the oracle drawing the *fleet's* samples
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TableEdgeLatencyModel(EdgeLatencyModel):
+    """Edge durations from a per-(tick, model) multiplier table.
+
+    ``table`` is the ``float32 [T, M]`` edge lane of
+    :func:`repro.scenarios.compile.compile_exec_jitter` — the *same*
+    array the fleet simulator consumes as ``FleetSignals.exec_jit[...,
+    0]`` — so a task executing at time ``now`` draws the identical
+    multiplier in both backends and fleet-vs-oracle agreement holds on
+    stochastic scenarios.  ``base_frac`` is the fleet's deterministic
+    ``edge_frac`` (0.62): the sampled duration is
+    ``t_edge · base_frac · table[now // dt, model]``.
+    """
+
+    table: np.ndarray | None = None
+    names: tuple[str, ...] = ()
+    dt: float = 25.0
+    base_frac: float = 0.62
+
+    def __post_init__(self):
+        self._idx = {n: i for i, n in enumerate(self.names)}
+
+    def sample(self, rng: np.random.Generator, t_edge: float,
+               now: float = 0.0, model: str | None = None) -> float:
+        tick = min(int(now / self.dt), self.table.shape[0] - 1)
+        jit = float(self.table[tick, self._idx[model]]) \
+            if model is not None else 1.0
+        return t_edge * self.base_frac * jit
+
+
+@dataclasses.dataclass
+class TableCloudLatencyModel(CloudLatencyModel):
+    """Cloud durations from a per-(tick, model) multiplier table.
+
+    The cloud lane of :func:`repro.scenarios.compile.compile_exec_jitter`
+    (``FleetSignals.exec_jit[..., 1]``); the multiplier scales the
+    compute body only — θ(t)/bandwidth shaping stays the additive
+    ``shaped_delta``, exactly like the fleet's act formula.  ``base_frac``
+    is the fleet's deterministic ``cloud_frac`` (0.80); the lognormal /
+    cold-start machinery of the parent is bypassed entirely, so given the
+    table the sample is deterministic.
+    """
+
+    table: np.ndarray | None = None
+    names: tuple[str, ...] = ()
+    dt: float = 25.0
+    base_frac: float = 0.80
+
+    def __post_init__(self):
+        self._idx = {n: i for i, n in enumerate(self.names)}
+
+    def sample(self, rng: np.random.Generator, t_cloud: float,
+               now: float, model: str | None = None) -> float:
+        tick = min(int(now / self.dt), self.table.shape[0] - 1)
+        jit = float(self.table[tick, self._idx[model]]) \
+            if model is not None else 1.0
+        return t_cloud * self.base_frac * jit + self.shaped_delta(now)

@@ -1,0 +1,144 @@
+"""Dependency-free stand-in for the slice of Hypothesis this suite uses.
+
+The property tests guard their import with ``try: import hypothesis``
+and fall back to this shim, so they *run* (instead of skipping) on
+containers built without the ``[test]`` extra.  It is not Hypothesis:
+there is no shrinking, no example database, and no adaptive generation —
+just deterministic seeded sampling of ``max_examples`` inputs per test,
+with a light bias toward interval endpoints.  Failures therefore
+reproduce bit-for-bit across runs, and the real package (when installed)
+wins the import race unchanged.
+
+Supported surface: ``given`` (positional and keyword strategies),
+``settings(max_examples=..., deadline=...)``, and the strategies
+``integers, floats, booleans, sampled_from, lists, tuples, builds,
+composite``.
+"""
+from __future__ import annotations
+
+import hashlib
+import random
+from types import SimpleNamespace
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn, label="strategy"):
+        self._draw = draw_fn
+        self._label = label
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"minihyp.{self._label}"
+
+
+def _endpoint_bias(rng, lo, hi, body):
+    # ~10% of draws land exactly on an interval endpoint: cheap coverage
+    # of the off-by-one territory shrinking would otherwise find
+    r = rng.random()
+    if r < 0.05:
+        return lo
+    if r < 0.10:
+        return hi
+    return body()
+
+
+def integers(min_value, max_value):
+    return SearchStrategy(
+        lambda rng: _endpoint_bias(rng, min_value, max_value,
+                                   lambda: rng.randint(min_value, max_value)),
+        f"integers({min_value}, {max_value})")
+
+
+def floats(min_value, max_value, **_kwargs):
+    return SearchStrategy(
+        lambda rng: _endpoint_bias(
+            rng, float(min_value), float(max_value),
+            lambda: rng.uniform(min_value, max_value)),
+        f"floats({min_value}, {max_value})")
+
+
+def booleans():
+    return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return SearchStrategy(lambda rng: seq[rng.randrange(len(seq))],
+                          "sampled_from")
+
+
+def lists(elements, *, min_size=0, max_size=None):
+    hi = min_size + 8 if max_size is None else max_size
+    return SearchStrategy(
+        lambda rng: [elements.example(rng)
+                     for _ in range(rng.randint(min_size, hi))],
+        "lists")
+
+
+def tuples(*strategies):
+    return SearchStrategy(
+        lambda rng: tuple(s.example(rng) for s in strategies), "tuples")
+
+
+def builds(target, *args, **kwargs):
+    return SearchStrategy(
+        lambda rng: target(*[a.example(rng) for a in args],
+                           **{k: v.example(rng) for k, v in kwargs.items()}),
+        f"builds({getattr(target, '__name__', target)!r})")
+
+
+def composite(f):
+    def builder(*args, **kwargs):
+        def do_draw(rng):
+            return f(lambda s: s.example(rng), *args, **kwargs)
+        return SearchStrategy(do_draw, f"composite({f.__name__!r})")
+    builder.__name__ = f.__name__
+    return builder
+
+
+strategies = SimpleNamespace(
+    integers=integers, floats=floats, booleans=booleans,
+    sampled_from=sampled_from, lists=lists, tuples=tuples, builds=builds,
+    composite=composite, SearchStrategy=SearchStrategy)
+
+
+def settings(max_examples: int = 100, deadline=None, **_ignored):
+    def apply(f):
+        f._mh_max_examples = max_examples
+        return f
+    return apply
+
+
+def given(*arg_strategies, **kw_strategies):
+    def accept(f):
+        # stable per-test seed: failures replay identically run to run
+        base = int.from_bytes(
+            hashlib.sha256(f.__qualname__.encode()).digest()[:8], "big")
+
+        def wrapper():
+            n = getattr(wrapper, "_mh_max_examples", 100)
+            for i in range(n):
+                rng = random.Random(base ^ (i * 0x9E3779B97F4A7C15))
+                args = [s.example(rng) for s in arg_strategies]
+                kwargs = {k: s.example(rng)
+                          for k, s in kw_strategies.items()}
+                try:
+                    f(*args, **kwargs)
+                except Exception as e:
+                    note = (f"minihyp falsifying example #{i}: "
+                            f"args={args!r} kwargs={kwargs!r}")
+                    if hasattr(e, "add_note"):
+                        e.add_note(note)
+                    raise
+
+        # plain zero-arg signature (no functools.wraps): pytest must not
+        # see the original parameters and go hunting for fixtures
+        wrapper.__name__ = f.__name__
+        wrapper.__qualname__ = f.__qualname__
+        wrapper.__doc__ = f.__doc__
+        wrapper.__module__ = f.__module__
+        wrapper.hypothesis = SimpleNamespace(inner_test=f)
+        return wrapper
+    return accept

@@ -10,8 +10,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without the [test] extra: vendored shim
+    from _minihyp import given, settings, strategies as st  # noqa: F401
 
 from repro.core import jax_sched as js
 from repro.core.schedulers import AdaptiveEstimator, make_policy

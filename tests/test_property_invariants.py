@@ -4,8 +4,10 @@ import dataclasses
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without the [test] extra: vendored shim
+    from _minihyp import given, settings, strategies as st  # noqa: F401
 
 from repro.core.schedulers import ALL_POLICIES, make_policy
 from repro.core.task import ModelProfile

@@ -1,0 +1,179 @@
+"""Stochastic execution durations: the sampled ``exec_jit`` lane, the
+same-sample table-backed oracle, the lockstep multi-edge ``FleetOracle``,
+seeded determinism across every entry point, and the tick-rounding
+regression guard."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.schedulers import make_policy
+from repro.core.task import PASSIVE, TABLE1
+from repro.scenarios import (DurationJitter, compile_exec_jitter,
+                             fleet_summary, fleet_summary_batch, get,
+                             run_registry_sweep, run_scenario_fleet,
+                             run_scenario_fleet_batch, run_scenario_oracle)
+from repro.scenarios.compile import compile_fleet, n_steps
+from repro.sim.engine import Arrival, FleetOracle, Simulator
+from repro.sim.network import EdgeLatencyModel
+
+MODELS = [TABLE1[n] for n in PASSIVE]
+
+
+# ---------------------------------------------------------------------------
+# tick rounding (regression: int() truncation silently dropped ticks)
+# ---------------------------------------------------------------------------
+
+def test_n_steps_rounds_float_noise_and_rejects_non_divisible():
+    assert n_steps(300_000.0, 25.0) == 12_000
+    # 3 * 0.1 = 0.30000000000000004: int() truncation would give 2
+    assert n_steps(0.1 + 0.1 + 0.1, 0.1) == 3
+    with pytest.raises(ValueError, match="not an integer multiple"):
+        n_steps(1_000.0, 300.0)
+    with pytest.raises(ValueError):
+        n_steps(10.0, 300.0)          # would round to zero ticks
+
+
+def test_compile_fleet_rejects_non_divisible_duration():
+    spec = get("baseline", duration_ms=1_010.0)
+    with pytest.raises(ValueError, match="not an integer multiple"):
+        compile_fleet(spec)
+
+
+# ---------------------------------------------------------------------------
+# the sampled jitter tables
+# ---------------------------------------------------------------------------
+
+def test_exec_jitter_tables_seeded_clipped_and_unit_median():
+    spec = get("duration-jitter", duration_ms=30_000.0)
+    ej, cj = compile_exec_jitter(spec)
+    m = len(spec.model_names)
+    assert ej.shape == (1_200, m) and cj.shape == (1_200, m)
+    j = spec.jitter
+    assert ej.min() >= j.edge_clip[0] and ej.max() <= j.edge_clip[1]
+    assert cj.min() >= j.cloud_clip[0] and cj.max() <= j.cloud_clip[1]
+    # log-normal with zero log-mean: the sample log-mean sits near 0
+    assert abs(np.log(ej).mean()) < 0.02
+    # same spec, same tables; different mission seed, different tables
+    ej2, cj2 = compile_exec_jitter(spec)
+    np.testing.assert_array_equal(ej, ej2)
+    np.testing.assert_array_equal(cj, cj2)
+    ej3, _ = compile_exec_jitter(dataclasses.replace(spec, seed=1))
+    assert not np.array_equal(ej, ej3)
+
+
+def test_heavy_tail_inflates_cloud_samples_only():
+    spec = get("heavy-tail", duration_ms=60_000.0)
+    ej, cj = compile_exec_jitter(spec)
+    # ~5 % of cloud samples are tripled: far beyond the 0.25-σ body
+    assert (cj > 2.0).mean() > 0.01
+    assert cj.max() <= spec.jitter.cloud_clip[1]
+    assert ej.max() <= spec.jitter.edge_clip[1] < 2.0
+
+
+def test_jitter_none_gives_unit_tables():
+    ej, cj = compile_exec_jitter(get("baseline", duration_ms=10_000.0))
+    assert (ej == 1.0).all() and (cj == 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# zero-variance mode ≡ today's deterministic goldens, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_zero_variance_jitter_is_bitwise_deterministic_run():
+    spec = get("rush-hour", duration_ms=30_000.0)
+    frozen = dataclasses.replace(spec, jitter=DurationJitter(
+        edge_sigma=0.0, cloud_sigma=0.0, heavy_tail_p=0.0))
+    a = run_scenario_fleet(spec, "DEMS-A")
+    b = run_scenario_fleet(frozen, "DEMS-A")
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# fixed-seed determinism across every entry point
+# ---------------------------------------------------------------------------
+
+def test_fixed_seed_determinism_across_entry_points():
+    spec = get("heavy-tail", duration_ms=15_000.0)
+    once = fleet_summary(run_scenario_fleet(spec, "DEMS-A"))
+    again = fleet_summary(run_scenario_fleet(spec, "DEMS-A"))
+    assert once == again
+    batch = fleet_summary_batch(
+        run_scenario_fleet_batch(spec, "DEMS-A", seeds=(0,)))[0]
+    assert batch == once
+    row = run_registry_sweep(["heavy-tail"], ("DEMS-A",), (0,),
+                             duration_ms=15_000.0)[0]
+    for k in ("completed", "missed", "dropped", "qos_utility",
+              "qoe_utility"):
+        assert row[k] == once[k], (k, row[k], once[k])
+
+
+# ---------------------------------------------------------------------------
+# fleet vs the same-sample oracle on the stochastic scenarios
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario,policy", [
+    ("duration-jitter", "DEMS-A"),
+    ("duration-jitter", "GEMS"),
+    ("duration-jitter", "DEMS-COOP"),
+    ("heavy-tail", "DEMS-A"),
+    ("heavy-tail", "GEMS"),
+])
+def test_fleet_matches_oracle_on_stochastic_scenarios(scenario, policy):
+    """With ``spec.jitter`` set, the oracle's table-backed latency models
+    replay the *same* per-(tick, model) samples the fleet's ``exec_jit``
+    lane consumes, so agreement stays <10 % even though durations are
+    stochastic; ``*-COOP`` runs through the lockstep multi-edge
+    :class:`FleetOracle`."""
+    spec = get(scenario, duration_ms=60_000.0)
+    oracle = run_scenario_oracle(spec, policy).merged
+    fleet = fleet_summary(run_scenario_fleet(spec, policy))
+    d_done = abs(fleet["completed"] - oracle.completed) / oracle.completed
+    d_qos = abs(fleet["qos_utility"] - oracle.qos_utility) / \
+        abs(oracle.qos_utility)
+    assert d_done < 0.10, (policy, fleet["completed"], oracle.completed)
+    assert d_qos < 0.10, (policy, fleet["qos_utility"], oracle.qos_utility)
+
+
+# ---------------------------------------------------------------------------
+# the lockstep multi-edge oracle
+# ---------------------------------------------------------------------------
+
+def test_coop_oracle_single_edge_reduces_to_silo():
+    """One edge (or ``max_transfers=0``) leaves nothing to exchange: the
+    sliced lockstep run must settle every task exactly like the plain
+    independent-simulator path."""
+    spec = get("heavy-tail", duration_ms=30_000.0)
+    coop = run_scenario_oracle(spec, "DEMS-COOP").merged
+    silo = run_scenario_oracle(spec, "DEMS").merged
+    assert coop.completed == silo.completed
+    assert coop.qos_utility == pytest.approx(silo.qos_utility)
+
+
+def test_fleet_oracle_moves_tasks_off_the_overloaded_edge():
+    """Edge 0 drowning, edge 1 idle: with a positive slack threshold the
+    exchange round must export tight-slack tasks to the idle edge (DEMS's
+    feasibility-checked inserts keep *projected* slack non-negative, so
+    ``slack_ms=0`` would never fire here), and every task — moved or not
+    — still reaches a terminal state (conservation)."""
+    em = EdgeLatencyModel(mean_frac=0.62, sd_frac=0.0, lo_frac=0.62,
+                          hi_frac=0.62)
+    flood = [Arrival(time=float(i * 5), model=MODELS[i % len(MODELS)],
+                     drone=0) for i in range(120)]
+    idle = [Arrival(time=10_000.0, model=MODELS[0], drone=1)]
+    sims = [Simulator(make_policy("DEMS"), arr, 30_000.0, seed=e,
+                      edge_model=em)
+            for e, arr in enumerate((flood, idle))]
+    orc = FleetOracle(sims, 30_000.0, dt=25.0, slack_ms=400.0,
+                      max_transfers=2)
+    results = orc.run()
+    assert orc.peer_moved > 0
+    generated = sum(st.generated for r in results
+                    for st in r.per_model.values())
+    settled = sum(st.edge_success + st.edge_miss + st.cloud_success
+                  + st.cloud_miss + st.dropped
+                  for r in results for st in r.per_model.values())
+    assert generated == len(flood) + len(idle)
+    assert settled == generated
