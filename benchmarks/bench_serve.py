@@ -1,0 +1,142 @@
+"""Online-controller latency benchmark → ``controller`` section of
+``BENCH_fleet.json``.
+
+    PYTHONPATH=src python benchmarks/bench_serve.py            # full
+    PYTHONPATH=src python benchmarks/bench_serve.py --quick    # CI smoke
+
+Floods a :class:`repro.serve.controller.FleetController` with a
+synthetic arrival storm — every (edge, model) cell of every tick
+occupied, the densest signal the window builder can emit — and measures
+the two latencies that bound the online control plane:
+
+* **per-tick decision latency** — wall-clock of each jitted
+  ``step_chunk`` window divided by its tick count (p50/p95/p99 over the
+  run, warmup window excluded so the one-off compile is reported
+  separately);
+* **ingest-to-decision lag** — wall-clock from a tick's first
+  ``submit()`` to the window step that scheduled it, as driven by a
+  virtual-time :meth:`poll` cadence of one window.
+
+The section lands next to ``throughput``/``sweep``/``trace`` in the
+committed baseline (same ``quick``/``full`` mode split), so the serve
+layer's latency trajectory is tracked alongside the simulator's
+throughput.  ``--check`` gates on p95 per-tick latency regressing >2×
+against the committed same-mode section (wall-clock tails on shared CI
+runners are noisy; the gate is a guardrail against order-of-magnitude
+rot, not a 25 % throughput gate like ``bench_fleet.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_fleet.json"
+
+
+def _pcts(samples) -> dict:
+    a = np.asarray(samples, dtype=np.float64)
+    if a.size == 0:
+        return {f"p{q:g}": None for q in (50, 95, 99)}
+    return {f"p{q:g}": round(float(np.percentile(a, q)), 4)
+            for q in (50, 95, 99)}
+
+
+def bench_controller(*, policy: str = "DEMS-A", n_edges: int = 4,
+                     window_ticks: int = 8, duration_ms: float = 30_000.0,
+                     dt: float = 25.0) -> dict:
+    """Arrival-flood latency profile of one controller configuration."""
+    from repro.scenarios.registry import get
+    from repro.serve.controller import FleetController
+
+    models = get("baseline").models
+    ctl = FleetController(models, policy, n_edges=n_edges, dt=dt,
+                          window_ticks=window_ticks)
+
+    def flood(lo_ms: float, hi_ms: float) -> None:
+        # worst-case storm: every (edge, model) cell of every tick fires
+        t = lo_ms
+        while t < hi_ms:
+            for e in range(n_edges):
+                for m in range(len(models)):
+                    ctl.submit(t, e, m)
+            t += dt
+
+    # warmup: one window through the jit cache, timed as the compile bill
+    w_ms = window_ticks * dt
+    flood(0.0, w_ms)
+    t0 = time.perf_counter()
+    ctl.poll(w_ms)
+    compile_s = time.perf_counter() - t0
+    ctl.reset_latency_stats()
+
+    now = w_ms
+    while now < duration_ms:
+        flood(now, now + w_ms)
+        now += w_ms
+        ctl.poll(now)
+    ctl.close()
+
+    steps = np.asarray(ctl.step_latencies_ms)
+    snap = ctl.metrics_snapshot()
+    return dict(
+        policy=policy, n_edges=n_edges, n_models=len(models),
+        window_ticks=window_ticks, dt_ms=dt,
+        duration_ms=duration_ms, windows=int(ctl.windows_run),
+        arrivals=int(snap["completed"] + snap["missed"] + snap["dropped"]),
+        compile_s=round(compile_s, 3),
+        per_tick_ms=_pcts(steps / window_ticks),
+        step_ms=_pcts(steps),
+        ingest_to_decision_ms=_pcts(ctl.ingest_lags_ms),
+        completion_rate=round(snap["completion_rate"], 4))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="short flood (CI smoke): 2 edges, 10 s mission")
+    ap.add_argument("--policy", default="DEMS-A")
+    ap.add_argument("--out", default=str(DEFAULT_OUT),
+                    help="BENCH json to merge the controller section into")
+    ap.add_argument("--no-write", action="store_true",
+                    help="print the section, leave the json untouched")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="gate: fail if p95 per-tick latency regressed "
+                         ">2x vs this baseline's same-mode section")
+    args = ap.parse_args(argv)
+
+    kw = (dict(n_edges=2, duration_ms=10_000.0) if args.quick
+          else dict(n_edges=4, duration_ms=30_000.0))
+    section = bench_controller(policy=args.policy, **kw)
+    mode = "quick" if args.quick else "full"
+    print(json.dumps({mode: {"controller": section}}, indent=2))
+
+    if args.check:
+        base = json.load(open(args.check)).get(mode, {}).get("controller")
+        if base and base["per_tick_ms"]["p95"]:
+            ratio = section["per_tick_ms"]["p95"] / base["per_tick_ms"]["p95"]
+            print(f"p95 per-tick {section['per_tick_ms']['p95']} ms vs "
+                  f"baseline {base['per_tick_ms']['p95']} ms "
+                  f"({ratio:.2f}x)")
+            if ratio > 2.0:
+                print("FAIL: controller p95 per-tick latency regressed >2x")
+                return 1
+        else:
+            print(f"no {mode}.controller baseline in {args.check}; skipped")
+
+    if not args.no_write:
+        path = pathlib.Path(args.out)
+        data = json.load(open(path)) if path.exists() else {}
+        data.setdefault(mode, {})["controller"] = section
+        path.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
+        print(f"wrote {mode}.controller -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

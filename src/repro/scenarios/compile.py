@@ -172,6 +172,234 @@ def compile_exec_jitter(spec: ScenarioSpec, dt: float = 25.0,
     return edge.astype(np.float32), cloud.astype(np.float32)
 
 
+class SignalWindowBuilder:
+    """Incremental, dt-aligned assembly of :class:`FleetSignals` windows.
+
+    The seam between the scenario compiler and the online control plane
+    (:class:`repro.serve.controller.FleetController`): telemetry events
+    land in their ``dt`` tick — arrivals spill *forward* to the next
+    free (edge, model) cell, exactly the batch compiler's convention;
+    channel updates (θ, bandwidth, edge load, cloud availability) hold
+    their last value forward — and :meth:`emit_window` pops the next
+    ``n`` ticks as a window for
+    :meth:`repro.sim.fleet_jax.FleetProgram.step_chunk`.
+
+    Two modes share the code path:
+
+    * **compiler mode** (``horizon_ticks`` set): the buffer is the whole
+      mission and arrivals that run off the end spill *backwards* from
+      their original tick (a burst reaching the horizon keeps its task
+      count).  :func:`compile_fleet` is exactly this: feed every event,
+      bulk-load the dense channels, emit one horizon-length window.
+      The ``order`` lane defaults to a placeholder the compiler always
+      overwrites via :meth:`load_dense`.
+    * **streaming mode** (no horizon): the buffer grows with telemetry,
+      nothing ever spills backwards, and events older than the emit
+      cursor clamp forward to it (the past cannot be rewritten — the
+      documented late-telemetry contract).  The ``order`` lane draws a
+      per-tick seeded permutation (``[order_seed, 0x0dde, tick]``), so
+      insertion order is reproducible across restarts regardless of
+      window boundaries.
+
+    ``exec_jit`` defaults to the deterministic ×1.0 lane in both modes
+    (live cloud variability enters through θ/bandwidth telemetry);
+    compiler mode overwrites it with the sampled tables.
+    """
+
+    # channels with a forward-hold current value (name → per-row shape fn)
+    _HELD = ("theta", "bw", "load_mult", "cloud_up", "exec_jit")
+
+    def __init__(self, n_edges: int, n_models: int, *, dt: float = 25.0,
+                 horizon_ticks: int | None = None, start_tick: int = 0,
+                 order_seed: int = 0):
+        self.n_edges, self.n_models = int(n_edges), int(n_models)
+        self.dt = float(dt)
+        self.horizon = horizon_ticks
+        self.order_seed = order_seed
+        self._base = int(start_tick)   # absolute tick of buffer row 0
+        self._rows = 0                 # allocated rows past the base
+        self._hi = int(start_tick)     # one past the last tick touched
+        e, m = self.n_edges, self.n_models
+        self._cur = dict(
+            theta=np.zeros(e, np.float32),
+            bw=np.full(e, network.NOMINAL_BW_MBPS, np.float32),
+            load_mult=np.ones(e, np.float32),
+            cloud_up=True,
+            exec_jit=np.ones((e, m, 2), np.float32))
+        self._buf: dict[str, np.ndarray] = {}
+        self._ensure_rows(horizon_ticks if horizon_ticks is not None else 64)
+
+    # -- buffer management -------------------------------------------------
+    def _default_order(self, tick0: int, n: int) -> np.ndarray:
+        e, m = self.n_edges, self.n_models
+        if self.horizon is not None:
+            # compiler-mode placeholder: always overwritten by load_dense
+            return np.broadcast_to(np.arange(m, dtype=np.int32),
+                                   (n, e, m)).copy()
+        return np.stack([
+            np.random.default_rng([self.order_seed, 0x0dde, t]).permuted(
+                np.tile(np.arange(m), (e, 1)), axis=1)
+            for t in range(tick0, tick0 + n)]).astype(np.int32)
+
+    def _ensure_rows(self, rows: int) -> None:
+        if rows <= self._rows:
+            return
+        rows = max(rows, 2 * self._rows)
+        if self.horizon is not None:
+            rows = min(rows, self.horizon - self._base)
+        n_new = rows - self._rows
+        e, m = self.n_edges, self.n_models
+        cur = self._cur
+        grow = dict(
+            arrive=np.zeros((n_new, e, m), bool),
+            theta=np.broadcast_to(cur["theta"], (n_new, e)).copy(),
+            bw=np.broadcast_to(cur["bw"], (n_new, e)).copy(),
+            load_mult=np.broadcast_to(cur["load_mult"], (n_new, e)).copy(),
+            cloud_up=np.full(n_new, cur["cloud_up"], bool),
+            valid=np.ones((n_new, e), bool),
+            exec_jit=np.broadcast_to(cur["exec_jit"],
+                                     (n_new, e, m, 2)).copy(),
+            order=self._default_order(self._base + self._rows, n_new))
+        self._buf = grow if not self._buf else {
+            k: np.concatenate([self._buf[k], grow[k]]) for k in grow}
+        self._rows = rows
+
+    def _tick(self, t_ms: float) -> int:
+        """The dt tick a timestamp lands in: clamped into the horizon in
+        compiler mode, forward to the emit cursor in streaming mode."""
+        tk = int(t_ms / self.dt)
+        if self.horizon is not None:
+            tk = min(tk, self.horizon - 1)
+        return max(tk, self._base)
+
+    def _touch(self, tk: int) -> int:
+        """Allocate through absolute tick ``tk``; return its row."""
+        self._ensure_rows(tk - self._base + 1)
+        self._hi = max(self._hi, tk + 1)
+        return tk - self._base
+
+    @property
+    def cursor(self) -> int:
+        """The first tick the next :meth:`emit_window` will cover."""
+        return self._base
+
+    @property
+    def pending_ticks(self) -> int:
+        """Ticks of telemetry seen beyond the emit cursor."""
+        return self._hi - self._base
+
+    # -- telemetry ingestion ----------------------------------------------
+    def add_arrival(self, t_ms: float, edge: int, model: int) -> int:
+        """One task arrival; returns the tick it landed in after spill.
+
+        The fleet step inserts at most one task per (edge, model) per
+        tick, so coincident same-model arrivals spill forward to the
+        next free cell (and, in compiler mode only, backwards when the
+        horizon is full) — an exact task count at the price of a few
+        ``dt`` of skew.
+        """
+        tk = self._tick(t_ms)
+        r = self._touch(tk)
+        a = self._buf["arrive"]
+        if self.horizon is not None:
+            last = self.horizon - 1 - self._base
+            while r < last and a[r, edge, model]:
+                r += 1
+            if a[r, edge, model]:      # horizon full → spill backwards so
+                r = tk - self._base    # a burst running to the end still
+                while r > 0 and a[r, edge, model]:   # keeps its task count
+                    r -= 1
+        else:
+            while True:
+                if a[r, edge, model]:
+                    r = self._touch(self._base + r + 1)
+                    a = self._buf["arrive"]
+                    continue
+                break
+        a[r, edge, model] = True
+        self._hi = max(self._hi, self._base + r + 1)
+        return self._base + r
+
+    def set_theta(self, t_ms: float, value: float,
+                  edge: int | None = None) -> None:
+        """Added WAN latency θ from ``t_ms`` on (one edge, or all)."""
+        self._set("theta", t_ms, value, edge)
+
+    def set_bandwidth(self, t_ms: float, mbps: float,
+                      edge: int | None = None) -> None:
+        """Cellular bandwidth from ``t_ms`` on (one edge, or all)."""
+        self._set("bw", t_ms, mbps, edge)
+
+    def set_load(self, t_ms: float, mult: float,
+                 edge: int | None = None) -> None:
+        """Edge execution-time multiplier from ``t_ms`` on."""
+        self._set("load_mult", t_ms, mult, edge)
+
+    def set_cloud_up(self, t_ms: float, up: bool) -> None:
+        """Cloud FaaS availability from ``t_ms`` on."""
+        r = self._touch(self._tick(t_ms))
+        self._buf["cloud_up"][r:] = bool(up)
+        self._cur["cloud_up"] = bool(up)
+
+    def _set(self, field: str, t_ms: float, value: float,
+             edge: int | None) -> None:
+        r = self._touch(self._tick(t_ms))
+        sl = slice(None) if edge is None else edge
+        self._buf[field][r:, sl] = value
+        self._cur[field][sl] = value
+
+    def load_dense(self, field: str, values: np.ndarray,
+                   start_tick: int = 0) -> None:
+        """Bulk-write a dense channel block (the batch compiler's path).
+
+        ``values`` covers ticks ``[start_tick, start_tick + len)``;
+        held channels update their hold from the last written row, so
+        streaming past the block continues its final value.
+        """
+        values = np.asarray(values)
+        if start_tick < self._base:
+            raise ValueError(
+                f"load_dense({field!r}) starts at tick {start_tick}, "
+                f"before the emit cursor {self._base} — emitted windows "
+                f"cannot be rewritten")
+        self._touch(start_tick + len(values) - 1)
+        r = start_tick - self._base
+        self._buf[field][r:r + len(values)] = values
+        if field in self._HELD:
+            if field == "cloud_up":
+                self._cur[field] = bool(values[-1])
+            else:
+                self._cur[field][...] = values[-1]
+
+    # -- window emission ---------------------------------------------------
+    def emit_window(self, n_ticks: int) -> FleetSignals:
+        """Pop ticks ``[cursor, cursor + n_ticks)`` as dense signals.
+
+        Ticks with no telemetry carry each channel's held value and no
+        arrivals; the cursor advances, so these ticks are final.
+        """
+        import jax.numpy as jnp
+
+        self._ensure_rows(n_ticks)
+        t0 = self._base
+        times = np.arange(t0, t0 + n_ticks, dtype=np.float32) * self.dt
+        window = FleetSignals(
+            times=jnp.asarray(times),
+            theta=jnp.asarray(self._buf["theta"][:n_ticks]),
+            bw=jnp.asarray(self._buf["bw"][:n_ticks]),
+            arrive=jnp.asarray(self._buf["arrive"][:n_ticks]),
+            order=jnp.asarray(self._buf["order"][:n_ticks]),
+            load_mult=jnp.asarray(self._buf["load_mult"][:n_ticks]),
+            cloud_up=jnp.asarray(self._buf["cloud_up"][:n_ticks]),
+            valid=jnp.asarray(self._buf["valid"][:n_ticks]),
+            exec_jit=jnp.asarray(self._buf["exec_jit"][:n_ticks]))
+        self._buf = {k: v[n_ticks:].copy() for k, v in self._buf.items()}
+        self._rows -= n_ticks
+        self._base += n_ticks
+        self._hi = max(self._hi, self._base)
+        return window
+
+
 def compile_oracle(spec: ScenarioSpec) -> OracleInputs:
     """Per-edge arrival streams + traces for the discrete-event engine."""
     edge_models = [spec.edge_models(e) for e in range(spec.n_edges)]
@@ -195,33 +423,26 @@ def compile_oracle(spec: ScenarioSpec) -> OracleInputs:
 def compile_fleet(spec: ScenarioSpec, dt: float = 25.0) -> FleetSignals:
     """Dense per-tick array signals for :func:`repro.sim.fleet_jax.run_fleet`.
 
-    The fleet simulator inserts at most one task per (edge, model) per
-    tick; coincident same-model arrivals (colliding drone phases, burst
-    extras landing on base segment times) would silently collapse on a
-    boolean mask and deflate the load versus the oracle, so each extra
-    task spills to the next tick with a free (edge, model) slot — a few
-    ``dt`` of skew against sub-second deadlines, but an exact task count.
+    "Compile the whole horizon" over the same
+    :class:`SignalWindowBuilder` the online controller streams through:
+    every arrival event feeds :meth:`~SignalWindowBuilder.add_arrival`
+    (coincident same-model arrivals would silently collapse on a boolean
+    mask and deflate the load versus the oracle, so each extra task
+    spills to the next free (edge, model) cell — a few ``dt`` of skew
+    against sub-second deadlines, but an exact task count), the dense
+    channels are bulk-loaded, and the mission pops out as one
+    horizon-length window.
     """
-    import jax.numpy as jnp
-
     m = len(spec.model_names)
     n_edges = spec.n_edges
     n_ticks = n_steps(spec.duration_ms, dt, "duration")
     times = np.arange(n_ticks, dtype=np.float32) * dt
 
-    arrive = np.zeros((n_ticks, n_edges, m), dtype=bool)
+    b = SignalWindowBuilder(n_edges, m, dt=dt, horizon_ticks=n_ticks)
 
     def sink(t: float, d: int, e: int, order) -> None:
-        tick = min(int(t / dt), n_ticks - 1)
         for k in order:
-            tk = tick
-            while tk < n_ticks - 1 and arrive[tk, e, k]:
-                tk += 1
-            if arrive[tk, e, k]:     # horizon full → spill backwards so a
-                tk = tick            # burst running to the end still keeps
-                while tk > 0 and arrive[tk, e, k]:   # its task count
-                    tk -= 1
-            arrive[tk, e, k] = True
+            b.add_arrival(t, e, int(k))
 
     _emit(spec, sink)
 
@@ -257,13 +478,11 @@ def compile_fleet(spec: ScenarioSpec, dt: float = 25.0) -> FleetSignals:
         np.stack([ej, cj], axis=-1)[:, None, :, :],
         (n_ticks, n_edges, m, 2)).copy()
 
-    return FleetSignals(
-        times=jnp.asarray(times), theta=jnp.asarray(theta),
-        bw=jnp.asarray(bw), arrive=jnp.asarray(arrive),
-        order=jnp.asarray(order),
-        load_mult=jnp.asarray(load_mult), cloud_up=jnp.asarray(cloud_up),
-        valid=jnp.ones((n_ticks, n_edges), bool),
-        exec_jit=jnp.asarray(exec_jit))
+    for field, vals in (("theta", theta), ("bw", bw),
+                        ("cloud_up", cloud_up), ("load_mult", load_mult),
+                        ("order", order), ("exec_jit", exec_jit)):
+        b.load_dense(field, vals)
+    return b.emit_window(n_ticks)
 
 
 def compile_fleet_batch(spec: ScenarioSpec, seeds: tuple[int, ...],

@@ -137,6 +137,63 @@ def run_scenario_fleet(spec: ScenarioSpec, policy, *, dt: float = 25.0,
                      record_trace=record_trace, trace=trace)
 
 
+def stream_scenario_fleet(spec: ScenarioSpec, policy, *, dt: float = 25.0,
+                          window_ticks: int = 16, edge_frac: float = 0.62,
+                          cloud_frac: float = 0.80, trace=None):
+    """The scenario through the *online* control plane, window-by-window.
+
+    Compiles the same dense signals as :func:`run_scenario_fleet`, then
+    feeds them through a :class:`repro.serve.controller.FleetController`
+    in ``window_ticks`` chunks via its replay bridge
+    (:meth:`~repro.serve.controller.FleetController.step_signals`).
+    Returns the controller; its ``state`` is the streamed final
+    :class:`~repro.sim.fleet_jax.EdgeState`.
+    """
+    from repro.obs.trace import TraceSpec
+    from repro.serve.controller import FleetController
+    from repro.sim.fleet_jax import slice_signals
+
+    sig = compile_fleet(spec, dt)
+    ctl = FleetController(
+        spec.models, policy, n_edges=spec.n_edges, dt=dt,
+        window_ticks=window_ticks, cloud_slots=spec.cloud_concurrency,
+        edge_frac=edge_frac, cloud_frac=cloud_frac,
+        trace=TraceSpec() if trace is None else trace)
+    n_ticks = int(sig.times.shape[0])
+    for lo in range(0, n_ticks, window_ticks):
+        ctl.step_signals(slice_signals(sig, lo, min(lo + window_ticks,
+                                                    n_ticks)))
+    return ctl
+
+
+def assert_streaming_equivalence(spec: ScenarioSpec, policy, *,
+                                 dt: float = 25.0, window_ticks: int = 16
+                                 ) -> dict[str, float]:
+    """Replay-vs-streaming bitwise check (the equivalence test hook).
+
+    Runs the scenario both ways — one :func:`run_scenario_fleet` replay
+    call and a :class:`~repro.serve.controller.FleetController` stepping
+    the identical signals window-by-window — and raises
+    ``AssertionError`` naming the diverging ``EdgeState`` fields unless
+    every leaf is bit-for-bit equal.  Returns the (shared) summary.
+    """
+    from repro.sim.fleet_jax import EdgeState
+
+    ref = run_scenario_fleet(spec, policy, dt=dt)
+    ctl = stream_scenario_fleet(spec, policy, dt=dt,
+                                window_ticks=window_ticks)
+    bad = [name for name, a, b in zip(EdgeState._fields, ref, ctl.state)
+           if not all(np.array_equal(np.asarray(x), np.asarray(y))
+                      for x, y in zip(jax.tree.leaves(a),
+                                      jax.tree.leaves(b)))]
+    if bad:
+        raise AssertionError(
+            f"streaming EdgeState diverged from replay in fields {bad} "
+            f"({spec.name!r}, policy {policy!r}, "
+            f"window_ticks={window_ticks})")
+    return fleet_summary(ctl.state)
+
+
 def run_scenario_fleet_batch(spec: ScenarioSpec, policy,
                              seeds: tuple[int, ...], *, dt: float = 25.0,
                              edge_frac: float = 0.62,

@@ -57,6 +57,14 @@ replica to the max (ticks, edges, models) shape with per-(tick, edge)
 validity; padded cells are exact no-ops.  With a 2-D device mesh the
 batch shards over a (replica, edge) grid.
 
+The compiled tick scan is exposed step-wise through
+:class:`FleetProgram` — ``init`` / ``step_chunk(state, signal_window)``
+— the seam between *replaying a scenario* and *running a fleet*: every
+replay entry point above is a thin :meth:`FleetProgram.run` loop over
+``step_chunk`` (bitwise-identical to the pre-refactor single-scan
+calls), and the online :class:`repro.serve.controller.FleetController`
+feeds the very same ``step_chunk`` with telemetry-built windows.
+
 Every entry point takes a ``trace=`` :class:`repro.obs.trace.TraceSpec`
 — the flight recorder.  It taps the tick scan's carry and emits dense
 per-tick decision counters and/or the adapted-t̂ stream as extra scan
@@ -343,8 +351,11 @@ def init_state(prof: Profiles, adapt_window: int = 10,
         eq=js.empty_edge_queue(EDGE_CAP), cq=js.empty_cloud_queue(CLOUD_CAP),
         cq_model=jnp.zeros(CLOUD_CAP, jnp.int32),
         busy_rem=jnp.zeros(()),
+        # strong f32 (not a weak Python-float fill): the stepped state
+        # comes back strongly typed, and a weak→strong aval flip would
+        # retrace the program on the second step_chunk window
         cloud_busy_until=jnp.where(jnp.arange(total) < cloud_slots,
-                                   0.0, js.POS),
+                                   0.0, js.POS).astype(jnp.float32),
         n_slots=jnp.asarray(cloud_slots, jnp.int32),
         cq_blocked=jnp.zeros(CLOUD_CAP, bool),
         seq=jnp.zeros((), jnp.int32),
@@ -1207,12 +1218,129 @@ def _fleet_program(dt: float, edge_frac: float, cloud_frac: float,
     return prog
 
 
+def slice_signals(sig: FleetSignals, lo: int, hi: int, *,
+                  tick_axis: int = 0) -> FleetSignals:
+    """Ticks ``[lo, hi)`` of a signal tree as a window (``tick_axis=1``
+    for batched ``[R, T, …]`` signals).  Every :class:`FleetSignals`
+    field carries its tick axis in the same position, so a plain tree
+    slice is a well-formed window."""
+    idx = (slice(None),) * tick_axis + (slice(lo, hi),)
+    return jax.tree.map(lambda a: a[idx], sig)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetProgram:
+    """The compiled tick program as a *step-wise* control-plane API.
+
+    ``init`` builds the stacked per-edge scheduler state;
+    :meth:`step_chunk` advances it over one dt-aligned
+    :class:`FleetSignals` window and returns the new state plus the
+    window's flight-recorder streams.  Because each tick reads only the
+    carried state and its own signal row, scanning a horizon in one call
+    or chunk-by-chunk is the *same computation* — the replay entry
+    points (:func:`run_fleet`, :func:`run_fleet_batch`,
+    :func:`run_batch`) are thin :meth:`run` loops over ``step_chunk``
+    with bitwise-identical results, and the online
+    :class:`repro.serve.controller.FleetController` calls ``step_chunk``
+    directly on telemetry-built windows.
+
+    The jitted executable is shared through the :func:`_fleet_program`
+    cache: two programs with equal static fields reuse one compile, and
+    a chunk compiles once per distinct window length.
+    """
+
+    dt: float = 25.0
+    edge_frac: float = 0.62
+    cloud_frac: float = 0.80
+    coop_rounds: int = 0
+    trace: TraceSpec = TraceSpec()
+    batched: bool = False
+    hetero: bool = False
+
+    @classmethod
+    def for_policy(cls, policy, *, trace: TraceSpec = TraceSpec(),
+                   dt: float = 25.0, edge_frac: float = 0.62,
+                   cloud_frac: float = 0.80, batched: bool = False,
+                   hetero: bool = False) -> "FleetProgram":
+        """A program whose static peer-offload bound matches ``policy``."""
+        pol = _resolve_policy(policy)
+        return cls(dt=dt, edge_frac=edge_frac, cloud_frac=cloud_frac,
+                   coop_rounds=pol.coop_max_transfers if pol.cooperation
+                   else 0, trace=trace, batched=batched, hetero=hetero)
+
+    def init(self, prof: Profiles, policy, n_edges: int,
+             cloud_slots: int = CLOUD_SLOTS,
+             total_slots: Optional[int] = None) -> EdgeState:
+        """Fresh stacked fleet state (leading edge axis), exactly the
+        state every replay entry point starts from."""
+        pol = _resolve_policy(policy)
+        return jax.vmap(
+            lambda _: init_state(prof, pol.adapt_window, cloud_slots,
+                                 total_slots=total_slots))(
+            jnp.arange(n_edges))
+
+    @property
+    def _jitted(self):
+        return _fleet_program(self.dt, self.edge_frac, self.cloud_frac,
+                              self.coop_rounds, self.trace, self.batched,
+                              self.hetero)
+
+    def step_chunk(self, prof: Profiles, pp: PolicyParams, state: EdgeState,
+                   signals: FleetSignals):
+        """Advance ``state`` over one signal window.
+
+        Returns ``(state, result)`` — ``result`` is the window's
+        :class:`FleetResult` (its trace streams cover only this window's
+        ticks) when the program's :class:`~repro.obs.trace.TraceSpec` is
+        enabled, else ``None``.  The call is bounded-latency: one jitted
+        scan of ``window_ticks`` steps, no host round-trips inside.
+        """
+        out = self._jitted(prof, pp, state, tuple(signals))
+        if self.trace.enabled:
+            return out.final, out
+        return out, None
+
+    def run(self, prof: Profiles, pp: PolicyParams, state: EdgeState,
+            signals: FleetSignals, chunk_ticks: Optional[int] = None):
+        """Replay: loop :meth:`step_chunk` over the whole horizon.
+
+        ``chunk_ticks=None`` runs the horizon as one chunk — the same
+        single compiled call (and executable) the pre-refactor entry
+        points made.  A finite ``chunk_ticks`` replays window-by-window,
+        concatenating trace streams along the tick axis; results are
+        bitwise identical either way.
+        """
+        tick_axis = 1 if self.batched else 0
+        n_ticks = signals.times.shape[tick_axis]
+        if chunk_ticks is None or chunk_ticks >= n_ticks:
+            state, res = self.step_chunk(prof, pp, state, signals)
+            return res if self.trace.enabled else state
+        chunks = []
+        for lo in range(0, n_ticks, chunk_ticks):
+            win = slice_signals(signals, lo, min(lo + chunk_ticks, n_ticks),
+                                tick_axis=tick_axis)
+            state, res = self.step_chunk(prof, pp, state, win)
+            chunks.append(res)
+        if not self.trace.enabled:
+            return state
+
+        def cat(parts):
+            if parts[0] is None:
+                return None
+            return jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=tick_axis), *parts)
+
+        return FleetResult(state, cat([c.t_hat for c in chunks]),
+                           cat([c.counters for c in chunks]))
+
+
 def run_fleet(models: list[ModelProfile], policy, signals: FleetSignals, *,
               dt: float = 25.0, edge_frac: float = 0.62,
               cloud_frac: float = 0.80, cloud_slots: int = CLOUD_SLOTS,
               mesh: Optional[jax.sharding.Mesh] = None,
               record_trace: bool = False,
-              trace: Optional[TraceSpec] = None):
+              trace: Optional[TraceSpec] = None,
+              chunk_ticks: Optional[int] = None):
     """Run the fleet simulator over arbitrary scenario signals.
 
     ``policy`` is a :class:`FleetPolicy` or a name (``"DEMS"``,
@@ -1230,20 +1358,23 @@ def run_fleet(models: list[ModelProfile], policy, signals: FleetSignals, *,
     state is bit-identical to the untraced run).  ``record_trace=True``
     is the deprecated alias for ``TraceSpec(t_hat=True)``.  The default
     returns just the final :class:`EdgeState`.
+
+    This is a thin :meth:`FleetProgram.run` loop; ``chunk_ticks``
+    replays the horizon in windows of that many ticks (bitwise-identical
+    to the default whole-horizon chunk — the streaming controller's
+    execution path).
     """
     tspec = resolve_spec(trace, record_trace)
     pol = _resolve_policy(policy)
     prof = Profiles.build(models)
     n_edges = signals.arrive.shape[1]
-    state = jax.vmap(
-        lambda _: init_state(prof, pol.adapt_window, cloud_slots))(
-        jnp.arange(n_edges))
-    run = _fleet_program(dt, edge_frac, cloud_frac,
-                         pol.coop_max_transfers if pol.cooperation else 0,
-                         tspec, False, False)
+    prog = FleetProgram.for_policy(pol, trace=tspec, dt=dt,
+                                   edge_frac=edge_frac,
+                                   cloud_frac=cloud_frac)
+    state = prog.init(prof, pol, n_edges, cloud_slots)
     if mesh is not None:
         state = _shard_leading(state, mesh)
-    return run(prof, pol.params(), state, tuple(signals))
+    return prog.run(prof, pol.params(), state, signals, chunk_ticks)
 
 
 def stack_signals(signals: list[FleetSignals]) -> FleetSignals:
@@ -1341,12 +1472,10 @@ def run_fleet_batch(models: list[ModelProfile], policy,
     pol = _resolve_policy(policy)
     prof = Profiles.build(models)
     n_edges = signals.arrive.shape[2]
-    state = jax.vmap(
-        lambda _: init_state(prof, pol.adapt_window, cloud_slots))(
-        jnp.arange(n_edges))
-    run = _fleet_program(dt, edge_frac, cloud_frac,
-                         pol.coop_max_transfers if pol.cooperation else 0,
-                         tspec, True, False)
+    prog = FleetProgram.for_policy(pol, trace=tspec, dt=dt,
+                                   edge_frac=edge_frac,
+                                   cloud_frac=cloud_frac, batched=True)
+    state = prog.init(prof, pol, n_edges, cloud_slots)
     if mesh is not None:
         # state is replica-shared (vmap in_axes None): leave it replicated
         # on a 1-D replica mesh; a 2-D mesh shards its edge axis over the
@@ -1355,7 +1484,7 @@ def run_fleet_batch(models: list[ModelProfile], policy,
             state = jax.tree.map(
                 lambda a: _put(a, mesh, (mesh.axis_names[1],)), state)
         signals = _shard_signals(signals, mesh)
-    return run(prof, pol.params(), state, tuple(signals))
+    return prog.run(prof, pol.params(), state, signals)
 
 
 class FleetBatch(NamedTuple):
@@ -1437,14 +1566,15 @@ def run_batch(batch: FleetBatch, *, dt: float = 25.0,
     tspec = resolve_spec(trace, record_trace)
     prof, pp, state, sig = (batch.profiles, batch.params, batch.state,
                             batch.signals)
-    run = _fleet_program(dt, edge_frac, cloud_frac, batch.coop_rounds,
-                         tspec, True, True)
+    prog = FleetProgram(dt=dt, edge_frac=edge_frac, cloud_frac=cloud_frac,
+                        coop_rounds=batch.coop_rounds, trace=tspec,
+                        batched=True, hetero=True)
     if mesh is not None:
         prof = _shard_leading(prof, mesh, axes=1)
         pp = _shard_leading(pp, mesh, axes=1)
         state = _shard_leading(state, mesh, axes=2)
         sig = _shard_signals(sig, mesh)
-    return run(prof, pp, state, tuple(sig))
+    return prog.run(prof, pp, state, sig)
 
 
 def simulate_fleet(models: list[ModelProfile], policy: str, *,

@@ -1,0 +1,307 @@
+"""Online control plane: FleetController, windows, checkpoints, restart.
+
+The contract under test is ROADMAP item 2's seam: the streaming
+controller is the *same computation* as batch replay — window-by-window
+``step_chunk`` over telemetry-built signals must reproduce ``run_fleet``
+bit for bit, checkpoint/restore must resume it exactly, and the
+incremental window builder must compile registry scenarios identically
+to the one-shot compiler.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.obs.trace import TraceSpec
+from repro.scenarios.compile import SignalWindowBuilder, compile_fleet
+from repro.scenarios.registry import get
+from repro.scenarios.runner import (assert_streaming_equivalence,
+                                    fleet_summary, run_scenario_fleet,
+                                    stream_scenario_fleet)
+from repro.serve.controller import FleetController, drive_stream
+from repro.sim import network
+from repro.sim.fleet_jax import run_fleet, slice_signals
+
+
+def _leaves_equal(a, b) -> list:
+    """Names of EdgeState fields whose leaves differ bitwise."""
+    from repro.sim.fleet_jax import EdgeState
+    return [name for name, x, y in zip(EdgeState._fields, a, b)
+            if not all(np.array_equal(np.asarray(u), np.asarray(v))
+                       for u, v in zip(jax.tree.leaves(x),
+                                       jax.tree.leaves(y)))]
+
+
+# ---------------------------------------------------------------------------
+# SignalWindowBuilder
+
+
+def test_builder_compiler_mode_matches_compile_fleet():
+    # compile_fleet now *is* the builder's horizon mode; pin one scenario
+    # against a hand-rolled dense compilation of the same spec
+    spec = get("rush-hour", duration_ms=5000)
+    sig = compile_fleet(spec)
+    n_ticks = int(sig.times.shape[0])
+    assert n_ticks == 200
+    assert np.asarray(sig.times)[-1] == pytest.approx((n_ticks - 1) * 25.0)
+    # task count is exact: every emitted arrival lands somewhere
+    assert int(np.asarray(sig.arrive).sum()) > 0
+
+
+def test_builder_streaming_spill_and_hold():
+    b = SignalWindowBuilder(2, 3, dt=25.0)
+    assert b.add_arrival(10.0, 0, 1) == 0
+    assert b.add_arrival(12.0, 0, 1) == 1       # same cell -> next tick
+    assert b.add_arrival(12.0, 1, 1) == 0       # other edge unaffected
+    b.set_bandwidth(50.0, 12.5, edge=1)
+    b.set_theta(100.0, 80.0)
+    b.set_cloud_up(75.0, False)
+    w = b.emit_window(5)
+    assert np.asarray(w.arrive)[:, 0, 1].tolist() == [
+        True, True, False, False, False]
+    assert np.asarray(w.bw)[1, 1] == network.NOMINAL_BW_MBPS
+    assert np.asarray(w.bw)[2, 1] == 12.5
+    assert np.asarray(w.cloud_up).tolist() == [True, True, True, False,
+                                               False]
+    # held values persist into the next window; late events clamp forward
+    w2 = b.emit_window(3)
+    assert np.asarray(w2.bw)[0, 1] == 12.5
+    assert np.asarray(w2.theta)[0, 0] == 80.0
+    assert not np.asarray(w2.cloud_up).any()
+    assert b.add_arrival(0.0, 1, 0) == b.cursor
+
+
+def test_builder_order_lane_restart_invariant():
+    # the per-tick seeded order draw must not depend on window splits or
+    # the builder's start tick, or a restarted controller would schedule
+    # same-tick arrivals differently than the uninterrupted one
+    a = SignalWindowBuilder(3, 4, order_seed=9)
+    o_a = np.concatenate([np.asarray(a.emit_window(5).order),
+                          np.asarray(a.emit_window(7).order)])
+    b = SignalWindowBuilder(3, 4, order_seed=9, start_tick=4)
+    o_b = np.asarray(b.emit_window(8).order)
+    assert np.array_equal(o_a[4:], o_b)
+
+
+def test_builder_refuses_to_rewrite_emitted_past():
+    b = SignalWindowBuilder(1, 2)
+    b.emit_window(4)
+    with pytest.raises(ValueError, match="emit cursor"):
+        b.load_dense("theta", np.zeros((2, 1), np.float32), start_tick=1)
+
+
+# ---------------------------------------------------------------------------
+# replay-vs-streaming equivalence
+
+
+@pytest.mark.parametrize("scenario,policy,window", [
+    ("baseline", "DEMS-A", 16),
+    ("rush-hour", "GEMS", 7),          # ragged final window
+    ("flaky-cloud", "DEMS-COOP", 13),  # cooperative peer offload
+])
+def test_streaming_matches_replay_bitwise(scenario, policy, window):
+    spec = get(scenario, duration_ms=5000)
+    assert_streaming_equivalence(spec, policy, window_ticks=window)
+
+
+def test_streaming_equivalence_hook_detects_drift():
+    # the hook must actually bite: perturb the streamed state and expect
+    # the assertion to name the diverging field
+    spec = get("baseline", duration_ms=2000)
+    ctl = stream_scenario_fleet(spec, "DEMS")
+    ref = run_scenario_fleet(spec, "DEMS")
+    assert _leaves_equal(ref, ctl.state) == []
+    bad = ctl.state._replace(n_success=ctl.state.n_success + 1)
+    assert _leaves_equal(ref, bad) == ["n_success"]
+
+
+def test_streamed_decisions_conserve_arrivals():
+    spec = get("rush-hour", duration_ms=5000)
+    sig = compile_fleet(spec)
+    ctl = FleetController(spec.models, "DEMS-A", n_edges=spec.n_edges,
+                          window_ticks=16,
+                          cloud_slots=spec.cloud_concurrency)
+    T = int(sig.times.shape[0])
+    recs = []
+    for lo in range(0, T, 16):
+        recs.extend(ctl.step_signals(slice_signals(sig, lo,
+                                                   min(lo + 16, T))))
+    assert len(recs) == T
+    assert sum(r["arrivals"] for r in recs) == int(
+        np.asarray(sig.arrive).sum())
+    s = ctl.summary()
+    assert sum(r["hit"] for r in recs) == s["completed"]
+    assert sum(r["drop"] for r in recs) == s["dropped"]
+
+
+# ---------------------------------------------------------------------------
+# live ingestion + checkpoint/restore
+
+
+def _feed(ctl: FleetController, lo_ms: float, hi_ms: float,
+          n_models: int) -> None:
+    """Deterministic synthetic telemetry stream over [lo_ms, hi_ms)."""
+    t = int(lo_ms)
+    while t < hi_ms:
+        ctl.submit(float(t), t % ctl.n_edges, (t // 40) % n_models)
+        if t % 400 == 0:
+            ctl.observe_bandwidth(float(t), 18.0 + (t % 1200) / 100.0,
+                                  edge=0)
+        if t % 1000 == 0:
+            ctl.observe_theta(float(t), float(t % 3000) / 20.0)
+        t += 40
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    spec = get("baseline", duration_ms=4000)
+    path = os.path.join(tmp_path, "ck")
+    ctl = FleetController(spec.models, "DEMS-A", n_edges=2,
+                          window_ticks=8, checkpoint_path=path)
+    _feed(ctl, 0, 4000, len(spec.models))
+    ctl.poll(4000.0)
+    ctl.checkpoint()
+    assert os.path.exists(path + ".npz")
+    assert os.path.exists(path + ".tree.json")
+
+    fresh = FleetController(spec.models, "DEMS-A", n_edges=2,
+                            window_ticks=8, checkpoint_path=path)
+    assert _leaves_equal(fresh.state, ctl.state) != []   # actually moved
+    tick = fresh.restore()
+    assert tick == ctl.tick
+    assert _leaves_equal(fresh.state, ctl.state) == []
+    assert fresh.summary() == ctl.summary()
+
+
+def test_kill_restore_resumes_identically(tmp_path):
+    # a controller killed mid-run and restored from its checkpoint must
+    # finish with the same summary (and bitwise state) as an
+    # uninterrupted controller over the same telemetry
+    spec = get("baseline", duration_ms=6000)
+    m = len(spec.models)
+    kw = dict(n_edges=2, window_ticks=8)
+
+    a = FleetController(spec.models, "DEMS-A", **kw)
+    _feed(a, 0, 6000, m)
+    a.poll(6000.0)
+    a.close()
+
+    path = os.path.join(tmp_path, "ck")
+    b = FleetController(spec.models, "DEMS-A", checkpoint_path=path, **kw)
+    _feed(b, 0, 3000, m)
+    b.poll(3000.0)
+    b.checkpoint()
+    killed_at = b.tick
+    del b                                   # the crash
+
+    c = FleetController(spec.models, "DEMS-A", checkpoint_path=path, **kw)
+    tick = c.restore()
+    assert tick == killed_at
+    # upstream replays telemetry from the checkpoint tick (the
+    # at-least-once ingestion contract)
+    _feed(c, tick * 25.0, 6000, m)
+    c.poll(6000.0)
+    c.close()
+
+    assert _leaves_equal(a.state, c.state) == []
+    assert c.summary() == a.summary()
+
+
+def test_periodic_checkpointing(tmp_path):
+    spec = get("baseline", duration_ms=3000)
+    path = os.path.join(tmp_path, "auto")
+    ctl = FleetController(spec.models, "DEMS", n_edges=2, window_ticks=8,
+                          checkpoint_path=path, checkpoint_every=2)
+    _feed(ctl, 0, 3000, len(spec.models))
+    ctl.poll(3000.0)
+    assert ctl.checkpoints_written >= 1
+    assert os.path.exists(path + ".npz")
+
+
+# ---------------------------------------------------------------------------
+# serve-facing surface
+
+
+def test_metrics_snapshot_shape():
+    spec = get("baseline", duration_ms=3000)
+    ctl = FleetController(spec.models, "DEMS-A", n_edges=2, window_ticks=8)
+    _feed(ctl, 0, 3000, len(spec.models))
+    ctl.poll(3000.0)
+    ctl.close()
+    snap = ctl.metrics_snapshot()
+    for key in ("now_ms", "tick", "policy", "completed", "missed",
+                "dropped", "completion_rate", "step_latency_ms",
+                "ingest_to_decision_ms", "eq_depth", "cq_depth",
+                "slots_busy", "latency_ms", "slack_ms", "windows_run"):
+        assert key in snap, key
+    assert snap["policy"] == "DEMS-A"
+    assert snap["windows_run"] == ctl.windows_run > 0
+    assert snap["step_latency_ms"]["p50"] is not None
+    assert snap["completed"] + snap["missed"] + snap["dropped"] > 0
+
+
+def test_poll_only_steps_complete_windows():
+    spec = get("baseline", duration_ms=3000)
+    ctl = FleetController(spec.models, "DEMS", n_edges=2, window_ticks=8)
+    ctl.submit(0.0, 0, 0)
+    assert ctl.poll(100.0) == []            # 4 ticks < one 8-tick window
+    assert ctl.tick == 0
+    recs = ctl.poll(225.0)                  # 9 ticks -> one window steps
+    assert ctl.tick == 8 and len(recs) == 8
+    # the ragged remainder only flushes on close()
+    ctl.submit(210.0, 0, 1)
+    assert ctl.poll(225.0) == []
+    assert len(ctl.close()) == 1
+
+
+def test_drive_stream_virtual_time():
+    spec = get("baseline", duration_ms=2000)
+    ctl = FleetController(spec.models, "DEMS-A", n_edges=2, window_ticks=8)
+    fps = {m.name: 25.0 for m in spec.models[:2]}
+    snap = drive_stream(ctl, fps, 2_000.0)
+    expect = sum(int(np.ceil(2_000.0 * f / 1000.0)) for f in fps.values())
+    # every frame was scheduled; some may still sit in a queue at close
+    assert sum(r["arrivals"] for r in ctl.decisions) == expect
+    settled = snap["completed"] + snap["missed"] + snap["dropped"]
+    assert 0 < settled <= expect
+    assert snap["now_ms"] == 2_000.0
+
+
+def test_trace_off_controller_still_steps():
+    spec = get("baseline", duration_ms=2000)
+    ctl = FleetController(spec.models, "DEMS", n_edges=2, window_ticks=8,
+                          trace=TraceSpec())
+    _feed(ctl, 0, 2000, len(spec.models))
+    assert ctl.poll(2000.0) == []           # no counters -> no records
+    ctl.close()
+    assert ctl.summary()["completed"] > 0
+    snap = ctl.metrics_snapshot()
+    assert "latency_ms" not in snap         # histograms need the recorder
+
+
+# ---------------------------------------------------------------------------
+# chunked replay (the thin-loop refactor itself)
+
+
+def test_run_fleet_chunked_bitwise_identical():
+    spec = get("rush-hour", duration_ms=5000)
+    sig = compile_fleet(spec)
+    whole = run_fleet(spec.models, "DEMS-A", sig)
+    chunked = run_fleet(spec.models, "DEMS-A", sig, chunk_ticks=16)
+    assert _leaves_equal(whole, chunked) == []
+
+
+def test_run_fleet_chunked_trace_concatenates():
+    spec = get("baseline", duration_ms=2000)
+    sig = compile_fleet(spec)
+    tspec = TraceSpec(counters=True, t_hat=True)
+    whole = run_fleet(spec.models, "DEMS-A", sig, trace=tspec)
+    chunked = run_fleet(spec.models, "DEMS-A", sig, trace=tspec,
+                        chunk_ticks=13)
+    assert _leaves_equal(whole.final, chunked.final) == []
+    assert np.array_equal(np.asarray(whole.t_hat),
+                          np.asarray(chunked.t_hat))
+    for u, v in zip(jax.tree.leaves(whole.counters),
+                    jax.tree.leaves(chunked.counters)):
+        assert np.array_equal(np.asarray(u), np.asarray(v))
+    assert fleet_summary(whole.final) == fleet_summary(chunked.final)
