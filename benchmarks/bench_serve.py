@@ -96,6 +96,32 @@ def bench_controller(*, policy: str = "DEMS-A", n_edges: int = 4,
         completion_rate=round(snap["completion_rate"], 4))
 
 
+def bench_backpressure(*, policy: str = "DEMS-A", n_edges: int = 2,
+                       dt: float = 25.0, max_pending_ticks: int = 64,
+                       n_submit: int = 5_000) -> dict:
+    """Bounded-ingest stress: flood far past the pending bound with no
+    polling at all and prove the controller sheds instead of growing
+    without bound or deadlocking — every submission returns, accepted +
+    shed accounts for all of them, and the buffer never exceeds the
+    configured bound."""
+    from repro.scenarios.registry import get
+    from repro.serve.controller import FleetController
+
+    models = get("baseline").models
+    ctl = FleetController(models, policy, n_edges=n_edges, dt=dt,
+                          max_pending_ticks=max_pending_ticks,
+                          shed_policy="reject")
+    t0 = time.perf_counter()
+    accepted = 0
+    for i in range(n_submit):
+        accepted += ctl.submit(i * dt, i % n_edges, i % len(models)) >= 0
+    wall_s = time.perf_counter() - t0
+    return dict(max_pending_ticks=max_pending_ticks, submitted=n_submit,
+                accepted=int(accepted), shed=int(ctl.shed_tasks),
+                pending_ticks=int(ctl.builder.pending_ticks),
+                wall_s=round(wall_s, 3))
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -113,6 +139,7 @@ def main(argv=None) -> int:
     kw = (dict(n_edges=2, duration_ms=10_000.0) if args.quick
           else dict(n_edges=4, duration_ms=30_000.0))
     section = bench_controller(policy=args.policy, **kw)
+    section["backpressure"] = bench_backpressure(policy=args.policy)
     mode = "quick" if args.quick else "full"
     print(json.dumps({mode: {"controller": section}}, indent=2))
 
@@ -128,6 +155,20 @@ def main(argv=None) -> int:
                 return 1
         else:
             print(f"no {mode}.controller baseline in {args.check}; skipped")
+        # bounded-backpressure gate: the ingest flood must be shed (not
+        # buffered unboundedly) and fully accounted for — a hang would
+        # never reach here, a leak shows up as accepted + shed != sent
+        bp = section["backpressure"]
+        ok = (bp["shed"] > 0
+              and bp["accepted"] + bp["shed"] == bp["submitted"]
+              and bp["pending_ticks"] <= bp["max_pending_ticks"])
+        print(f"backpressure: {bp['accepted']} accepted / {bp['shed']} "
+              f"shed of {bp['submitted']}, "
+              f"{bp['pending_ticks']}/{bp['max_pending_ticks']} "
+              f"ticks pending")
+        if not ok:
+            print("FAIL: bounded-backpressure invariant violated")
+            return 1
 
     if not args.no_write:
         path = pathlib.Path(args.out)

@@ -22,6 +22,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import signal
 import time
 
 import numpy as np
@@ -102,9 +103,27 @@ def main() -> None:
             [m.profile for m in models.values()], args.policy,
             n_edges=args.edges, cloud_slots=args.cloud_concurrency,
             checkpoint_path=args.checkpoint)
-        snap = drive_stream(ctl, fps, args.duration * 1e3)
-        if args.checkpoint:
-            ctl.checkpoint()
+        # graceful shutdown: first SIGINT/SIGTERM stops the stream at
+        # the next poll; drive_stream still flushes buffered ticks and
+        # writes the final checkpoint, and the snapshot below is dumped
+        # as on a normal exit.  A second signal interrupts hard.
+        interrupted = []
+
+        def _graceful(signum, frame):
+            if interrupted:
+                raise KeyboardInterrupt
+            interrupted.append(signum)
+            print(f"signal {signum}: draining — final checkpoint and "
+                  f"snapshot on the way (repeat to force-quit)")
+
+        previous = {s: signal.signal(s, _graceful)
+                    for s in (signal.SIGINT, signal.SIGTERM)}
+        try:
+            snap = drive_stream(ctl, fps, args.duration * 1e3,
+                                stop=lambda: bool(interrupted))
+        finally:
+            for s, h in previous.items():
+                signal.signal(s, h)
         if args.snapshot_out:
             with open(args.snapshot_out, "w") as f:
                 json.dump(snap, f, indent=2, default=float)

@@ -209,7 +209,9 @@ def tail_metrics(counters: TickCounters, spec: TraceSpec,
         drops_by_cause=dict(
             infeasible=int(c.drop_infeasible.sum()),
             unstolen=int(c.drop_unstolen.sum()),
-            queue_full=int(c.drop_qfull.sum())),
+            queue_full=int(c.drop_qfull.sum()),
+            crash=int(c.drop_crash.sum()),
+            timeout=int(c.drop_timeout.sum())),
         qos_utility=float(c.qos.sum()),
         qoe_utility=float(c.qoe.sum()))
 

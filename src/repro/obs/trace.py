@@ -102,6 +102,8 @@ class TickCounters(NamedTuple):
     #                             dispatch re-check, rejected cloud offers)
     drop_unstolen: jax.Array    # steal-only parked tasks that expired (§5.3)
     drop_qfull: jax.Array       # lost to a full edge or cloud queue
+    drop_crash: jax.Array       # edge-queue tasks flushed by an edge crash
+    drop_timeout: jax.Array     # parked cloud tasks past cloud_give_up_ms
     # --- cross-edge events (filled between ticks by the scan body) ----
     peer_out: jax.Array        # tasks exported to a peer edge
     peer_in: jax.Array         # tasks imported from a peer edge
@@ -129,8 +131,8 @@ class TickCounters(NamedTuple):
 EVENT_FIELDS = (
     "arrivals", "admit_edge", "admit_cloud", "migrated", "cloud_dispatch",
     "pool_blocked", "gems_moved", "gems_withheld", "edge_exec",
-    "drop_infeasible", "drop_unstolen", "drop_qfull", "peer_out", "peer_in",
-    "slack_hist", "latency_hist")
+    "drop_infeasible", "drop_unstolen", "drop_qfull", "drop_crash",
+    "drop_timeout", "peer_out", "peer_in", "slack_hist", "latency_hist")
 
 
 def zero_counters(n_models: int, spec: TraceSpec) -> TickCounters:
@@ -142,6 +144,7 @@ def zero_counters(n_models: int, spec: TraceSpec) -> TickCounters:
         arrivals=zi, admit_edge=zi, admit_cloud=zi, migrated=zi,
         cloud_dispatch=zi, pool_blocked=zi, gems_moved=zi, gems_withheld=zi,
         edge_exec=zi, drop_infeasible=zi, drop_unstolen=zi, drop_qfull=zi,
+        drop_crash=zi, drop_timeout=zi,
         peer_out=zi, peer_in=zi,
         hit=zm, miss=zm, drop=zm, stolen=zm,
         qos=jnp.zeros(()), qoe=jnp.zeros(()),

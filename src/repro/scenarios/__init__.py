@@ -5,6 +5,8 @@ See :mod:`repro.scenarios.spec` for the vocabulary,
 :mod:`repro.scenarios.runner` for one-call execution on the discrete-event
 oracle or the JAX fleet simulator.
 """
+from repro.faults import (Brownout, EdgeCrash, FaultSpec, Flood, Jamming,
+                          Partition, TelemetryChaos)
 from repro.scenarios.compile import (OracleInputs, SweepRun,
                                      compile_exec_jitter, compile_fleet,
                                      compile_fleet_batch, compile_oracle,
@@ -20,9 +22,11 @@ from repro.scenarios.spec import (BandwidthTrace, Burst, CloudOutage,
                                   ScenarioSpec, ThetaTrapezium)
 
 __all__ = [
-    "BandwidthTrace", "Burst", "CloudOutage", "DroneSpec", "DurationJitter",
-    "EdgeSite", "OracleInputs",
-    "SCENARIOS", "ScenarioSpec", "SweepRun", "ThetaTrapezium",
+    "BandwidthTrace", "Brownout", "Burst", "CloudOutage", "DroneSpec",
+    "DurationJitter", "EdgeCrash", "EdgeSite", "FaultSpec", "Flood",
+    "Jamming", "OracleInputs", "Partition",
+    "SCENARIOS", "ScenarioSpec", "SweepRun", "TelemetryChaos",
+    "ThetaTrapezium",
     "compile_exec_jitter", "compile_fleet", "compile_fleet_batch",
     "compile_oracle", "compile_registry_batch", "fleet_summary",
     "fleet_summary_batch", "get", "merge_results", "names",

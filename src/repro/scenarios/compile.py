@@ -25,6 +25,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro import faults as fl
 from repro.scenarios.mobility import assignment
 from repro.scenarios.spec import ScenarioSpec
 from repro.sim import network
@@ -44,6 +45,12 @@ class OracleInputs:
     # (start, end, cold_ms, cold_window_ms) per outage — the engine's
     # 4-tuple form, preserving each outage's own cold-start profile
     outages: tuple[tuple[float, float, float, float], ...]
+    # chaos-engine lowering (None without a fault schedule): per-edge
+    # outage lists (fleet-wide outages + that edge's partition windows as
+    # zero-cold outages) and per-edge crash windows for the engine's
+    # edge_down_windows
+    edge_outages: list | None = None
+    crashes: list | None = None
 
 
 def _theta_fn(spec: ScenarioSpec, e: int) -> Callable[[float], float]:
@@ -207,7 +214,8 @@ class SignalWindowBuilder:
     """
 
     # channels with a forward-hold current value (name → per-row shape fn)
-    _HELD = ("theta", "bw", "load_mult", "cloud_up", "exec_jit")
+    _HELD = ("theta", "bw", "load_mult", "cloud_up", "exec_jit",
+             "edge_up", "link_up")
 
     def __init__(self, n_edges: int, n_models: int, *, dt: float = 25.0,
                  horizon_ticks: int | None = None, start_tick: int = 0,
@@ -225,7 +233,9 @@ class SignalWindowBuilder:
             bw=np.full(e, network.NOMINAL_BW_MBPS, np.float32),
             load_mult=np.ones(e, np.float32),
             cloud_up=True,
-            exec_jit=np.ones((e, m, 2), np.float32))
+            exec_jit=np.ones((e, m, 2), np.float32),
+            edge_up=np.ones(e, bool),
+            link_up=np.ones(e, bool))
         self._buf: dict[str, np.ndarray] = {}
         self._ensure_rows(horizon_ticks if horizon_ticks is not None else 64)
 
@@ -259,6 +269,8 @@ class SignalWindowBuilder:
             valid=np.ones((n_new, e), bool),
             exec_jit=np.broadcast_to(cur["exec_jit"],
                                      (n_new, e, m, 2)).copy(),
+            edge_up=np.broadcast_to(cur["edge_up"], (n_new, e)).copy(),
+            link_up=np.broadcast_to(cur["link_up"], (n_new, e)).copy(),
             order=self._default_order(self._base + self._rows, n_new))
         self._buf = grow if not self._buf else {
             k: np.concatenate([self._buf[k], grow[k]]) for k in grow}
@@ -341,6 +353,18 @@ class SignalWindowBuilder:
         self._buf["cloud_up"][r:] = bool(up)
         self._cur["cloud_up"] = bool(up)
 
+    def set_edge_up(self, t_ms: float, up: bool,
+                    edge: int | None = None) -> None:
+        """Edge liveness from ``t_ms`` on — False crashes the edge
+        (queue flush + no admission) in the tick program."""
+        self._set("edge_up", t_ms, bool(up), edge)
+
+    def set_link_up(self, t_ms: float, up: bool,
+                    edge: int | None = None) -> None:
+        """Edge↔cloud link state from ``t_ms`` on — False partitions
+        the edge (cloud dispatch parks, GEMS migration halts)."""
+        self._set("link_up", t_ms, bool(up), edge)
+
     def _set(self, field: str, t_ms: float, value: float,
              edge: int | None) -> None:
         r = self._touch(self._tick(t_ms))
@@ -392,7 +416,9 @@ class SignalWindowBuilder:
             load_mult=jnp.asarray(self._buf["load_mult"][:n_ticks]),
             cloud_up=jnp.asarray(self._buf["cloud_up"][:n_ticks]),
             valid=jnp.asarray(self._buf["valid"][:n_ticks]),
-            exec_jit=jnp.asarray(self._buf["exec_jit"][:n_ticks]))
+            exec_jit=jnp.asarray(self._buf["exec_jit"][:n_ticks]),
+            edge_up=jnp.asarray(self._buf["edge_up"][:n_ticks]),
+            link_up=jnp.asarray(self._buf["link_up"][:n_ticks]))
         self._buf = {k: v[n_ticks:].copy() for k, v in self._buf.items()}
         self._rows -= n_ticks
         self._base += n_ticks
@@ -411,13 +437,43 @@ def compile_oracle(spec: ScenarioSpec) -> OracleInputs:
                 Arrival(time=t, model=edge_models[e][int(k)], drone=d))
 
     _emit(spec, sink)
+    theta_fns = [_theta_fn(spec, e) for e in range(spec.n_edges)]
+    bw_fns = [_bw_fn(spec, e) for e in range(spec.n_edges)]
+    outages = tuple((o.start_ms, o.end_ms, o.cold_ms, o.cold_window_ms)
+                    for o in spec.outages)
+    edge_outages = crashes = None
+    faults = spec.faults
+    if faults is not None:
+        # floods go through the same sink protocol as the benign stream,
+        # in the same order as compile_fleet feeds them
+        for t, d, e, order in fl.flood_events(
+                spec.seed, faults, spec.n_edges, len(spec.model_names),
+                spec.duration_ms, spec.n_drones):
+            sink(t, d, e, order)
+        # jamming/brownout θ overlays and bandwidth caps wrap the base
+        # traces — the identical callables compile_fleet samples densely
+        theta_fns = [
+            (lambda t, base=base, ov=fl.theta_overlay_fn(faults, e):
+             base(t) + ov(t))
+            for e, base in enumerate(theta_fns)]
+        bw_fns = [
+            (lambda t, base=base, cap=fl.bw_cap_fn(faults, e):
+             np.minimum(base(t), cap(t)))
+            for e, base in enumerate(bw_fns)]
+        parts = fl.partition_windows(faults, spec.n_edges)
+        edge_outages = [
+            tuple(sorted(outages + tuple((s, t, 0.0, 0.0)
+                                         for (s, t) in parts[e])))
+            for e in range(spec.n_edges)]
+        crashes = fl.crash_windows(faults, spec.n_edges)
     return OracleInputs(
         spec=spec,
         edge_arrivals=edge_arrivals,
-        theta_fns=[_theta_fn(spec, e) for e in range(spec.n_edges)],
-        bw_fns=[_bw_fn(spec, e) for e in range(spec.n_edges)],
-        outages=tuple((o.start_ms, o.end_ms, o.cold_ms, o.cold_window_ms)
-                      for o in spec.outages))
+        theta_fns=theta_fns,
+        bw_fns=bw_fns,
+        outages=outages,
+        edge_outages=edge_outages,
+        crashes=crashes)
 
 
 def compile_fleet(spec: ScenarioSpec, dt: float = 25.0) -> FleetSignals:
@@ -445,6 +501,14 @@ def compile_fleet(spec: ScenarioSpec, dt: float = 25.0) -> FleetSignals:
             b.add_arrival(t, e, int(k))
 
     _emit(spec, sink)
+    faults = spec.faults
+    if faults is not None:
+        # the identical seeded flood events the oracle compiler feeds,
+        # in the identical order
+        for t, d, e, order in fl.flood_events(
+                spec.seed, faults, n_edges, m, spec.duration_ms,
+                spec.n_drones):
+            sink(t, d, e, order)
 
     # per-edge θ(t) and cellular bandwidth, evaluated vectorized over the
     # whole tick grid (array-native trace fns — no per-tick Python loop);
@@ -455,6 +519,12 @@ def compile_fleet(spec: ScenarioSpec, dt: float = 25.0) -> FleetSignals:
     for e in range(n_edges):
         theta[:, e] = network.sample_trace(_theta_fn(spec, e), times)
         bw[:, e] = network.sample_trace(_bw_fn(spec, e), times)
+        if faults is not None:
+            # the same overlay/cap callables compile_oracle wraps around
+            # its trace fns, sampled on the tick grid
+            theta[:, e] += fl.theta_overlay_fn(faults, e)(times)
+            bw[:, e] = np.minimum(bw[:, e],
+                                  fl.bw_cap_fn(faults, e)(times))
     cloud_up = np.ones(n_ticks, dtype=bool)
     for o in spec.outages:
         down = (times >= o.start_ms) & (times < o.end_ms)
@@ -478,9 +548,17 @@ def compile_fleet(spec: ScenarioSpec, dt: float = 25.0) -> FleetSignals:
         np.stack([ej, cj], axis=-1)[:, None, :, :],
         (n_ticks, n_edges, m, 2)).copy()
 
+    if faults is not None:
+        edge_up = fl.edge_up_dense(faults, times, n_edges)
+        link_up = fl.link_up_dense(faults, times, n_edges)
+    else:
+        edge_up = np.ones((n_ticks, n_edges), dtype=bool)
+        link_up = np.ones((n_ticks, n_edges), dtype=bool)
+
     for field, vals in (("theta", theta), ("bw", bw),
                         ("cloud_up", cloud_up), ("load_mult", load_mult),
-                        ("order", order), ("exec_jit", exec_jit)):
+                        ("order", order), ("exec_jit", exec_jit),
+                        ("edge_up", edge_up), ("link_up", link_up)):
         b.load_dense(field, vals)
     return b.emit_window(n_ticks)
 
@@ -516,7 +594,8 @@ def _slice_edge(sig: FleetSignals, e: int) -> FleetSignals:
         bw=sig.bw[:, e:e + 1], arrive=sig.arrive[:, e:e + 1],
         order=sig.order[:, e:e + 1], load_mult=sig.load_mult[:, e:e + 1],
         cloud_up=sig.cloud_up, valid=sig.valid[:, e:e + 1],
-        exec_jit=sig.exec_jit[:, e:e + 1])
+        exec_jit=sig.exec_jit[:, e:e + 1],
+        edge_up=sig.edge_up[:, e:e + 1], link_up=sig.link_up[:, e:e + 1])
 
 
 def compile_registry_batch(scenarios=None, policies=("DEMS",),

@@ -10,6 +10,8 @@ import dataclasses
 from typing import Callable
 
 from repro.core.task import ACTIVE, PASSIVE
+from repro.faults import (Brownout, EdgeCrash, FaultSpec, Flood, Jamming,
+                          Partition)
 from repro.scenarios.spec import (BandwidthTrace, Burst, CloudOutage,
                                   DroneSpec, DurationJitter, EdgeSite,
                                   ScenarioSpec, ThetaTrapezium)
@@ -135,6 +137,68 @@ def heavy_tail() -> ScenarioSpec:
                               heavy_tail_p=0.05, heavy_tail_mult=3.0))
 
 
+def flash_crowd() -> ScenarioSpec:
+    """Hostile demand spike: a legitimate crowd surge (3× burst) with an
+    attacker flood riding inside it — admission control and backpressure
+    must shed without starving the real traffic."""
+    return ScenarioSpec(
+        name="flash-crowd",
+        edges=(EdgeSite(0, 0), EdgeSite(3_000, 0)),
+        drones=(DroneSpec(waypoints=((0.0, 100.0),)),
+                DroneSpec(waypoints=((100.0, 0.0),)),
+                DroneSpec(waypoints=((3_000.0, 100.0),)),
+                DroneSpec(waypoints=((2_900.0, 0.0),))),
+        bursts=(Burst(start_ms=30_000.0, end_ms=90_000.0, rate_mult=3.0),),
+        faults=FaultSpec(
+            floods=(Flood(start_ms=40_000.0, end_ms=80_000.0,
+                          rate_hz=6.0),)))
+
+
+def ddos_flood() -> ScenarioSpec:
+    """Adversarial arrival flood: one edge takes ~25 Hz of junk inference
+    requests for a minute — far past its service rate, so survival means
+    dropping cheaply and keeping the ledger exact, not keeping up."""
+    return ScenarioSpec(
+        name="ddos-flood",
+        faults=FaultSpec(
+            floods=(Flood(start_ms=30_000.0, end_ms=90_000.0,
+                          rate_hz=25.0, edges=(0,)),)))
+
+
+def partition() -> ScenarioSpec:
+    """Network partition + edge crash: edge 0 loses its WAN uplink for
+    30 s (dispatches park, GEMS migration halts) while edge 1's
+    scheduler crashes mid-window (queue flushed, arrivals re-route
+    cloud-ward) — the compound-failure regime."""
+    return ScenarioSpec(
+        name="partition",
+        edges=(EdgeSite(0, 0), EdgeSite(3_000, 0)),
+        drones=(DroneSpec(waypoints=((0.0, 100.0),)),
+                DroneSpec(waypoints=((100.0, 0.0),)),
+                DroneSpec(waypoints=((3_000.0, 100.0),)),
+                DroneSpec(waypoints=((2_900.0, 0.0),))),
+        faults=FaultSpec(
+            partitions=(Partition(start_ms=40_000.0, end_ms=70_000.0,
+                                  edges=(0,)),),
+            crashes=(EdgeCrash(edge=1, start_ms=50_000.0,
+                               end_ms=65_000.0),)))
+
+
+def brownout() -> ScenarioSpec:
+    """Correlated cloud brownout: every edge's WAN latency ramps to a
+    +350 ms plateau and back (trapezoid layered on θ(t)) — the slow-burn
+    degradation where adaptive estimators must steer work edge-ward.
+    Runs the ACTIVE workload so QoE windows are live and the
+    degradation scoreboard gets a QoE-retention row."""
+    return ScenarioSpec(
+        name="brownout",
+        model_names=ACTIVE,
+        qoe=(0.85, 480.0),
+        faults=FaultSpec(
+            brownouts=(Brownout(start_ms=30_000.0, end_ms=210_000.0,
+                                theta_ms=350.0, ramp_ms=20_000.0),)))
+
+
 SCENARIOS: dict[str, Callable[[], ScenarioSpec]] = {
     "baseline": baseline,
     "rush-hour": rush_hour,
@@ -146,6 +210,10 @@ SCENARIOS: dict[str, Callable[[], ScenarioSpec]] = {
     "bw-fade": bw_fade,
     "duration-jitter": duration_jitter,
     "heavy-tail": heavy_tail,
+    "flash-crowd": flash_crowd,
+    "ddos-flood": ddos_flood,
+    "partition": partition,
+    "brownout": brownout,
 }
 
 

@@ -53,6 +53,7 @@ def run_scenario_oracle(spec: ScenarioSpec, policy: str, *,
                         edge_model: EdgeLatencyModel | None = None,
                         cloud_concurrency: int | None = None,
                         cloud_model_overrides: dict | None = None,
+                        cloud_give_up_ms: float = float("inf"),
                         dt: float = 25.0,
                         **policy_overrides) -> OracleScenarioRun:
     """One event-driven Simulator per edge site.
@@ -68,6 +69,15 @@ def run_scenario_oracle(spec: ScenarioSpec, policy: str, *,
     :class:`~repro.sim.network.TableCloudLatencyModel`) over the *same*
     per-(tick, model) sample tables the fleet simulator consumes as its
     ``exec_jit`` lane — same-sample fleet-vs-oracle comparisons.
+
+    With ``spec.faults`` set, the compiled chaos lowering rides along:
+    flood arrivals are already merged into each edge's stream, θ/bw
+    traces carry the jamming and brownout overlays, partitions surface
+    as per-edge zero-cold outage windows and edge crashes as
+    ``edge_down_windows``.  ``cloud_give_up_ms`` bounds how long a
+    parked cloud dispatch waits before being abandoned — pass the same
+    value as the fleet side's ``FleetPolicy.cloud_give_up_ms`` for
+    agreement runs.
 
     A ``*-COOP`` policy runs the per-edge simulators through the
     :class:`~repro.sim.engine.FleetOracle` lockstep wrapper (base policy
@@ -101,7 +111,11 @@ def run_scenario_oracle(spec: ScenarioSpec, policy: str, *,
             cloud_concurrency=spec.cloud_concurrency
             if cloud_concurrency is None else cloud_concurrency,
             edge_model=edge_model, cloud_model=cloud_model,
-            cloud_outages=compiled.outages,
+            cloud_outages=compiled.edge_outages[e]
+            if compiled.edge_outages is not None else compiled.outages,
+            edge_down_windows=compiled.crashes[e]
+            if compiled.crashes is not None else (),
+            cloud_give_up_ms=cloud_give_up_ms,
             seed=spec.seed + e))
     if coop:
         from repro.sim.fleet_jax import FleetPolicy

@@ -21,6 +21,7 @@ import dataclasses
 from typing import Optional
 
 from repro.core.task import PASSIVE, TABLE1, ModelProfile
+from repro.faults.spec import FaultSpec
 
 DEFAULT_SEGMENT_MS = 1_000.0
 
@@ -156,11 +157,92 @@ class ScenarioSpec:
     cloud_concurrency: int = 16
     # stochastic execution durations (None → deterministic Table-1 means)
     jitter: Optional[DurationJitter] = None
+    # chaos-engine fault schedule (None → no injected faults); see
+    # repro.faults.spec.FaultSpec for the catalogue
+    faults: Optional[FaultSpec] = None
+    # QoE windows on every model: ``(alpha, beta)`` overrides the
+    # Table-1 profiles' (QoS-only) zeros, Table-2 style — live windowed
+    # workloads for GEMS policies and the degradation scoreboard
+    qoe: Optional[tuple[float, float]] = None
     seed: int = 0
+
+    def __post_init__(self) -> None:
+        """Reject out-of-range / contradictory specs with a clear error
+        instead of silently compiling garbage signals."""
+        if self.duration_ms <= 0.0:
+            raise ValueError(
+                f"duration_ms must be > 0, got {self.duration_ms}")
+        if self.segment_ms <= 0.0:
+            raise ValueError(
+                f"segment_ms must be > 0, got {self.segment_ms}")
+        if not self.edges:
+            raise ValueError("a scenario needs at least one edge site")
+        if self.cloud_concurrency <= 0:
+            raise ValueError(
+                f"cloud_concurrency must be >= 1, got "
+                f"{self.cloud_concurrency}")
+        for e in self.edges:
+            if e.radius <= 0.0 or e.speed_factor <= 0.0:
+                raise ValueError(
+                    f"EdgeSite radius/speed_factor must be > 0: {e}")
+        for d in self.drones:
+            if d.despawn_ms is not None and d.despawn_ms <= d.spawn_ms:
+                raise ValueError(
+                    f"DroneSpec despawn_ms must exceed spawn_ms: {d}")
+        for b in self.bursts:
+            if b.end_ms <= b.start_ms or b.start_ms < 0.0:
+                raise ValueError(
+                    f"Burst window must satisfy 0 <= start < end: {b}")
+            if b.rate_mult <= 0.0:
+                raise ValueError(f"Burst rate_mult must be > 0: {b}")
+        wins = sorted((o.start_ms, o.end_ms) for o in self.outages)
+        for (s, e) in wins:
+            if e <= s or s < 0.0:
+                raise ValueError(
+                    f"CloudOutage window must satisfy 0 <= start < end: "
+                    f"[{s}, {e})")
+        for (s0, e0), (s1, _) in zip(wins, wins[1:]):
+            if s1 < e0:
+                raise ValueError(
+                    f"overlapping CloudOutage windows: [{s0}, {e0}) and "
+                    f"[{s1}, ...)")
+        for o in self.outages:
+            if o.cold_ms < 0.0 or o.cold_window_ms < 0.0:
+                raise ValueError(
+                    f"CloudOutage cold_ms/cold_window_ms must be >= 0: {o}")
+        j = self.jitter
+        if j is not None:
+            if j.edge_sigma < 0.0 or j.cloud_sigma < 0.0:
+                raise ValueError(
+                    f"DurationJitter sigmas must be >= 0: {j}")
+            if not 0.0 <= j.heavy_tail_p <= 1.0:
+                raise ValueError(
+                    f"DurationJitter heavy_tail_p must be in [0, 1]: {j}")
+            for name, clip in (("edge_clip", j.edge_clip),
+                               ("cloud_clip", j.cloud_clip)):
+                if clip[0] < 0.0 or clip[1] < clip[0]:
+                    raise ValueError(
+                        f"DurationJitter {name} must satisfy "
+                        f"0 <= lo <= hi: {clip}")
+        if self.qoe is not None:
+            alpha, beta = self.qoe
+            if not 0.0 < alpha <= 1.0 or beta < 0.0:
+                raise ValueError(
+                    f"qoe must satisfy 0 < alpha <= 1 and beta >= 0, "
+                    f"got {self.qoe}")
+        if self.faults is not None:
+            # FaultSpec fields self-validate in their own __post_init__;
+            # edge indices can only be checked against this spec
+            self.faults.validate_edges(self.n_edges)
 
     @property
     def models(self) -> list[ModelProfile]:
-        return [TABLE1[n] for n in self.model_names]
+        ms = [TABLE1[n] for n in self.model_names]
+        if self.qoe is not None:
+            alpha, beta = self.qoe
+            ms = [dataclasses.replace(m, qoe_alpha=alpha, qoe_beta=beta)
+                  for m in ms]
+        return ms
 
     @property
     def n_edges(self) -> int:

@@ -32,9 +32,10 @@ The controller also carries the serve layer's operational duties:
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from collections import deque
-from typing import Optional, Sequence, Union
+from typing import Callable, Optional, Sequence, Union
 
 import jax
 import numpy as np
@@ -50,18 +51,34 @@ from repro.train import checkpoint as ckpt
 _DECISION_FIELDS = (
     "arrivals", "admit_edge", "admit_cloud", "migrated", "cloud_dispatch",
     "pool_blocked", "gems_moved", "edge_exec", "peer_out", "peer_in",
-    "drop_infeasible", "drop_unstolen", "drop_qfull")
+    "drop_infeasible", "drop_unstolen", "drop_qfull", "drop_crash",
+    "drop_timeout")
 
 
 class FleetController:
     """Stateful online scheduler for one edge fleet.
 
     Ingestion (:meth:`submit`, :meth:`observe_bandwidth`,
-    :meth:`observe_theta`, :meth:`observe_load`, :meth:`observe_cloud`)
-    only buffers — nothing runs until :meth:`poll` finds at least
-    ``window_ticks`` complete ticks behind ``now_ms``, keeping each
-    device call a fixed-shape window (one compile per window length).
-    :meth:`close` flushes the ragged remainder.
+    :meth:`observe_theta`, :meth:`observe_load`, :meth:`observe_cloud`,
+    :meth:`observe_edge_up`, :meth:`observe_link_up`) only buffers —
+    nothing runs until :meth:`poll` finds at least ``window_ticks``
+    complete ticks behind ``now_ms``, keeping each device call a
+    fixed-shape window (one compile per window length).  :meth:`close`
+    flushes the ragged remainder.
+
+    The ingest queue is **bounded** at ``max_pending_ticks`` of buffered
+    telemetry.  A submission landing past the bound is handled by
+    ``shed_policy``: ``"reject"`` refuses it (returns ``-1``, counted in
+    ``shed_tasks``) while ``"degrade"`` force-steps the oldest pending
+    window to make room — trading telemetry completeness for admission,
+    counted in ``degrade_windows``.  Either way the controller never
+    deadlocks and never grows unbounded under an arrival flood.
+
+    Passing ``task_id`` to :meth:`submit` makes ingestion **idempotent**
+    over the last ``dedupe_window`` distinct ids: redelivered ids are
+    dropped (counted in ``duplicate_events``), so an at-least-once
+    telemetry bus replaying events after :meth:`restore` cannot
+    double-schedule work.  The dedupe ring rides in the checkpoint.
     """
 
     def __init__(self, models: Sequence[ModelProfile], policy, *,
@@ -71,10 +88,17 @@ class FleetController:
                  trace: Optional[TraceSpec] = None,
                  checkpoint_path: Optional[str] = None,
                  checkpoint_every: int = 4, order_seed: int = 0,
-                 decision_log: int = 4096, latency_log: int = 512):
+                 decision_log: int = 4096, latency_log: int = 512,
+                 max_pending_ticks: int = 4096,
+                 shed_policy: str = "reject",
+                 dedupe_window: int = 4096,
+                 cloud_give_up_ms: Optional[float] = None):
         self.models = list(models)
         self.policy_name = policy if isinstance(policy, str) else "custom"
         self._pol = _resolve_policy(policy)
+        if cloud_give_up_ms is not None:
+            self._pol = dataclasses.replace(
+                self._pol, cloud_give_up_ms=float(cloud_give_up_ms))
         self._prof = Profiles.build(self.models)
         self._pp = self._pol.params()
         self.trace = TraceSpec(counters=True) if trace is None else trace
@@ -101,6 +125,25 @@ class FleetController:
         self._slack_hist: Optional[np.ndarray] = None
         self._latency_hist: Optional[np.ndarray] = None
         self._last_gauges = dict(eq_depth=0, cq_depth=0, slots_busy=0)
+        # -- robustness: bounded ingest + idempotent replay ---------------
+        if shed_policy not in ("reject", "degrade"):
+            raise ValueError(
+                f"shed_policy must be 'reject' or 'degrade', "
+                f"got {shed_policy!r}")
+        if max_pending_ticks < self.window_ticks:
+            raise ValueError(
+                f"max_pending_ticks ({max_pending_ticks}) must cover at "
+                f"least one window ({self.window_ticks} ticks)")
+        self.max_pending_ticks = int(max_pending_ticks)
+        self.shed_policy = shed_policy
+        self.shed_tasks = 0
+        self.degrade_windows = 0
+        self.late_events = 0
+        self.duplicate_events = 0
+        # fixed-shape dedupe ring (checkpointable): last N task ids seen
+        self._dedupe_ids = np.full(int(dedupe_window), -1, np.int64)
+        self._dedupe_pos = 0
+        self._dedupe_set: set[int] = set()
 
     def _new_builder(self, start_tick: int) -> SignalWindowBuilder:
         return SignalWindowBuilder(
@@ -111,8 +154,44 @@ class FleetController:
     def _midx(self, model: Union[int, str]) -> int:
         return self._model_idx[model] if isinstance(model, str) else int(model)
 
-    def submit(self, t_ms: float, edge: int, model: Union[int, str]) -> int:
-        """A task arrival at ``edge``; returns its scheduled tick."""
+    def _remember(self, task_id: int) -> None:
+        evicted = int(self._dedupe_ids[self._dedupe_pos
+                                       % len(self._dedupe_ids)])
+        if evicted >= 0:
+            self._dedupe_set.discard(evicted)
+        self._dedupe_ids[self._dedupe_pos % len(self._dedupe_ids)] = task_id
+        self._dedupe_set.add(int(task_id))
+        self._dedupe_pos += 1
+
+    def submit(self, t_ms: float, edge: int, model: Union[int, str],
+               task_id: Optional[int] = None) -> int:
+        """A task arrival at ``edge``; returns its scheduled tick.
+
+        ``task_id`` (a non-negative int) makes the call idempotent:
+        redeliveries of an id still in the dedupe ring return ``-1``
+        without scheduling anything.  A ``-1`` return also signals a
+        shed arrival under the ``"reject"`` backpressure policy; late
+        arrivals (behind the emit cursor) clamp forward and are counted
+        in ``late_events``.
+        """
+        if task_id is not None:
+            if int(task_id) < 0:
+                raise ValueError(f"task_id must be >= 0, got {task_id}")
+            if int(task_id) in self._dedupe_set:
+                self.duplicate_events += 1
+                return -1
+        if int(t_ms / self.dt) < self.tick:
+            self.late_events += 1
+        while int(t_ms / self.dt) >= self.tick + self.max_pending_ticks:
+            if self.shed_policy == "reject":
+                self.shed_tasks += 1
+                return -1
+            # "degrade": force-step the oldest pending window to make
+            # room — admission wins over telemetry completeness
+            self.degrade_windows += 1
+            self._advance(self.window_ticks)
+        if task_id is not None:
+            self._remember(int(task_id))
         tick = self.builder.add_arrival(t_ms, edge, self._midx(model))
         # first submission per tick stamps the wall clock for lag stats
         self._submit_walltime.setdefault(tick, time.monotonic())
@@ -132,6 +211,18 @@ class FleetController:
 
     def observe_cloud(self, t_ms: float, up: bool) -> None:
         self.builder.set_cloud_up(t_ms, up)
+
+    def observe_edge_up(self, t_ms: float, up: bool,
+                        edge: Optional[int] = None) -> None:
+        """Edge liveness telemetry — ``False`` crashes the edge (queue
+        flush, no admission) from ``t_ms`` until set ``True`` again."""
+        self.builder.set_edge_up(t_ms, up, edge)
+
+    def observe_link_up(self, t_ms: float, up: bool,
+                        edge: Optional[int] = None) -> None:
+        """Edge↔cloud link telemetry — ``False`` partitions the edge
+        (cloud dispatches park, GEMS migration halts)."""
+        self.builder.set_link_up(t_ms, up, edge)
 
     # -- stepping ----------------------------------------------------------
     @property
@@ -264,6 +355,12 @@ class FleetController:
             windows_run=self.windows_run,
             checkpoints_written=self.checkpoints_written,
             pending_ticks=self.builder.pending_ticks,
+            max_pending_ticks=self.max_pending_ticks,
+            shed_policy=self.shed_policy,
+            shed_tasks=self.shed_tasks,
+            degrade_windows=self.degrade_windows,
+            late_events=self.late_events,
+            duplicate_events=self.duplicate_events,
             step_latency_ms=pcts(self._step_ms),
             ingest_to_decision_ms=pcts(self._ingest_lag_ms),
             decisions_logged=len(self.decisions),
@@ -277,7 +374,12 @@ class FleetController:
 
     # -- crash restart -----------------------------------------------------
     def _ckpt_tree(self, state: EdgeState, tick: int) -> dict:
-        return {"state": state, "tick": np.int64(tick)}
+        # the dedupe ring is part of durable state: replayed task ids
+        # must still be recognized after a crash restart (idempotent
+        # at-least-once ingestion); both leaves are fixed-shape
+        return {"state": state, "tick": np.int64(tick),
+                "dedupe_ids": self._dedupe_ids.copy(),
+                "dedupe_pos": np.int64(self._dedupe_pos)}
 
     def checkpoint(self, path: Optional[str] = None) -> str:
         """Persist scheduler state + tick cursor; returns the path stem."""
@@ -309,11 +411,16 @@ class FleetController:
         tick = int(data["tick"])
         self.builder = self._new_builder(tick)
         self._submit_walltime.clear()
+        self._dedupe_ids = np.asarray(data["dedupe_ids"],
+                                      np.int64).copy()
+        self._dedupe_pos = int(data["dedupe_pos"])
+        self._dedupe_set = {int(i) for i in self._dedupe_ids if i >= 0}
         return tick
 
 
 def drive_stream(ctl: FleetController, fps: dict, duration_ms: float, *,
-                 poll_every_ms: Optional[float] = None) -> dict:
+                 poll_every_ms: Optional[float] = None,
+                 stop: Optional[Callable[[], bool]] = None) -> dict:
     """Virtual-time frame-stream driver — the compiled-controller twin of
     :func:`repro.serve.engine.run_stream`.
 
@@ -321,12 +428,19 @@ def drive_stream(ctl: FleetController, fps: dict, duration_ms: float, *,
     fleet's edges), polls the controller on a fixed cadence so windows
     step as soon as their ticks complete, flushes the remainder, and
     returns the final :meth:`~FleetController.metrics_snapshot`.
+
+    ``stop`` is checked once per poll cadence; returning ``True`` ends
+    the stream early but still flushes buffered ticks and (when the
+    controller has a checkpoint path) writes a final checkpoint — the
+    graceful-shutdown hook ``launch/serve.py`` wires to SIGINT/SIGTERM.
     """
     poll_every = poll_every_ms or ctl.window_ticks * ctl.dt
     next_at = {n: 0.0 for n in fps}
     edge_rr = 0
     now = 0.0
     while now < duration_ms:
+        if stop is not None and stop():
+            break
         horizon = min(now + poll_every, duration_ms)
         for n, f in fps.items():
             while next_at[n] < horizon:
@@ -336,4 +450,6 @@ def drive_stream(ctl: FleetController, fps: dict, duration_ms: float, *,
         now = horizon
         ctl.poll(now)
     ctl.close()
+    if ctl.checkpoint_path is not None:
+        ctl.checkpoint()
     return ctl.metrics_snapshot()

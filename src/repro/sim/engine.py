@@ -141,6 +141,8 @@ class Simulator:
                  cloud_outages: tuple[tuple[float, float], ...] = (),
                  outage_cold_ms: float = 0.0,
                  outage_cold_window_ms: float = 3_000.0,
+                 edge_down_windows: tuple[tuple[float, float], ...] = (),
+                 cloud_give_up_ms: float = float("inf"),
                  seed: int = 0):
         self.policy = policy
         self.arrivals = sorted(arrivals, key=lambda a: a.time)
@@ -159,6 +161,15 @@ class Simulator:
             else (*o, outage_cold_ms, outage_cold_window_ms)
             for o in cloud_outages))
         self._recovery_checks: set[float] = set()
+        # chaos-engine fault hooks: edge scheduler crash windows (queued
+        # work flushed at the start, nothing admitted until the end; the
+        # in-flight kernel completes — a scheduler crash, not a power
+        # cut) and the bounded cloud-dispatch patience, matching the
+        # fleet simulator's ``cloud_give_up_ms`` drop lane
+        self.edge_down_windows = tuple(sorted(
+            (float(s), float(e)) for s, e in edge_down_windows))
+        self.cloud_give_up = cloud_give_up_ms
+        self.edge_down = False
 
         self.profiles: dict[str, ModelProfile] = {}
         for a in self.arrivals:
@@ -244,6 +255,11 @@ class Simulator:
     # ------------------------------------------------------------------
     def _route(self, task: Task) -> None:
         p = self.policy
+        if self.edge_down:
+            # crashed edge admits nothing: arrivals re-route cloud-ward
+            # (mirroring the fleet's ``insert_edge &= edge_up`` gate)
+            self._offer_cloud(task) or self._drop(task)
+            return
         if not p.use_edge:
             self._offer_cloud(task) or self._drop(task)
             return
@@ -328,7 +344,7 @@ class Simulator:
         self._edge_dispatch()
 
     def _edge_dispatch(self) -> None:
-        if self.edge_current is not None:
+        if self.edge_current is not None or self.edge_down:
             return
         # JIT check: drop heads that can no longer meet their deadline.
         while self.edge_queue:
@@ -398,6 +414,11 @@ class Simulator:
             self._cloud_dispatch()
         else:
             self._push(acc.trigger, "cloud_check", None)
+        if not acc.steal_only and self.cloud_give_up != float("inf"):
+            # guarantee a dispatch sweep right past the give-up horizon
+            # even if no other event lands there (e.g. mid-outage)
+            self._push(acc.trigger + self.cloud_give_up + 1e-6,
+                       "cloud_check", None)
         return True
 
     def _outage_end(self, t: float) -> Optional[float]:
@@ -417,6 +438,19 @@ class Simulator:
         return 0.0
 
     def _cloud_dispatch(self) -> None:
+        if self.cloud_give_up != float("inf"):
+            # bounded patience: parked dispatches past the give-up
+            # horizon are abandoned (steal-only parks keep their own
+            # expiry path).  Remove before dropping — a drop can trigger
+            # a GEMS rescan that re-enters this queue.
+            expired = [t for t in self.cloud_pending
+                       if not t.steal_only
+                       and self.now - self._triggers[t.uid]
+                       > self.cloud_give_up]
+            for t in expired:
+                self.cloud_pending.remove(t)
+            for t in expired:
+                self._drop(t)
         up_at = self._outage_end(self.now)
         if up_at is not None:
             # cloud down: park everything; re-check the queue on recovery.
@@ -543,6 +577,9 @@ class Simulator:
         """Push every arrival onto the event heap (call exactly once)."""
         for a in self.arrivals:
             self._push(a.time, "arrival", a)
+        for start, end in self.edge_down_windows:
+            self._push(start, "edge_crash", None)
+            self._push(end, "edge_restart", None)
 
     def _handle(self, time: float, kind: str, data: object) -> None:
         self.now = time
@@ -568,6 +605,19 @@ class Simulator:
             self._cloud_dispatch()
         elif kind == "cloud_check":
             self._cloud_dispatch()
+        elif kind == "edge_crash":
+            # scheduler crash: every queued task is lost at once (clear
+            # first — dropping can fire a GEMS rescan over the queue),
+            # the in-flight kernel still completes, nothing is admitted
+            # until restart
+            self.edge_down = True
+            flushed = self.edge_queue
+            self.edge_queue = []
+            for t in flushed:
+                self._drop(t)
+        elif kind == "edge_restart":
+            self.edge_down = False
+            self._edge_dispatch()
 
     def run_until(self, t: float) -> None:
         """Drain events up to and including time ``t`` (lockstep slices:
@@ -649,7 +699,11 @@ class FleetOracle:
         n = len(sims)
         slacks = [self._slacks(s) for s in sims]
         min_slack = [min(sl, default=float("inf")) for sl in slacks]
-        load = [self._load(s, now) for s in sims]
+        # crashed edges can neither export (their queue was flushed) nor
+        # import — infinite load keeps them out of every min() below,
+        # mirroring the fleet's ``edge_valid = valid & edge_up`` gate
+        load = [float("inf") if s.edge_down else self._load(s, now)
+                for s in sims]
 
         # each edge's best destination load: the global minimum, or the
         # runner-up for the least-loaded edge itself

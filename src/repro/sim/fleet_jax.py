@@ -142,6 +142,7 @@ class PolicyParams(NamedTuple):
     adapt_cooling_ms: jax.Array  # f32[]
     coop_slack_ms: jax.Array    # f32[]
     coop_transfer_cap: jax.Array  # i32[] (≤ the program's static rounds)
+    cloud_give_up_ms: jax.Array  # f32[] parked-dispatch timeout (+inf = off)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -179,6 +180,14 @@ class FleetPolicy:
     cooperation: bool = False
     coop_slack_ms: float = 0.0
     coop_max_transfers: int = 2
+    # cloud-dispatch timeout (chaos hardening): a parked cloud task that
+    # has waited more than this past its trigger maturity — through an
+    # outage, a partition, or pool saturation — is dropped instead of
+    # retried forever.  The fleet re-checks every tick, the oracle at
+    # every dispatch/recovery event: timeout with bounded retries, the
+    # shared convention.  +inf (the default) disables the timeout and is
+    # a bitwise no-op on every existing result.
+    cloud_give_up_ms: float = float("inf")
 
     @classmethod
     def from_name(cls, name: str) -> "FleetPolicy":
@@ -216,7 +225,8 @@ class FleetPolicy:
             adapt_cooling_ms=f32(self.adapt_cooling_ms),
             coop_slack_ms=f32(self.coop_slack_ms),
             coop_transfer_cap=jnp.asarray(self.coop_max_transfers,
-                                          jnp.int32))
+                                          jnp.int32),
+            cloud_give_up_ms=f32(self.cloud_give_up_ms))
 
 
 class Profiles(NamedTuple):
@@ -450,6 +460,11 @@ class FleetSignals(NamedTuple):
     # exactly 1.0 in deterministic mode, so the default lane is a
     # bitwise no-op on every act computation it scales
     exec_jit: jax.Array    # f32[T,E,M,2]
+    # chaos-engine availability lanes (repro.faults): all-True outside a
+    # fault schedule, so fault-free signals compile to the same program
+    # results as before the lanes existed
+    edge_up: jax.Array     # bool[T,E] False ⇒ edge crashed (queue flushed)
+    link_up: jax.Array     # bool[T,E] False ⇒ edge↔cloud link partitioned
 
 
 # ---------------------------------------------------------------------------
@@ -458,7 +473,7 @@ class FleetSignals(NamedTuple):
 
 def _resolve_cloud(st: EdgeState, tr: Optional[TickCounters],
                    tspec: TraceSpec, prof: Profiles, pp: PolicyParams, now,
-                   theta, bw_pen, cloud_frac, cloud_up, jit_c):
+                   theta, bw_pen, cloud_frac, cloud_up, link_up, jit_c):
     """Dispatch matured cloud tasks into the finite FaaS pool.
 
     During a cloud outage (``cloud_up`` False) matured tasks stay parked
@@ -476,8 +491,17 @@ def _resolve_cloud(st: EdgeState, tr: Optional[TickCounters],
     ``observe`` their actual duration, applied as one batched masked
     window update (:func:`repro.core.jax_sched.adapt_feed_batch`).
     """
-    mature = st.cq.valid & (st.cq.trigger <= now) & cloud_up
-    run = mature & ~st.cq.steal_only
+    # a partitioned edge↔cloud link parks dispatch exactly like a cloud
+    # outage seen from this edge; the per-edge link_up lane composes with
+    # the fleet-wide cloud_up mask
+    mature = st.cq.valid & (st.cq.trigger <= now) & cloud_up & link_up
+    # cloud-dispatch timeout (bounded retries): a parked task that has
+    # waited more than cloud_give_up_ms past its trigger maturity —
+    # through an outage, a partition, or pool saturation — gives up and
+    # drops.  +inf (the default) never fires.
+    timed_out = st.cq.valid & ~st.cq.steal_only & \
+        (now - st.cq.trigger > pp.cloud_give_up_ms)
+    run = mature & ~st.cq.steal_only & ~timed_out
     fits_a = now + st.adapt.current[st.cq_model] <= st.cq.deadline
     # the oracle JIT-checks every pop against the static estimate; in
     # the fleet model tasks normally mature within one tick of their
@@ -510,18 +534,19 @@ def _resolve_cloud(st: EdgeState, tr: Optional[TickCounters],
     n_miss = st.n_miss + add((dispatch & ~success).astype(jnp.int32),
                              st.cq_model)
     dropped = mature & st.cq.steal_only      # not stolen in time (§5.3)
-    n_drop = st.n_drop + add((dropped | skipped).astype(jnp.int32),
-                             st.cq_model)
+    n_drop = st.n_drop + add((dropped | skipped | timed_out)
+                             .astype(jnp.int32), st.cq_model)
     # flight recorder: read-only taps (drops by cause, pool pressure,
     # tail evidence from the settled tasks' slack/latency)
     tr = _tr_add(
         tr, cloud_dispatch=dispatch.sum(), pool_blocked=(run & ~avail).sum(),
         drop_infeasible=skipped.sum(), drop_unstolen=dropped.sum(),
+        drop_timeout=timed_out.sum(),
         slack_hist=hist_counts(st.cq.deadline - (now + act), success, tspec),
         latency_hist=hist_counts(
             (now + act) - (st.cq.deadline - prof.deadline[st.cq_model]),
             success, tspec))
-    settled = dispatch | skipped | dropped   # blocked tasks stay parked
+    settled = dispatch | skipped | dropped | timed_out  # blocked stay parked
     new_valid = st.cq.valid & ~settled
     st = st._replace(cq=st.cq._replace(valid=new_valid),
                      cloud_busy_until=_occupy_slots(
@@ -535,7 +560,7 @@ def _resolve_cloud(st: EdgeState, tr: Optional[TickCounters],
         now, prof.t_cloud, pp.adapt_eps, pp.adapt_cooling_ms,
         max_obs=st.cloud_busy_until.shape[0]))
     return _gems_bulk(st, prof, success & pp.gems,
-                      (dispatch | skipped | dropped) & pp.gems,
+                      (dispatch | skipped | dropped | timed_out) & pp.gems,
                       st.cq_model), tr
 
 
@@ -551,7 +576,7 @@ def _gems_bulk(st: EdgeState, prof: Profiles, success_mask, done_mask,
 
 def _gems_act(st: EdgeState, tr: Optional[TickCounters], tspec: TraceSpec,
               prof: Profiles, pp: PolicyParams, now, theta, bw_pen,
-              cloud_frac, jit_c):
+              cloud_frac, link_up, jit_c):
     """Alg. 1: reschedule lagging models, close expired windows.
 
     Rescheduled tasks go through the same finite pool as the dispatch
@@ -589,8 +614,10 @@ def _gems_act(st: EdgeState, tr: Optional[TickCounters], tspec: TraceSpec,
     # oracle's rescan/dispatch path.
     t_hat = _t_cloud_cur(st, prof, pp, now)
     feas = now + t_hat[st.eq.model] <= st.eq.abs_dl
+    # a partitioned link halts GEMS pool migration across it (the lane
+    # is all-True outside a fault schedule, so this gate is free)
     cand = (st.eq.valid & lagging[st.eq.model]
-            & (prof.gamma_c[st.eq.model] > 0) & feas) & pp.gems
+            & (prof.gamma_c[st.eq.model] > 0) & feas) & pp.gems & link_up
     want = cand & (~lost[st.eq.model] | doomed)
     move = want & _free_slot_gate(st.cloud_busy_until, now, want)
     # slots are *held* for the actual duration either way; only the
@@ -719,7 +746,7 @@ def _offer_cloud_many(st: EdgeState, prof: Profiles, pp: PolicyParams, now,
 
 def _route_arrival(st: EdgeState, tr: Optional[TickCounters],
                    prof: Profiles, pp: PolicyParams, now,
-                   model, arrive, load_mult):
+                   model, arrive, load_mult, edge_up=True):
     """Task-scheduler routing for one arriving task (§5.1–5.2, §8.2).
 
     ``load_mult`` is the edge's speed factor: the effective edge latency
@@ -775,7 +802,10 @@ def _route_arrival(st: EdgeState, tr: Optional[TickCounters],
                         jnp.where(pp.sota2, sota2_ok,
                                   jnp.where(pp.feas_check, plain_ok,
                                             True)))
-    insert_edge = arrive & pp.use_edge & edge_ok
+    # a crashed edge admits nothing: arrivals re-route cloudward (and
+    # drop there for cloudless policies), matching the oracle's crashed
+    # _route convention
+    insert_edge = arrive & pp.use_edge & edge_ok & edge_up
     vic = victims & insert_edge & pp.migration
     to_cloud = arrive & ~insert_edge
     key = jnp.where(take_ext, sched1, key0)
@@ -809,14 +839,30 @@ def _route_arrival(st: EdgeState, tr: Optional[TickCounters],
 
 def _edge_execute(st: EdgeState, tr: Optional[TickCounters],
                   tspec: TraceSpec, prof: Profiles, pp: PolicyParams, now,
-                  dt, edge_frac, min_edge_t, jit_e):
+                  dt, edge_frac, min_edge_t, jit_e, edge_up=True):
     """Edge executor: JIT drops, stealing, starting the next task.
 
     Queue entries carry the *effective* edge latency (speed factor folded
     in at insert time), so every check and the executed duration reflect
     heterogeneous edge speeds consistently.
+
+    A crashed edge (``edge_up`` False) flushes its queue as drops and
+    suspends stealing/starts; the task in flight at crash time still
+    completes (``busy_rem`` keeps draining — the model is a scheduler
+    crash, not a power cut), and the restart resumes with an empty queue.
+    The oracle's crash handler mirrors both choices.
     """
     m_ids = jnp.arange(prof.t_edge.shape[0], dtype=jnp.int32)
+
+    flush = st.eq.valid & ~edge_up
+    st = st._replace(
+        eq=js.edge_remove(st.eq, flush),
+        n_drop=st.n_drop + jax.ops.segment_sum(
+            flush.astype(jnp.int32), st.eq.model,
+            num_segments=prof.t_edge.shape[0]))
+    st = _gems_bulk(st, prof, jnp.zeros_like(flush),
+                    flush & pp.gems, st.eq.model)
+    tr = _tr_add(tr, drop_crash=flush.sum())
 
     def body(_, carry):
         s, tr = carry
@@ -840,7 +886,7 @@ def _edge_execute(st: EdgeState, tr: Optional[TickCounters],
         # stealing (§5.3)
         sidx = js.steal_select(s.cq, s.eq, now,
                                jnp.maximum(s.busy_rem, 0.0), min_edge_t)
-        can_steal = idle & (sidx >= 0) & pp.stealing
+        can_steal = idle & (sidx >= 0) & pp.stealing & edge_up
         smodel = s.cq_model[jnp.maximum(sidx, 0)]
         sdl = s.cq.deadline[jnp.maximum(sidx, 0)]
         ste = s.cq.t_edge[jnp.maximum(sidx, 0)]
@@ -912,7 +958,7 @@ def make_step(dt: float, edge_frac: float, cloud_frac: float,
     def step(prof: Profiles, pp: PolicyParams, st: EdgeState, inputs):
         # arrive: bool[M]; order: i32[M]; theta/bw/load_mult/valid per-edge
         (now, theta, bw, arrive, order, load_mult, cloud_up, valid,
-         exec_jit) = inputs
+         exec_jit, edge_up, link_up) = inputs
         # signed cellular transfer penalty (network.py convention); exactly
         # 0.0 at the nominal benchmark bandwidth
         bw_pen = network.bandwidth_penalty_ms(bw)
@@ -923,7 +969,7 @@ def make_step(dt: float, edge_frac: float, cloud_frac: float,
         tr = zero_counters(prof.t_edge.shape[0], tspec) \
             if tspec.counters else None
         st, tr = _resolve_cloud(st, tr, tspec, prof, pp, now, theta, bw_pen,
-                                cloud_frac, cloud_up, jit_c)
+                                cloud_frac, cloud_up, link_up, jit_c)
 
         # §3.3: tasks of a segment are inserted in randomized order; the
         # loop is load-bearing — each insertion's feasibility depends on
@@ -933,13 +979,13 @@ def make_step(dt: float, edge_frac: float, cloud_frac: float,
             s, t = carry
             mdl = order[i]
             return _route_arrival(s, t, prof, pp, now, mdl, arrive[mdl],
-                                  load_mult)
+                                  load_mult, edge_up)
         st, tr = jax.lax.fori_loop(0, prof.t_edge.shape[0], route_one,
                                    (st, tr))
         st, tr = _edge_execute(st, tr, tspec, prof, pp, now, dt, edge_frac,
-                               min_edge_t, jit_e)
+                               min_edge_t, jit_e, edge_up)
         st, tr = _gems_act(st, tr, tspec, prof, pp, now, theta, bw_pen,
-                           cloud_frac, jit_c)
+                           cloud_frac, link_up, jit_c)
         # padded (tick, edge) cells are exact no-ops
         st = jax.tree.map(lambda a, b: jnp.where(valid, a, b), st, st0)
         if tr is not None:
@@ -1094,7 +1140,9 @@ def default_signals(n_models: int, *, n_edges: int, drones_per_edge: int = 3,
         load_mult=jnp.ones((n_ticks, n_edges), jnp.float32),
         cloud_up=jnp.ones(n_ticks, bool),
         valid=jnp.ones((n_ticks, n_edges), bool),
-        exec_jit=jnp.ones((n_ticks, n_edges, m, 2), jnp.float32))
+        exec_jit=jnp.ones((n_ticks, n_edges, m, 2), jnp.float32),
+        edge_up=jnp.ones((n_ticks, n_edges), bool),
+        link_up=jnp.ones((n_ticks, n_edges), bool))
 
 
 def _resolve_policy(policy) -> FleetPolicy:
@@ -1133,7 +1181,8 @@ def _shard_leading(tree, mesh: jax.sharding.Mesh, axes: int = 1):
 # tick-signal leaves keep the replica axis leading; the edge axis sits at
 # a field-dependent position (None = no edge axis)
 _SIGNAL_EDGE_AXIS = dict(times=None, theta=2, bw=2, arrive=2, order=2,
-                         load_mult=2, cloud_up=None, valid=2, exec_jit=2)
+                         load_mult=2, cloud_up=None, valid=2, exec_jit=2,
+                         edge_up=2, link_up=2)
 
 
 def _shard_signals(sig: FleetSignals, mesh: jax.sharding.Mesh
@@ -1184,18 +1233,21 @@ def _fleet_program(dt: float, edge_frac: float, cloud_frac: float,
 
     def run(prof, pp, state, xs):
         vstep = jax.vmap(step, in_axes=(
-            None, None, 0, (None, 0, 0, 0, 0, 0, None, 0, 0)))
+            None, None, 0, (None, 0, 0, 0, 0, 0, None, 0, 0, 0, 0)))
 
         def scan_body(state, xs_t):
             now = xs_t[0]
             valid = xs_t[7]
+            edge_up = xs_t[9]
             state, tick = vstep(prof, pp, state, xs_t)
             if coop_rounds:
                 pre_out, pre_in = state.n_peer_out, state.n_peer_in
+                # crashed edges neither export nor import peer work
                 state = peer_offload(
                     state, now + dt, pp.coop_slack_ms, coop_rounds,
                     enable=pp.cooperation,
-                    transfer_cap=pp.coop_transfer_cap, edge_valid=valid)
+                    transfer_cap=pp.coop_transfer_cap,
+                    edge_valid=valid & edge_up)
                 if tick is not None:
                     # the exchange runs on the stacked fleet state between
                     # ticks; fold its per-edge deltas into the tick row
@@ -1440,7 +1492,12 @@ def pad_signals(signals: list[FleetSignals],
             # padded cells keep the deterministic ×1.0 multiplier
             exec_jit=np.pad(s.exec_jit,
                             ((0, pt), (0, pe), (0, mmax - m), (0, 0)),
-                            constant_values=1.0)))
+                            constant_values=1.0),
+            # padded cells are healthy (valid=False already no-ops them)
+            edge_up=np.pad(s.edge_up, ((0, pt), (0, pe)),
+                           constant_values=True),
+            link_up=np.pad(s.link_up, ((0, pt), (0, pe)),
+                           constant_values=True)))
     return jax.tree.map(lambda *xs: jnp.stack([np.asarray(x)
                                                for x in xs]), *padded)
 

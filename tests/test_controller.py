@@ -305,3 +305,167 @@ def test_run_fleet_chunked_trace_concatenates():
                     jax.tree.leaves(chunked.counters)):
         assert np.array_equal(np.asarray(u), np.asarray(v))
     assert fleet_summary(whole.final) == fleet_summary(chunked.final)
+
+
+# ---------------------------------------------------------------------------
+# chaos hardening: backpressure, idempotent replay, restore under faults
+
+
+def test_backpressure_reject_sheds_and_recovers():
+    spec = get("baseline", duration_ms=3000)
+    ctl = FleetController(spec.models, "DEMS-A", n_edges=2,
+                          window_ticks=8, max_pending_ticks=16,
+                          shed_policy="reject")
+    assert ctl.submit(0.0, 0, 0) == 0
+    # a submission 16+ ticks past the emit cursor is shed, not buffered
+    assert ctl.submit(16 * 25.0, 0, 0) == -1
+    assert ctl.shed_tasks == 1
+    assert ctl.builder.pending_ticks <= 16
+    # polling advances the cursor and the same timestamp is admitted
+    ctl.poll(16 * 25.0)
+    assert ctl.submit(16 * 25.0, 0, 0) >= 0
+    snap = ctl.metrics_snapshot()
+    assert snap["shed_tasks"] == 1
+    assert snap["shed_policy"] == "reject"
+    assert snap["max_pending_ticks"] == 16
+
+
+def test_backpressure_degrade_advances_instead_of_shedding():
+    spec = get("baseline", duration_ms=3000)
+    ctl = FleetController(spec.models, "DEMS-A", n_edges=2,
+                          window_ticks=8, max_pending_ticks=16,
+                          shed_policy="degrade")
+    assert ctl.submit(0.0, 0, 0) == 0
+    # far-future submission force-steps windows instead of rejecting
+    assert ctl.submit(40 * 25.0, 0, 0) >= 0
+    assert ctl.shed_tasks == 0
+    assert ctl.degrade_windows > 0
+    assert ctl.tick > 0
+    assert ctl.builder.pending_ticks <= 16
+
+
+def test_backpressure_config_validated():
+    spec = get("baseline", duration_ms=2000)
+    with pytest.raises(ValueError, match="shed_policy"):
+        FleetController(spec.models, "DEMS", n_edges=1,
+                        shed_policy="panic")
+    with pytest.raises(ValueError, match="max_pending_ticks"):
+        FleetController(spec.models, "DEMS", n_edges=1,
+                        window_ticks=8, max_pending_ticks=4)
+
+
+def test_duplicate_task_ids_are_idempotent(tmp_path):
+    spec = get("baseline", duration_ms=2000)
+    path = os.path.join(tmp_path, "ck")
+    ctl = FleetController(spec.models, "DEMS-A", n_edges=2,
+                          window_ticks=8, checkpoint_path=path)
+    assert ctl.submit(100.0, 0, 0, task_id=7) >= 0
+    assert ctl.submit(100.0, 0, 0, task_id=7) == -1
+    assert ctl.duplicate_events == 1
+    with pytest.raises(ValueError, match="task_id"):
+        ctl.submit(0.0, 0, 0, task_id=-3)
+    ctl.poll(2000.0)
+    ctl.checkpoint()
+    # the dedupe ring survives kill/restore: a replayed duplicate from
+    # before the crash is still recognized afterwards
+    fresh = FleetController(spec.models, "DEMS-A", n_edges=2,
+                            window_ticks=8, checkpoint_path=path)
+    fresh.restore()
+    assert fresh.submit(100.0, 0, 0, task_id=7) == -1
+    assert fresh.duplicate_events == 1
+    assert fresh.submit(150.0, 0, 0, task_id=8) >= 0
+    assert fresh.metrics_snapshot()["duplicate_events"] == 1
+
+
+def _telemetry_events(duration_ms: float, n_edges: int,
+                      n_models: int) -> list:
+    """(t_ms, edge, model, task_id) stream with same-cell collisions."""
+    events, tid = [], 0
+    t = 0
+    while t < duration_ms:
+        events.append((float(t), t % n_edges, (t // 40) % n_models, tid))
+        tid += 1
+        if t % 200 == 0:        # a second task in the same (tick, cell)
+            events.append((float(t), t % n_edges, (t // 40) % n_models,
+                           tid))
+            tid += 1
+        t += 40
+    return events
+
+
+def test_restore_under_duplicated_out_of_order_replay():
+    # satellite 3: an at-least-once channel (duplicates + reordering,
+    # repro.faults.perturb_telemetry) feeding a controller that polls
+    # only at mission end must land in the bitwise-identical state as
+    # the exactly-once in-order twin — task_id dedupe absorbs the
+    # duplicates, and boolean-lane spill-forward commutes over order
+    from repro.faults import TelemetryChaos
+    from repro.faults.compile import perturb_telemetry
+
+    spec = get("baseline", duration_ms=4000)
+    m = len(spec.models)
+    events = _telemetry_events(4000.0, 2, m)
+    kw = dict(n_edges=2, window_ticks=8)
+
+    a = FleetController(spec.models, "DEMS-A", **kw)
+    for t, e, mi, tid in events:
+        assert a.submit(t, e, mi, task_id=tid) >= 0
+    a.poll(4000.0)
+    a.close()
+
+    chaos = TelemetryChaos(drop_p=0.0, dup_p=0.35, reorder_p=0.6,
+                           max_delay_ms=300.0, seed=2)
+    replay = perturb_telemetry(events, chaos)
+    assert len(replay) > len(events)        # duplicates really delivered
+    assert [ev[3] for ev in replay] != [ev[3] for ev in events]  # reordered
+    b = FleetController(spec.models, "DEMS-A", **kw)
+    for t, e, mi, tid in replay:
+        b.submit(t, e, mi, task_id=tid)
+    b.poll(4000.0)
+    b.close()
+
+    assert b.duplicate_events > 0
+    assert _leaves_equal(a.state, b.state) == []
+    assert b.summary() == a.summary()
+
+
+def test_kill_restore_mid_crash_window_bitwise():
+    # checkpoint taken *inside* an active EdgeCrash window, restore,
+    # finish: bitwise-identical to the uninterrupted streamed run
+    import dataclasses as dc
+    import tempfile
+
+    from repro.faults import EdgeCrash, FaultSpec
+
+    spec = dc.replace(
+        get("baseline", duration_ms=5000), name="crash-stream",
+        faults=FaultSpec(crashes=(
+            EdgeCrash(edge=0, start_ms=1500.0, end_ms=3500.0),)))
+    sig = compile_fleet(spec)
+    T = int(sig.times.shape[0])
+    kw = dict(n_edges=spec.n_edges, window_ticks=16,
+              cloud_slots=spec.cloud_concurrency)
+
+    a = FleetController(spec.models, "DEMS-A", **kw)
+    for lo in range(0, T, 16):
+        a.step_signals(slice_signals(sig, lo, min(lo + 16, T)))
+
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "ck")
+        b = FleetController(spec.models, "DEMS-A", checkpoint_path=path,
+                            **kw)
+        kill_tick = 80                       # inside the crash window
+        assert np.asarray(sig.edge_up)[kill_tick, 0] == False  # noqa: E712
+        for lo in range(0, kill_tick, 16):
+            b.step_signals(slice_signals(sig, lo, lo + 16))
+        b.checkpoint()
+        del b
+
+        c = FleetController(spec.models, "DEMS-A", checkpoint_path=path,
+                            **kw)
+        assert c.restore() == kill_tick
+        for lo in range(kill_tick, T, 16):
+            c.step_signals(slice_signals(sig, lo, min(lo + 16, T)))
+
+    assert _leaves_equal(a.state, c.state) == []
+    assert c.summary() == a.summary()
