@@ -5,7 +5,7 @@
     PYTHONPATH=src python benchmarks/bench_fleet.py --quick \
         --check BENCH_fleet.json                               # CI gate
 
-Three measurements:
+Four measurements:
 
 * **tick throughput** — the steady-workload fleet program's edge-ticks
   per second, with compile time split out (first call − steady call);
@@ -22,7 +22,12 @@ Three measurements:
   (p50/p95/p99 deadline slack & completion latency, windowed p95/p99
   deadline-hit rates, per-task-type QoE frequencies) for rush-hour,
   cloud-crunch, and the stochastic duration-jitter / heavy-tail
-  scenarios.
+  scenarios;
+* **metropolis scaling** — edge-ticks/sec at ``--edges 64,256,1024``
+  fleet sizes through the donated double-buffered replay, and the
+  shape-bucketed sweep planner vs the padded single-program reference
+  (speedup target ≥1.3×, summaries bitwise equal); see
+  ``docs/SCALING.md``.
 
 ``BENCH_fleet.json`` keeps one section per mode (``quick`` / ``full``),
 so a committed quick-mode baseline gates CI runs apples-to-apples while
@@ -200,6 +205,106 @@ def bench_trace(quick: bool) -> dict:
         tails=tails)
 
 
+def bench_scaling(quick: bool, edges: tuple[int, ...]) -> dict:
+    """Metropolis-scale section: edge-ticks/sec vs fleet size, plus the
+    shape-bucketed sweep planner vs the padded reference.
+
+    Two axes, both with bitwise parity guards:
+
+    * **fleet-size scaling** — the steady workload at each ``--edges``
+      size through the donated double-buffered replay
+      (``run_fleet(donate=True, chunk_ticks=…)``), reporting
+      edge-ticks/sec per size (target: near-linear growth) and checking
+      the donated path equals the plain whole-horizon scan bitwise;
+    * **registry sweep** — the full registry × the acceptance policy
+      set, bucketed planner (donation on, per-bucket auto mesh) vs the
+      padded single-program baseline, reporting the steady-state
+      (warm-cache) wall-clock speedup (target ≥1.3×) with each
+      planner's one-off compile bill split out, and counting summary
+      mismatches (must be 0).
+    """
+    import numpy as np
+
+    from repro.core.task import PASSIVE, TABLE1
+    from repro.scenarios import run_registry_sweep
+    from repro.sim.fleet_jax import default_signals, run_fleet
+
+    models = [TABLE1[n] for n in PASSIVE]
+    duration = 5_000.0 if quick else 10_000.0
+    chunk = 64
+    reps = 2
+    rows = []
+    for n_edges in edges:
+        signals = default_signals(len(models), n_edges=n_edges,
+                                  duration_ms=duration)
+        _clear_caches()
+        run = lambda: run_fleet(models, "DEMS-A", signals,   # noqa: E731
+                                donate=True, chunk_ticks=chunk)
+        first = _timed(run)
+        steady = min(_timed(run) for _ in range(reps))
+        n_ticks = int(signals.times.shape[0])
+        rows.append(dict(
+            n_edges=n_edges, n_ticks=n_ticks,
+            compile_s=round(first - steady, 3), wall_s=round(steady, 3),
+            ticks_per_sec=round(n_ticks / steady, 1),
+            edge_ticks_per_sec=round(n_ticks * n_edges / steady, 1)))
+
+    # donation parity at the smallest size: the donated double-buffered
+    # replay must equal the plain whole-horizon scan bitwise
+    sig0 = default_signals(len(models), n_edges=min(edges),
+                           duration_ms=duration)
+    plain = run_fleet(models, "DEMS-A", sig0)
+    donated = run_fleet(models, "DEMS-A", sig0, donate=True,
+                        chunk_ticks=chunk)
+    parity_ok = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(donated)))
+
+    # sweep planners: first call from cleared caches pays the compile
+    # bill (reported split out — the bucketed planner traces one
+    # program per shape bucket, the padded reference exactly one), the
+    # steady call is the metropolis regime where long missions amortize
+    # compiles to zero; the headline speedup compares steady walls
+    policies = ("DEMS-A", "GEMS-B", "GEMS-COOP")
+    seeds = (0,) if quick else (0, 1)
+    sweep_duration = 10_000.0 if quick else 20_000.0
+
+    def timed_sweep(planner, donate):
+        _clear_caches()
+        t0 = time.perf_counter()
+        swept = run_registry_sweep(
+            policies=policies, seeds=seeds, duration_ms=sweep_duration,
+            mesh="auto", planner=planner, donate=donate)
+        first = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        run_registry_sweep(
+            policies=policies, seeds=seeds, duration_ms=sweep_duration,
+            mesh="auto", planner=planner, donate=donate)
+        steady = time.perf_counter() - t0
+        return swept, first, steady
+
+    bucketed_rows, bucketed_first, bucketed_s = timed_sweep(
+        "bucketed", donate=True)
+    padded_rows, padded_first, padded_s = timed_sweep(
+        "padded", donate=False)
+    mismatches = sum(
+        any(b[k] != p[k] for k in b)
+        for b, p in zip(bucketed_rows, padded_rows))
+    return dict(
+        policy="DEMS-A", duration_ms=duration, chunk_ticks=chunk,
+        donation_parity_ok=parity_ok, edges=rows,
+        sweep=dict(
+            n_runs=len(bucketed_rows), policies=list(policies),
+            seeds=list(seeds), duration_ms=sweep_duration,
+            devices=jax.device_count(),
+            bucketed_wall_s=round(bucketed_s, 2),
+            bucketed_compile_s=round(bucketed_first - bucketed_s, 2),
+            padded_wall_s=round(padded_s, 2),
+            padded_compile_s=round(padded_first - padded_s, 2),
+            speedup_vs_padded=round(padded_s / bucketed_s, 2),
+            mismatches=mismatches))
+
+
 def check(report: dict, baseline_path: pathlib.Path,
           tolerance: float) -> int:
     mode = "quick" if report["quick"] else "full"
@@ -207,16 +312,17 @@ def check(report: dict, baseline_path: pathlib.Path,
     if baseline is None:
         print(f"FAIL: baseline {baseline_path} has no {mode!r} section")
         return 1
-    want = baseline["throughput"]["ticks_per_sec"]
-    got = report["throughput"]["ticks_per_sec"]
-    floor = (1.0 - tolerance) * want
-    print(f"ticks/sec: current {got}, baseline {want} "
-          f"(floor {floor:.1f} at {tolerance:.0%} tolerance)")
-    if got < floor:
-        print("FAIL: per-tick throughput regressed beyond tolerance — "
-              "if intentional, regenerate BENCH_fleet.json")
-        return 1
-    if report["sweep"]["loop_vs_batch_mismatches"]:
+    if "throughput" in report:
+        want = baseline["throughput"]["ticks_per_sec"]
+        got = report["throughput"]["ticks_per_sec"]
+        floor = (1.0 - tolerance) * want
+        print(f"ticks/sec: current {got}, baseline {want} "
+              f"(floor {floor:.1f} at {tolerance:.0%} tolerance)")
+        if got < floor:
+            print("FAIL: per-tick throughput regressed beyond tolerance — "
+                  "if intentional, regenerate BENCH_fleet.json")
+            return 1
+    if report.get("sweep", {}).get("loop_vs_batch_mismatches"):
         print("FAIL: one-program sweep summaries diverge from the "
               "per-scenario loop")
         return 1
@@ -229,6 +335,21 @@ def check(report: dict, baseline_path: pathlib.Path,
             print("FAIL: tick program retraced across policies "
                   "(PolicyParams leaked into a static argument)")
             return 1
+    scaling = report.get("scaling")
+    if scaling is not None:
+        # exactness gates are hardware-free: the bucketed planner and
+        # the donated replay must reproduce the padded reference bitwise
+        if scaling["sweep"]["mismatches"]:
+            print("FAIL: bucketed sweep summaries diverge from the "
+                  "padded reference path")
+            return 1
+        if not scaling["donation_parity_ok"]:
+            print("FAIL: donated double-buffered replay diverged from "
+                  "the plain scan")
+            return 1
+        print(f"scaling: bucketed sweep "
+              f"{scaling['sweep']['speedup_vs_padded']}x vs padded, "
+              f"parity OK")
     print("OK")
     return 0
 
@@ -245,6 +366,12 @@ def main() -> None:
                     "file instead of re-measuring")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed fractional ticks/sec regression")
+    ap.add_argument("--edges", default=None,
+                    help="comma-separated fleet sizes for the scaling "
+                    "section (default: 64 quick, 64,256,1024 full)")
+    ap.add_argument("--scaling-only", action="store_true",
+                    help="measure only the scaling section and merge it "
+                    "into the mode section in place (CI scaling-smoke)")
     args = ap.parse_args()
 
     if args.check is not None and args.report is not None:
@@ -252,18 +379,34 @@ def main() -> None:
         report = json.loads(args.report.read_text())[mode]
         sys.exit(check(report, args.check, args.tolerance))
 
-    report = dict(
-        quick=args.quick,
-        jax=jax.__version__, backend=jax.default_backend(),
-        devices=jax.device_count(), cpus=os.cpu_count(),
-        throughput=bench_throughput(args.quick),
-        sweep=bench_sweep(args.quick),
-        trace=bench_trace(args.quick))
+    edges = tuple(int(x) for x in args.edges.split(",")) if args.edges \
+        else ((64,) if args.quick else (64, 256, 1024))
+    if args.scaling_only:
+        report = dict(
+            quick=args.quick,
+            jax=jax.__version__, backend=jax.default_backend(),
+            devices=jax.device_count(), cpus=os.cpu_count(),
+            scaling=bench_scaling(args.quick, edges))
+    else:
+        report = dict(
+            quick=args.quick,
+            jax=jax.__version__, backend=jax.default_backend(),
+            devices=jax.device_count(), cpus=os.cpu_count(),
+            throughput=bench_throughput(args.quick),
+            sweep=bench_sweep(args.quick),
+            trace=bench_trace(args.quick),
+            scaling=bench_scaling(args.quick, edges))
     print(json.dumps(report, indent=1))
     if args.check is not None:
         sys.exit(check(report, args.check, args.tolerance))
     merged = json.loads(args.out.read_text()) if args.out.exists() else {}
-    merged["quick" if args.quick else "full"] = report
+    mode = "quick" if args.quick else "full"
+    if args.scaling_only:
+        # refresh only the scaling subsection; sibling sections (and
+        # their committed baselines) stay untouched
+        merged.setdefault(mode, {})["scaling"] = report["scaling"]
+    else:
+        merged[mode] = report
     args.out.write_text(json.dumps(merged, indent=1, sort_keys=True) + "\n")
     print("wrote", args.out)
 

@@ -122,6 +122,40 @@ def bench_backpressure(*, policy: str = "DEMS-A", n_edges: int = 2,
                 wall_s=round(wall_s, 3))
 
 
+def check_gate(section: dict, baseline_path, mode: str) -> int:
+    """The ``--check`` CI gate as a testable function (exit-code style).
+
+    Fails (returns 1) when p95 per-tick latency regressed >2× against
+    the committed same-mode ``controller`` baseline, or when the
+    bounded-backpressure invariants are violated: the ingest flood must
+    be shed (not buffered unboundedly) and fully accounted for — a hang
+    would never reach here, a leak shows up as accepted + shed != sent.
+    """
+    base = json.load(open(baseline_path)).get(mode, {}).get("controller")
+    if base and base["per_tick_ms"]["p95"]:
+        ratio = section["per_tick_ms"]["p95"] / base["per_tick_ms"]["p95"]
+        print(f"p95 per-tick {section['per_tick_ms']['p95']} ms vs "
+              f"baseline {base['per_tick_ms']['p95']} ms "
+              f"({ratio:.2f}x)")
+        if ratio > 2.0:
+            print("FAIL: controller p95 per-tick latency regressed >2x")
+            return 1
+    else:
+        print(f"no {mode}.controller baseline in {baseline_path}; skipped")
+    bp = section["backpressure"]
+    ok = (bp["shed"] > 0
+          and bp["accepted"] + bp["shed"] == bp["submitted"]
+          and bp["pending_ticks"] <= bp["max_pending_ticks"])
+    print(f"backpressure: {bp['accepted']} accepted / {bp['shed']} "
+          f"shed of {bp['submitted']}, "
+          f"{bp['pending_ticks']}/{bp['max_pending_ticks']} "
+          f"ticks pending")
+    if not ok:
+        print("FAIL: bounded-backpressure invariant violated")
+        return 1
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -144,31 +178,9 @@ def main(argv=None) -> int:
     print(json.dumps({mode: {"controller": section}}, indent=2))
 
     if args.check:
-        base = json.load(open(args.check)).get(mode, {}).get("controller")
-        if base and base["per_tick_ms"]["p95"]:
-            ratio = section["per_tick_ms"]["p95"] / base["per_tick_ms"]["p95"]
-            print(f"p95 per-tick {section['per_tick_ms']['p95']} ms vs "
-                  f"baseline {base['per_tick_ms']['p95']} ms "
-                  f"({ratio:.2f}x)")
-            if ratio > 2.0:
-                print("FAIL: controller p95 per-tick latency regressed >2x")
-                return 1
-        else:
-            print(f"no {mode}.controller baseline in {args.check}; skipped")
-        # bounded-backpressure gate: the ingest flood must be shed (not
-        # buffered unboundedly) and fully accounted for — a hang would
-        # never reach here, a leak shows up as accepted + shed != sent
-        bp = section["backpressure"]
-        ok = (bp["shed"] > 0
-              and bp["accepted"] + bp["shed"] == bp["submitted"]
-              and bp["pending_ticks"] <= bp["max_pending_ticks"])
-        print(f"backpressure: {bp['accepted']} accepted / {bp['shed']} "
-              f"shed of {bp['submitted']}, "
-              f"{bp['pending_ticks']}/{bp['max_pending_ticks']} "
-              f"ticks pending")
-        if not ok:
-            print("FAIL: bounded-backpressure invariant violated")
-            return 1
+        rc = check_gate(section, args.check, mode)
+        if rc:
+            return rc
 
     if not args.no_write:
         path = pathlib.Path(args.out)

@@ -96,6 +96,8 @@ class FleetCompileStats:
     programs: int        # distinct (dt, fracs, tspec, layout) programs
     traces: int          # total jit traces across all of them
     max_traces_per_program: int
+    capacity: int = 0    # bounded program-cache size (LRU eviction past it)
+    evictions: int = 0   # programs evicted since the last reset
 
     @property
     def policy_generic(self) -> bool:
@@ -129,7 +131,9 @@ def fleet_compile_stats() -> FleetCompileStats:
             sizes.append(1)
     return FleetCompileStats(
         programs=len(sizes), traces=sum(sizes),
-        max_traces_per_program=max(sizes, default=0))
+        max_traces_per_program=max(sizes, default=0),
+        capacity=fleet_jax.FLEET_PROGRAM_CACHE_CAPACITY,
+        evictions=fleet_jax._PROGRAM_EVICTIONS)
 
 
 def reset_fleet_programs() -> None:
@@ -138,3 +142,4 @@ def reset_fleet_programs() -> None:
 
     fleet_jax._fleet_program.cache_clear()
     fleet_jax._PROGRAM_REGISTRY.clear()
+    fleet_jax._PROGRAM_EVICTIONS = 0

@@ -10,7 +10,9 @@ from repro.faults import (Brownout, EdgeCrash, FaultSpec, Flood, Jamming,
 from repro.scenarios.compile import (OracleInputs, SweepRun,
                                      compile_exec_jitter, compile_fleet,
                                      compile_fleet_batch, compile_oracle,
-                                     compile_registry_batch)
+                                     compile_registry_batch,
+                                     compile_registry_groups)
+from repro.sim.fleet_jax import plan_buckets
 from repro.scenarios.registry import SCENARIOS, get, names
 from repro.scenarios.runner import (fleet_summary, fleet_summary_batch,
                                     merge_results, run_registry_sweep,
@@ -28,8 +30,9 @@ __all__ = [
     "SCENARIOS", "ScenarioSpec", "SweepRun", "TelemetryChaos",
     "ThetaTrapezium",
     "compile_exec_jitter", "compile_fleet", "compile_fleet_batch",
-    "compile_oracle", "compile_registry_batch", "fleet_summary",
-    "fleet_summary_batch", "get", "merge_results", "names",
+    "compile_oracle", "compile_registry_batch", "compile_registry_groups",
+    "fleet_summary",
+    "fleet_summary_batch", "get", "merge_results", "names", "plan_buckets",
     "run_registry_sweep", "run_scenario_fleet", "run_scenario_fleet_batch",
     "run_scenario_oracle",
 ]

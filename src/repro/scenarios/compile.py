@@ -598,14 +598,35 @@ def _slice_edge(sig: FleetSignals, e: int) -> FleetSignals:
         edge_up=sig.edge_up[:, e:e + 1], link_up=sig.link_up[:, e:e + 1])
 
 
+def _sweep_specs(scenarios, duration_ms) -> list[ScenarioSpec]:
+    """Resolve a sweep's scenario list: registry names and/or ad-hoc
+    :class:`ScenarioSpec` instances (the fuzz harness's entry), all of
+    the registry when ``None``, with an optional ``duration_ms``
+    override.  Spec names must be unique — they key the sweep's rows."""
+    from repro.scenarios.registry import get, names
+
+    specs = [sc if isinstance(sc, ScenarioSpec) else get(sc)
+             for sc in (tuple(scenarios) if scenarios is not None
+                        else names())]
+    if duration_ms is not None:
+        specs = [dataclasses.replace(sp, duration_ms=duration_ms)
+                 for sp in specs]
+    seen = {sp.name for sp in specs}
+    if len(seen) != len(specs):
+        raise ValueError("sweep scenarios must have unique names, got "
+                         f"{[sp.name for sp in specs]}")
+    return specs
+
+
 def compile_registry_batch(scenarios=None, policies=("DEMS",),
                            seeds=(0,), *, dt: float = 25.0,
                            duration_ms: float | None = None
                            ) -> tuple[FleetBatch, list[SweepRun]]:
     """Lower scenarios × policies × seeds to **one** compiled program.
 
-    Every named registry scenario (all of them by default) is compiled
-    per seed, padded to the batch's max (ticks, edges, models) shape with
+    Every scenario (each named registry entry by default; ad-hoc
+    :class:`ScenarioSpec` instances are accepted too) is compiled per
+    seed, padded to the batch's max (ticks, edges, models) shape with
     validity masks, and paired with its policy's runtime
     :class:`~repro.sim.fleet_jax.PolicyParams` and its own
     ``cloud_concurrency`` pool — so the whole sweep executes as a single
@@ -618,15 +639,13 @@ def compile_registry_batch(scenarios=None, policies=("DEMS",),
     the multi-edge vmap — and each :class:`SweepRun` row carries its
     ``lanes``.  Returns the batch plus the run index, in replica order.
     """
-    from repro.scenarios.registry import get, names
     from repro.sim.fleet_jax import _resolve_policy
 
     flatten = not any(_resolve_policy(p).cooperation for p in policies)
     runs, rows, lane = [], [], 0
     sig_cache: dict = {}    # policies share a (scenario, seed)'s signals
-    for sc in (tuple(scenarios) if scenarios else names()):
-        spec = get(sc) if duration_ms is None else get(
-            sc, duration_ms=duration_ms)
+    for spec in _sweep_specs(scenarios, duration_ms):
+        sc = spec.name
         for pol in policies:
             for seed in seeds:
                 sp = dataclasses.replace(spec, seed=seed)
@@ -649,33 +668,31 @@ def compile_registry_groups(scenarios=None, policies=("DEMS",),
                             seeds=(0,), *, dt: float = 25.0,
                             duration_ms: float | None = None
                             ) -> list[tuple[FleetBatch, list[SweepRun]]]:
-    """The sweep as exact-shape groups — the single-device lowering.
+    """The sweep as exact-shape buckets — the shape-bucketed planner.
 
-    On one device the single padded batch of
-    :func:`compile_registry_batch` buys no parallelism, yet every replica
-    still pays max-shape padding and (with any cooperative policy in the
-    mix) the un-flattened multi-edge step + peer-offload rounds — the
-    full registry ran *slower* batched than looped.  This lowering
-    partitions the same sweep into groups keyed by exact
-    ``(ticks, edges, models, cooperative)`` shape: non-cooperative runs
-    are edge-flattened per group (1-edge replicas, zero edge padding),
-    cooperative runs group by their true multi-edge shape, and
-    peer-offload rounds compile only into cooperative groups.  Within a
-    group stacking is exact — no padding at all — so each group's
-    ``run_batch`` rows still equal the per-scenario ``run_fleet`` loop
-    bitwise.
+    The single padded batch of :func:`compile_registry_batch` makes
+    every replica pay max-shape padding and (with any cooperative policy
+    in the mix) the un-flattened multi-edge step + peer-offload rounds —
+    the full registry ran *slower* batched than looped.  This lowering
+    routes the same sweep through
+    :func:`repro.sim.fleet_jax.plan_buckets`: non-cooperative runs are
+    edge-flattened (1-edge replicas, zero edge padding), cooperative
+    runs bucket by their true multi-edge shape, and peer-offload rounds
+    compile only into cooperative buckets.  Within a bucket stacking is
+    exact — no padding at all — so each bucket's ``run_batch`` rows
+    still equal the per-scenario ``run_fleet`` loop bitwise.
 
-    Returns ``(batch, rows)`` per group; each row's ``lanes`` index into
-    its *own* group's batch.  Rows across all groups partition the sweep.
+    Returns ``(batch, rows)`` per bucket; each row's ``lanes`` index
+    into its *own* bucket's batch.  Rows across all buckets partition
+    the sweep.  Like :func:`compile_registry_batch`, ``scenarios`` may
+    mix registry names with ad-hoc :class:`ScenarioSpec` instances.
     """
-    from repro.scenarios.registry import get, names
-    from repro.sim.fleet_jax import _resolve_policy
+    from repro.sim.fleet_jax import _resolve_policy, plan_buckets
 
-    groups: dict = {}
+    runs, tags = [], []
     sig_cache: dict = {}
-    for sc in (tuple(scenarios) if scenarios else names()):
-        spec = get(sc) if duration_ms is None else get(
-            sc, duration_ms=duration_ms)
+    for spec in _sweep_specs(scenarios, duration_ms):
+        sc = spec.name
         for pol in policies:
             coop = _resolve_policy(pol).cooperation
             for seed in seeds:
@@ -686,15 +703,17 @@ def compile_registry_groups(scenarios=None, policies=("DEMS",),
                         sig, [_slice_edge(sig, e)
                               for e in range(sp.n_edges)])
                 whole, slices = sig_cache[sc, seed]
-                sigs = [whole] if coop else slices
-                t, e, m = sigs[0].arrive.shape
-                g = groups.setdefault((t, e, m, coop),
-                                      dict(runs=[], rows=[], lane=0))
-                g["runs"].extend((sp.models, pol, s, sp.cloud_concurrency)
-                                 for s in sigs)
-                lanes = tuple(range(g["lane"], g["lane"] + len(sigs)))
-                g["lane"] += len(sigs)
-                g["rows"].append(SweepRun(scenario=sc, policy=pol,
-                                          seed=seed, lanes=lanes))
-    return [(build_fleet_batch(g["runs"], dt=dt), g["rows"])
-            for g in groups.values()]
+                for s in ([whole] if coop else slices):
+                    runs.append((sp.models, pol, s, sp.cloud_concurrency))
+                    tags.append((sc, pol, seed))
+    out = []
+    for batch, idxs in plan_buckets(runs, dt=dt):
+        # a run's edge-flattened lanes land in one bucket (same shape,
+        # same policy), in order — regroup them under their sweep row
+        rows: dict = {}
+        for lane, i in enumerate(idxs):
+            rows.setdefault(tags[i], []).append(lane)
+        out.append((batch, [SweepRun(scenario=sc, policy=pol, seed=seed,
+                                     lanes=tuple(lanes))
+                            for (sc, pol, seed), lanes in rows.items()]))
+    return out

@@ -231,24 +231,42 @@ def run_scenario_fleet_batch(spec: ScenarioSpec, policy,
 
 def run_registry_sweep(scenarios=None, policies=("DEMS",), seeds=(0,), *,
                        dt: float = 25.0, duration_ms: float | None = None,
-                       mesh=None, trace=None) -> list[dict]:
-    """Scenarios × policies × seeds as **one** compiled, padded program.
+                       mesh=None, trace=None, planner: str = "bucketed",
+                       donate: bool = False) -> list[dict]:
+    """Scenarios × policies × seeds as compiled sweep programs.
 
-    The whole sweep — by default the entire registry — is lowered through
-    :func:`repro.scenarios.compile.compile_registry_batch` and executed
-    with a single ``jit`` (:func:`repro.sim.fleet_jax.run_batch`); with a
-    2-D ``mesh`` the (replica, edge) grid shards across devices, and
-    ``mesh="auto"`` fans the replica axis over every available device
-    (the largest device count dividing it).  Returns one summary dict per
-    run, tagged with its (scenario, policy, seed).
+    ``planner`` picks the lowering — both produce bitwise-identical
+    rows (the fuzz harness in ``tests/test_fuzz_scenarios.py`` holds
+    them to it):
+
+    * ``"bucketed"`` (default) — the shape-bucketed multi-program
+      planner: :func:`repro.scenarios.compile.compile_registry_groups`
+      partitions the sweep into exact-shape buckets
+      (:func:`repro.sim.fleet_jax.plan_buckets`), one jit per bucket,
+      zero padding.  With ``mesh="auto"`` each bucket's replica axis
+      fans over the largest dividing device count; an explicit mesh
+      shards every bucket's (replica, edge) grid.
+    * ``"padded"`` — the single max-shape padded program
+      (:func:`repro.scenarios.compile.compile_registry_batch` +
+      one :func:`repro.sim.fleet_jax.run_batch`): the reference baseline
+      the bucketed planner is benchmarked and parity-checked against
+      (``scaling`` section of ``BENCH_fleet.json``).
+
+    ``scenarios`` accepts registry names and/or ad-hoc
+    :class:`~repro.scenarios.spec.ScenarioSpec` instances.  ``donate``
+    compiles the sweep programs with their carry buffers donated
+    (in-place state updates — same rows, see
+    :class:`~repro.sim.fleet_jax.FleetProgram`).  Returns one summary
+    dict per run, tagged with its (scenario, policy, seed), in sweep
+    order.
 
     ``trace`` (a :class:`repro.obs.trace.TraceSpec`) threads the flight
-    recorder through the one-program sweep: each row dict then also
-    carries a ``"trace"`` :class:`~repro.sim.fleet_jax.FleetResult`
-    whose streams are re-stacked to that run's own ``[T, E, …]`` layout
-    (lanes of the edge-flattened lowering concatenated back along the
-    edge axis; the model axis stays padded to the batch maximum, padded
-    models simply never count).
+    recorder through the sweep: each row dict then also carries a
+    ``"trace"`` :class:`~repro.sim.fleet_jax.FleetResult` whose streams
+    are re-stacked to that run's own ``[T, E, …]`` layout (lanes of the
+    edge-flattened lowering concatenated back along the edge axis; under
+    the padded planner the model axis stays padded to the batch maximum,
+    padded models simply never count).
     """
     from repro.scenarios.compile import (compile_registry_batch,
                                          compile_registry_groups)
@@ -284,33 +302,40 @@ def run_registry_sweep(scenarios=None, policies=("DEMS",), seeds=(0,), *,
         return out
 
     auto = isinstance(mesh, str) and mesh == "auto"
-    if (mesh is None or auto) and jax.device_count() == 1:
-        # single device: the padded max-shape batch buys no parallelism
-        # and *costs* padding + (with any coop policy) un-flattened
-        # multi-edge stepping for every replica — run exact-shape groups
-        # instead (each group unpadded, rows still bitwise equal to the
-        # per-scenario loop), then emit rows in sweep order
+
+    def auto_mesh(batch):
+        r = int(batch.signals.arrive.shape[0])
+        n = max(d for d in range(1, jax.device_count() + 1) if r % d == 0)
+        return jax.make_mesh((n,), ("replica",)) if n > 1 else None
+
+    if planner == "bucketed":
         by_key = {}
         for batch, rows in compile_registry_groups(
                 scenarios, policies, seeds, dt=dt, duration_ms=duration_ms):
-            res = jax.device_get(run_batch(batch, dt=dt, trace=trace))
+            # one host transfer per bucket: the per-row lane slicing in
+            # summarize would otherwise issue a device gather per leaf
+            # per run (slow when the replica axis is sharded)
+            res = jax.device_get(run_batch(
+                batch, dt=dt, mesh=auto_mesh(batch) if auto else mesh,
+                trace=trace, donate=donate))
             for d in summarize(res, rows):
                 by_key[d["scenario"], d["policy"], d["seed"]] = d
         from repro.scenarios.registry import names
+        order = tuple(sc if isinstance(sc, str) else sc.name
+                      for sc in scenarios) if scenarios is not None \
+            else names()
         return [by_key[sc, pol, seed]
-                for sc in (tuple(scenarios) if scenarios else names())
-                for pol in policies for seed in seeds]
+                for sc in order for pol in policies for seed in seeds]
+    if planner != "padded":
+        raise ValueError(f"unknown planner {planner!r}; "
+                         f"choose 'bucketed' or 'padded'")
 
     batch, rows = compile_registry_batch(scenarios, policies, seeds,
                                          dt=dt, duration_ms=duration_ms)
     if auto:
-        r = int(batch.signals.arrive.shape[0])
-        n = max(d for d in range(1, jax.device_count() + 1) if r % d == 0)
-        mesh = jax.make_mesh((n,), ("replica",)) if n > 1 else None
-    # one host transfer up front: the per-row lane slicing below would
-    # otherwise issue a device gather per leaf per run (slow when the
-    # replica axis is sharded)
-    res = jax.device_get(run_batch(batch, dt=dt, mesh=mesh, trace=trace))
+        mesh = auto_mesh(batch)
+    res = jax.device_get(run_batch(batch, dt=dt, mesh=mesh, trace=trace,
+                                   donate=donate))
     return summarize(res, rows)
 
 

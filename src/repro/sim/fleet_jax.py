@@ -77,6 +77,7 @@ percentiles, conservation ledger, Perfetto export) lives in
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import NamedTuple, Optional
@@ -1214,11 +1215,21 @@ def _shard_signals(sig: FleetSignals, mesh: jax.sharding.Mesh
 # through it must add no traces (tests/conftest.py ``compile_guard``)
 _PROGRAM_REGISTRY: list = []
 
+# The program cache is bounded: the shape-bucketed sweep planner
+# (:func:`plan_buckets`) deliberately keys one executable per bucket
+# layout, and a long-lived process sweeping many bucket shapes must not
+# accumulate jit wrappers (and their trace caches) without bound.  LRU
+# order: the programs a sweep is actively cycling through stay resident;
+# evicted programs also leave ``_PROGRAM_REGISTRY`` so retrace
+# accounting tracks live executables only.
+FLEET_PROGRAM_CACHE_CAPACITY = 32
+_PROGRAM_CACHE: collections.OrderedDict = collections.OrderedDict()
+_PROGRAM_EVICTIONS = 0
 
-@functools.lru_cache(maxsize=None)
+
 def _fleet_program(dt: float, edge_frac: float, cloud_frac: float,
                    coop_rounds: int, tspec: TraceSpec, batched: bool,
-                   hetero: bool):
+                   hetero: bool, donate: bool = False):
     """Jitted ``run(prof, pp, state, xs)``.
 
     ``batched`` adds a leading replica axis on the signals (and, when
@@ -1227,8 +1238,19 @@ def _fleet_program(dt: float, edge_frac: float, cloud_frac: float,
     entirely); per-replica runtime caps mask rounds within it.
     ``tspec`` selects the flight-recorder streams tapped out of the scan;
     it is part of this cache's key, so the trace-off program is the very
-    executable the untraced sweeps always compiled.
+    executable the untraced sweeps always compiled.  ``donate`` hands the
+    ``state`` argument's buffers to XLA (``donate_argnums``): the carry
+    is updated in place instead of round-tripping fresh allocations each
+    chunk — callers must not reuse a donated input afterwards
+    (:meth:`FleetProgram.run` copies the caller's initial state once).
     """
+    global _PROGRAM_EVICTIONS
+    key = (dt, edge_frac, cloud_frac, coop_rounds, tspec, batched, hetero,
+           donate)
+    prog = _PROGRAM_CACHE.get(key)
+    if prog is not None:
+        _PROGRAM_CACHE.move_to_end(key)
+        return prog
     step = make_step(dt, edge_frac, cloud_frac, tspec)
 
     def run(prof, pp, state, xs):
@@ -1265,9 +1287,27 @@ def _fleet_program(dt: float, edge_frac: float, cloud_frac: float,
     if batched:
         ax = 0 if hetero else None
         run = jax.vmap(run, in_axes=(ax, ax, ax, 0))
-    prog = jax.jit(run)
+    prog = jax.jit(run, donate_argnums=(2,)) if donate else jax.jit(run)
+    _PROGRAM_CACHE[key] = prog
     _PROGRAM_REGISTRY.append(prog)
+    while len(_PROGRAM_CACHE) > FLEET_PROGRAM_CACHE_CAPACITY:
+        _, evicted = _PROGRAM_CACHE.popitem(last=False)
+        _PROGRAM_EVICTIONS += 1
+        try:
+            _PROGRAM_REGISTRY.remove(evicted)
+        except ValueError:  # already dropped by reset_fleet_programs
+            pass
     return prog
+
+
+def _program_cache_clear() -> None:
+    _PROGRAM_CACHE.clear()
+
+
+# keep the lru_cache-era management surface: callers
+# (benchmarks/bench_fleet.py, repro.obs.prof.reset_fleet_programs) clear
+# the cache through the function object
+_fleet_program.cache_clear = _program_cache_clear
 
 
 def slice_signals(sig: FleetSignals, lo: int, hi: int, *,
@@ -1299,6 +1339,14 @@ class FleetProgram:
     The jitted executable is shared through the :func:`_fleet_program`
     cache: two programs with equal static fields reuse one compile, and
     a chunk compiles once per distinct window length.
+
+    ``donate=True`` compiles the executable with its state argument's
+    buffers donated to XLA: the scan carry updates in place instead of
+    allocating a fresh state every chunk — the steady-state win of the
+    metropolis-scale path.  A donated :meth:`step_chunk` *consumes* the
+    state you pass it (the input buffers are invalidated); :meth:`run`
+    copies the caller's initial state once so replay callers can keep
+    reusing their batches.
     """
 
     dt: float = 25.0
@@ -1308,17 +1356,20 @@ class FleetProgram:
     trace: TraceSpec = TraceSpec()
     batched: bool = False
     hetero: bool = False
+    donate: bool = False
 
     @classmethod
     def for_policy(cls, policy, *, trace: TraceSpec = TraceSpec(),
                    dt: float = 25.0, edge_frac: float = 0.62,
                    cloud_frac: float = 0.80, batched: bool = False,
-                   hetero: bool = False) -> "FleetProgram":
+                   hetero: bool = False, donate: bool = False
+                   ) -> "FleetProgram":
         """A program whose static peer-offload bound matches ``policy``."""
         pol = _resolve_policy(policy)
         return cls(dt=dt, edge_frac=edge_frac, cloud_frac=cloud_frac,
                    coop_rounds=pol.coop_max_transfers if pol.cooperation
-                   else 0, trace=trace, batched=batched, hetero=hetero)
+                   else 0, trace=trace, batched=batched, hetero=hetero,
+                   donate=donate)
 
     def init(self, prof: Profiles, policy, n_edges: int,
              cloud_slots: int = CLOUD_SLOTS,
@@ -1335,7 +1386,7 @@ class FleetProgram:
     def _jitted(self):
         return _fleet_program(self.dt, self.edge_frac, self.cloud_frac,
                               self.coop_rounds, self.trace, self.batched,
-                              self.hetero)
+                              self.hetero, self.donate)
 
     def step_chunk(self, prof: Profiles, pp: PolicyParams, state: EdgeState,
                    signals: FleetSignals):
@@ -1361,18 +1412,40 @@ class FleetProgram:
         points made.  A finite ``chunk_ticks`` replays window-by-window,
         concatenating trace streams along the tick axis; results are
         bitwise identical either way.
+
+        With ``donate`` on, the loop is *double-buffered*: the next
+        window is sliced while the current chunk is still in flight
+        (async dispatch overlaps host slicing with device compute) and
+        the donated carry never round-trips a fresh allocation.  The
+        caller's ``state`` buffers survive — the loop consumes a private
+        copy.
         """
         tick_axis = 1 if self.batched else 0
         n_ticks = signals.times.shape[tick_axis]
+        if self.donate:
+            # the executable consumes its state input; replay callers
+            # (e.g. a FleetBatch swept under several planners) keep
+            # their initial state, so donate a copy instead
+            state = jax.tree.map(jnp.copy, state)
         if chunk_ticks is None or chunk_ticks >= n_ticks:
             state, res = self.step_chunk(prof, pp, state, signals)
             return res if self.trace.enabled else state
+        bounds = [(lo, min(lo + chunk_ticks, n_ticks))
+                  for lo in range(0, n_ticks, chunk_ticks)]
         chunks = []
-        for lo in range(0, n_ticks, chunk_ticks):
-            win = slice_signals(signals, lo, min(lo + chunk_ticks, n_ticks),
-                                tick_axis=tick_axis)
+        win = slice_signals(signals, *bounds[0], tick_axis=tick_axis)
+        for i in range(len(bounds)):
+            nxt = slice_signals(signals, *bounds[i + 1],
+                                tick_axis=tick_axis) \
+                if i + 1 < len(bounds) else None
             state, res = self.step_chunk(prof, pp, state, win)
+            win = nxt
             chunks.append(res)
+            if self.donate and (i & 7) == 7:
+                # bound in-flight work: sync on the *newest* carry only
+                # — older states are already donated away and their
+                # buffers are dead
+                jax.block_until_ready(state)
         if not self.trace.enabled:
             return state
 
@@ -1392,7 +1465,8 @@ def run_fleet(models: list[ModelProfile], policy, signals: FleetSignals, *,
               mesh: Optional[jax.sharding.Mesh] = None,
               record_trace: bool = False,
               trace: Optional[TraceSpec] = None,
-              chunk_ticks: Optional[int] = None):
+              chunk_ticks: Optional[int] = None,
+              donate: bool = False):
     """Run the fleet simulator over arbitrary scenario signals.
 
     ``policy`` is a :class:`FleetPolicy` or a name (``"DEMS"``,
@@ -1414,7 +1488,9 @@ def run_fleet(models: list[ModelProfile], policy, signals: FleetSignals, *,
     This is a thin :meth:`FleetProgram.run` loop; ``chunk_ticks``
     replays the horizon in windows of that many ticks (bitwise-identical
     to the default whole-horizon chunk — the streaming controller's
-    execution path).
+    execution path).  ``donate=True`` compiles the program with its
+    state buffers donated (in-place carry updates, double-buffered
+    windows) — same results bitwise, see :class:`FleetProgram`.
     """
     tspec = resolve_spec(trace, record_trace)
     pol = _resolve_policy(policy)
@@ -1422,7 +1498,7 @@ def run_fleet(models: list[ModelProfile], policy, signals: FleetSignals, *,
     n_edges = signals.arrive.shape[1]
     prog = FleetProgram.for_policy(pol, trace=tspec, dt=dt,
                                    edge_frac=edge_frac,
-                                   cloud_frac=cloud_frac)
+                                   cloud_frac=cloud_frac, donate=donate)
     state = prog.init(prof, pol, n_edges, cloud_slots)
     if mesh is not None:
         state = _shard_leading(state, mesh)
@@ -1508,7 +1584,8 @@ def run_fleet_batch(models: list[ModelProfile], policy,
                     cloud_slots: int = CLOUD_SLOTS,
                     mesh: Optional[jax.sharding.Mesh] = None,
                     record_trace: bool = False,
-                    trace: Optional[TraceSpec] = None):
+                    trace: Optional[TraceSpec] = None,
+                    donate: bool = False):
     """One-jit sweep: ``signals`` carry a leading replica axis ``[R, …]``
     (from :func:`stack_signals`), and the whole sweep — every replica's
     full mission scan — runs as a single ``vmap``-over-replicas compiled
@@ -1531,7 +1608,8 @@ def run_fleet_batch(models: list[ModelProfile], policy,
     n_edges = signals.arrive.shape[2]
     prog = FleetProgram.for_policy(pol, trace=tspec, dt=dt,
                                    edge_frac=edge_frac,
-                                   cloud_frac=cloud_frac, batched=True)
+                                   cloud_frac=cloud_frac, batched=True,
+                                   donate=donate)
     state = prog.init(prof, pol, n_edges, cloud_slots)
     if mesh is not None:
         # state is replica-shared (vmap in_axes None): leave it replicated
@@ -1603,11 +1681,50 @@ def build_fleet_batch(runs, *, dt: float = 25.0) -> FleetBatch:
                          if p.cooperation), default=0))
 
 
+def plan_buckets(runs, *, dt: float = 25.0
+                 ) -> list[tuple[FleetBatch, tuple[int, ...]]]:
+    """Shape-bucketed planner: exact-shape batches, one jit per bucket.
+
+    Takes the same ``(models, policy, signals, cloud_slots)`` run list
+    as :func:`build_fleet_batch`, but instead of padding every replica
+    to the batch max shape, partitions the runs by exact
+    ``(ticks, edges, models, coop_rounds, adapt_window)`` — within a
+    bucket stacking is exact, so mixed-size sweeps (the ``*-COOP``
+    registry case) stop paying max-shape padding, and peer-offload
+    rounds compile only into the buckets that need them.  Each bucket
+    compiles one program; the bounded :func:`_fleet_program` cache keeps
+    bucket proliferation from retrace-leaking.
+
+    Returns ``(batch, idxs)`` per bucket, where ``idxs`` maps the
+    bucket's replica lanes back to positions in ``runs`` (lane ``k`` of
+    the bucket's :func:`run_batch` result is run ``idxs[k]``).  Bucket
+    results are bitwise identical to running the whole list through one
+    padded :func:`build_fleet_batch` / :func:`run_batch` program —
+    padding cells are exact no-ops by construction, so both equal the
+    per-run :func:`run_fleet` loop.
+    """
+    buckets: dict = {}
+    for i, run in enumerate(runs):
+        models, policy, sig, _slots = run
+        pol = _resolve_policy(policy)
+        t, e, _m = sig.arrive.shape
+        key = (t, e, len(models),
+               pol.coop_max_transfers if pol.cooperation else 0,
+               pol.adapt_window)
+        bucket = buckets.setdefault(key, ([], []))
+        bucket[0].append(run)
+        bucket[1].append(i)
+    return [(build_fleet_batch(rs, dt=dt), tuple(idxs))
+            for rs, idxs in buckets.values()]
+
+
 def run_batch(batch: FleetBatch, *, dt: float = 25.0,
               edge_frac: float = 0.62, cloud_frac: float = 0.80,
               mesh: Optional[jax.sharding.Mesh] = None,
               record_trace: bool = False,
-              trace: Optional[TraceSpec] = None):
+              trace: Optional[TraceSpec] = None,
+              donate: bool = False,
+              chunk_ticks: Optional[int] = None):
     """Execute a heterogeneous :class:`FleetBatch` as one compiled program.
 
     Every replica — its own scenario shape, policy flags, model table and
@@ -1619,19 +1736,23 @@ def run_batch(batch: FleetBatch, *, dt: float = 25.0,
     :class:`FleetResult` whose streams lead with the replica axis
     (``t_hat`` shaped ``[R, T, E, M]``); padded (tick, edge) cells record
     zero events, by the same masking that makes them state no-ops.
+    ``donate=True`` hands the batch's state buffers to XLA for in-place
+    carry updates (``batch.state`` itself stays valid — the program runs
+    on a private copy); ``chunk_ticks`` replays the horizon in
+    double-buffered windows.  Both knobs leave results bitwise unchanged.
     """
     tspec = resolve_spec(trace, record_trace)
     prof, pp, state, sig = (batch.profiles, batch.params, batch.state,
                             batch.signals)
     prog = FleetProgram(dt=dt, edge_frac=edge_frac, cloud_frac=cloud_frac,
                         coop_rounds=batch.coop_rounds, trace=tspec,
-                        batched=True, hetero=True)
+                        batched=True, hetero=True, donate=donate)
     if mesh is not None:
         prof = _shard_leading(prof, mesh, axes=1)
         pp = _shard_leading(pp, mesh, axes=1)
         state = _shard_leading(state, mesh, axes=2)
         sig = _shard_signals(sig, mesh)
-    return prog.run(prof, pp, state, sig)
+    return prog.run(prof, pp, state, sig, chunk_ticks)
 
 
 def simulate_fleet(models: list[ModelProfile], policy: str, *,

@@ -1,0 +1,185 @@
+"""Smoke tests for the CI benchmark gates — the *logic*, not the measuring.
+
+``bench_fleet.check`` and ``bench_serve.check_gate`` are the exit-code
+guards CI runs against the committed ``BENCH_fleet.json`` baseline.
+These tests feed them synthetic reports (an injected >25 % slowdown, a
+planner parity mismatch, a backpressure leak, …) and assert each gate
+trips — so a regression in the gate itself cannot silently wave a real
+regression through.
+
+The benchmark modules live outside the package (``benchmarks/``); they
+are loaded by file path.  ``bench_fleet`` prepends
+``--xla_force_host_platform_device_count`` to ``XLA_FLAGS`` at import —
+the loader restores the environment so the test process's device
+topology is untouched.
+"""
+import importlib.util
+import json
+import os
+import pathlib
+
+import pytest
+
+pytestmark = pytest.mark.bench_gate
+
+_BENCH_DIR = pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+_MODULES: dict = {}
+
+
+def _load(name):
+    if name in _MODULES:
+        return _MODULES[name]
+    old = os.environ.get("XLA_FLAGS")
+    try:
+        spec = importlib.util.spec_from_file_location(
+            name, _BENCH_DIR / f"{name}.py")
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+    finally:
+        if old is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = old
+    _MODULES[name] = mod
+    return mod
+
+
+# ---------------------------------------------------------------- fleet
+
+
+def _fleet_baseline(tmp_path, ticks_per_sec=1_000.0):
+    p = tmp_path / "BENCH_fleet.json"
+    p.write_text(json.dumps(
+        {"quick": {"throughput": {"ticks_per_sec": ticks_per_sec}}}))
+    return p
+
+
+def test_fleet_gate_trips_on_synthetic_slowdown(tmp_path, capsys):
+    bf = _load("bench_fleet")
+    base = _fleet_baseline(tmp_path)
+    # 30 % slower than baseline at the default 25 % tolerance
+    report = dict(quick=True, throughput=dict(ticks_per_sec=700.0))
+    assert bf.check(report, base, 0.25) == 1
+    assert "regressed" in capsys.readouterr().out
+
+
+def test_fleet_gate_passes_within_tolerance(tmp_path):
+    bf = _load("bench_fleet")
+    base = _fleet_baseline(tmp_path)
+    report = dict(quick=True, throughput=dict(ticks_per_sec=800.0))
+    assert bf.check(report, base, 0.25) == 0
+
+
+def test_fleet_gate_missing_mode_section(tmp_path):
+    bf = _load("bench_fleet")
+    base = tmp_path / "BENCH_fleet.json"
+    base.write_text(json.dumps({"full": {}}))
+    assert bf.check(dict(quick=True), base, 0.25) == 1
+
+
+def test_fleet_gate_sweep_mismatch(tmp_path, capsys):
+    bf = _load("bench_fleet")
+    base = _fleet_baseline(tmp_path)
+    report = dict(quick=True,
+                  sweep=dict(loop_vs_batch_mismatches=2))
+    assert bf.check(report, base, 0.25) == 1
+    assert "diverge" in capsys.readouterr().out
+
+
+def test_fleet_gate_policy_retrace(tmp_path):
+    bf = _load("bench_fleet")
+    base = _fleet_baseline(tmp_path)
+    report = dict(quick=True, trace=dict(
+        overhead_frac=0.05, ticks_per_sec_on=900.0,
+        ticks_per_sec_off=950.0, policy_generic=False))
+    assert bf.check(report, base, 0.25) == 1
+
+
+def _scaling(mismatches=0, parity=True, speedup=1.5):
+    return dict(donation_parity_ok=parity,
+                sweep=dict(mismatches=mismatches,
+                           speedup_vs_padded=speedup))
+
+
+def test_fleet_gate_scaling_bucket_mismatch(tmp_path, capsys):
+    bf = _load("bench_fleet")
+    base = _fleet_baseline(tmp_path)
+    report = dict(quick=True, scaling=_scaling(mismatches=1))
+    assert bf.check(report, base, 0.25) == 1
+    assert "padded reference" in capsys.readouterr().out
+
+
+def test_fleet_gate_scaling_donation_parity(tmp_path, capsys):
+    bf = _load("bench_fleet")
+    base = _fleet_baseline(tmp_path)
+    report = dict(quick=True, scaling=_scaling(parity=False))
+    assert bf.check(report, base, 0.25) == 1
+    assert "donated" in capsys.readouterr().out
+
+
+def test_fleet_gate_full_report_passes(tmp_path, capsys):
+    bf = _load("bench_fleet")
+    base = _fleet_baseline(tmp_path)
+    report = dict(
+        quick=True,
+        throughput=dict(ticks_per_sec=1_100.0),
+        sweep=dict(loop_vs_batch_mismatches=0),
+        trace=dict(overhead_frac=0.05, ticks_per_sec_on=900.0,
+                   ticks_per_sec_off=950.0, policy_generic=True),
+        scaling=_scaling())
+    assert bf.check(report, base, 0.25) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------- serve
+
+
+def _serve_section(**over):
+    s = dict(
+        per_tick_ms={"p50": 1.0, "p95": 2.0, "p99": 3.0},
+        backpressure=dict(max_pending_ticks=64, submitted=5_000,
+                          accepted=128, shed=4_872, pending_ticks=64))
+    s.update(over)
+    return s
+
+
+def _serve_baseline(tmp_path, p95=1.5):
+    p = tmp_path / "BENCH_fleet.json"
+    p.write_text(json.dumps(
+        {"quick": {"controller": {"per_tick_ms": {"p95": p95}}}}))
+    return p
+
+
+def test_serve_gate_trips_on_p95_regression(tmp_path, capsys):
+    bs = _load("bench_serve")
+    base = _serve_baseline(tmp_path, p95=0.9)   # 2.0 / 0.9 > 2x
+    assert bs.check_gate(_serve_section(), base, "quick") == 1
+    assert "regressed" in capsys.readouterr().out
+
+
+def test_serve_gate_passes_within_bound(tmp_path):
+    bs = _load("bench_serve")
+    base = _serve_baseline(tmp_path, p95=1.5)   # 2.0 / 1.5 < 2x
+    assert bs.check_gate(_serve_section(), base, "quick") == 0
+
+
+def test_serve_gate_skips_missing_baseline(tmp_path, capsys):
+    bs = _load("bench_serve")
+    base = tmp_path / "BENCH_fleet.json"
+    base.write_text(json.dumps({"full": {}}))
+    assert bs.check_gate(_serve_section(), base, "quick") == 0
+    assert "skipped" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize("bp_over", [
+    dict(shed=0, accepted=5_000),          # nothing shed: unbounded buffer
+    dict(accepted=100),                    # accepted + shed != submitted
+    dict(pending_ticks=65),                # pending grew past the bound
+])
+def test_serve_gate_backpressure_invariants(tmp_path, bp_over, capsys):
+    bs = _load("bench_serve")
+    base = _serve_baseline(tmp_path)
+    section = _serve_section()
+    section["backpressure"] = {**section["backpressure"], **bp_over}
+    assert bs.check_gate(section, base, "quick") == 1
+    assert "backpressure" in capsys.readouterr().out

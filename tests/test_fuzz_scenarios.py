@@ -1,0 +1,119 @@
+"""Scenario-fuzzing harness for the metropolis-scale sweep planner.
+
+Random :class:`~repro.scenarios.spec.ScenarioSpec` missions —
+heterogeneous edge tiers, roaming drones, arrival bursts, cloud
+outages, chaos-engine faults (edge crashes, brownouts, DDoS floods),
+stochastic execution durations, tight cloud concurrency — are pushed
+through the three sweep lowerings and held to *bitwise* agreement:
+
+* the shape-bucketed multi-program planner (``planner="bucketed"``,
+  carry buffers donated),
+* the padded single-program reference (``planner="padded"``), and
+* the plain per-scenario :func:`run_scenario_fleet` loop,
+
+and on every fuzzed mission the flight-recorder conservation ledger
+must stay exact (arrived == settled + in-flight at every tick).
+
+Exactness is non-negotiable: the planner only re-groups and re-stacks
+runs, it never re-orders arithmetic inside a lane, so the comparisons
+are ``==`` on the summary dicts — not ``allclose``.
+
+The spec lattice is deliberately small (fixed horizon, 1–2 edges, the
+two Table-1 model sets): repeated examples then reuse jit programs
+across the run instead of paying XLA a fresh trace per example, which
+keeps the harness inside a CI-friendly wall-clock budget.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without the [test] extra: vendored shim
+    from _minihyp import given, settings, strategies as st  # noqa: F401
+
+from repro.core.task import ACTIVE, PASSIVE
+from repro.obs.metrics import check_conservation
+from repro.obs.trace import TraceSpec
+from repro.scenarios import (Brownout, Burst, CloudOutage, DroneSpec,
+                             DurationJitter, EdgeCrash, EdgeSite, FaultSpec,
+                             Flood, ScenarioSpec, fleet_summary,
+                             run_registry_sweep, run_scenario_fleet)
+
+pytestmark = pytest.mark.fuzz
+
+# fixed horizon: every example lands in one of a handful of shape
+# buckets, so the bucketed/padded/loop programs compile once and are
+# reused across examples
+_DURATION_MS = 3_000.0
+_SPACING_M = 2_400.0   # > default coverage radius: disjoint edge zones
+
+
+@st.composite
+def scenario_specs(draw):
+    n_edges = draw(st.integers(1, 2))
+    edges = tuple(
+        EdgeSite(x=_SPACING_M * e,
+                 speed_factor=draw(st.sampled_from((0.7, 1.0, 1.6))))
+        for e in range(n_edges))
+    # one hovering drone per edge keeps every site busy; an optional
+    # roamer ping-pongs across the zone boundary (handover churn)
+    drones = [DroneSpec(waypoints=((_SPACING_M * e, 0.0),))
+              for e in range(n_edges)]
+    if draw(st.booleans()):
+        drones.append(DroneSpec(
+            waypoints=((0.0, 0.0), (_SPACING_M * max(n_edges - 1, 1), 0.0)),
+            speed_mps=300.0))
+    bursts = ((Burst(500.0, 1_500.0,
+                     rate_mult=draw(st.sampled_from((0.5, 3.0)))),)
+              if draw(st.booleans()) else ())
+    outages = ((CloudOutage(1_000.0, 2_000.0),)
+               if draw(st.booleans()) else ())
+    jitter = (DurationJitter(seed=draw(st.integers(0, 3)))
+              if draw(st.booleans()) else None)
+    # chaos-engine faults: same signal shapes (edge_up/link_up lanes are
+    # always present), so fuzzing them costs zero extra jit traces
+    faults = None
+    if draw(st.booleans()):
+        faults = FaultSpec(
+            crashes=((EdgeCrash(edge=draw(st.integers(0, n_edges - 1)),
+                                start_ms=800.0, end_ms=1_800.0),)
+                     if draw(st.booleans()) else ()),
+            brownouts=((Brownout(1_200.0, 2_400.0, theta_ms=250.0,
+                                 ramp_ms=400.0),)
+                       if draw(st.booleans()) else ()),
+            floods=((Flood(600.0, 1_400.0,
+                           rate_hz=draw(st.sampled_from((5.0, 20.0))),
+                           seed=draw(st.integers(0, 3))),)
+                    if draw(st.booleans()) else ()))
+    return ScenarioSpec(
+        name="fuzz", duration_ms=_DURATION_MS,
+        model_names=draw(st.sampled_from((PASSIVE, ACTIVE))),
+        edges=edges, drones=tuple(drones), bursts=bursts,
+        outages=outages, jitter=jitter, faults=faults,
+        cloud_concurrency=draw(st.sampled_from((2, 16))),
+        seed=draw(st.integers(0, 3)))
+
+
+def _row(d):
+    """A sweep row minus its (scenario, policy, seed) tag."""
+    return {k: v for k, v in d.items()
+            if k not in ("scenario", "policy", "seed")}
+
+
+@settings(max_examples=4, deadline=None)
+@given(spec=scenario_specs(),
+       policy=st.sampled_from(("DEMS-A", "GEMS-COOP")))
+def test_fuzz_bucketed_padded_loop_bitwise(spec, policy):
+    bucketed = run_registry_sweep([spec], (policy,), (spec.seed,),
+                                  planner="bucketed", donate=True)
+    padded = run_registry_sweep([spec], (policy,), (spec.seed,),
+                                planner="padded")
+    assert len(bucketed) == len(padded) == 1
+    assert bucketed[0]["scenario"] == padded[0]["scenario"] == "fuzz"
+
+    # the per-scenario loop, flight recorder on: its summary closes the
+    # three-way parity triangle and its counters feed the ledger
+    res = run_scenario_fleet(spec, policy, trace=TraceSpec(counters=True))
+    loop = fleet_summary(res.final)
+
+    assert _row(bucketed[0]) == _row(padded[0]) == loop
+    check_conservation(res.counters)
